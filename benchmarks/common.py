@@ -1,0 +1,30 @@
+"""Shared benchmark utilities.  Import AFTER benchmarks.run has set the
+device-count flag (or standalone: sets 8 itself)."""
+from __future__ import annotations
+
+import os
+
+if "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                               + os.environ.get("XLA_FLAGS", ""))
+
+import time
+
+import jax
+import numpy as np
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time per call in microseconds (blocks on ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")

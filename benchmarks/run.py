@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  comm_model     paper Table III (collective comm-model fit)
+  fig5_comm      paper Fig. 5a  (TP vs PP communication / epoch)
+  fig5_exec      paper Fig. 5b/c (TP vs PP execution time / epoch)
+  fig6_large     paper Fig. 6   (large-n projection + memory footprints)
+  table1_energy  paper Table I / Fig. 7 (fixed-loss energy comparison)
+  roofline       §Roofline reader over experiments/dryrun/*.json
+"""
+import os
+
+# benches need a small local mesh (NOT the dry-run's 512)
+if "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                               + os.environ.get("XLA_FLAGS", ""))
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    from benchmarks import (comm_model, fig5_comm, fig5_exec, fig6_large,
+                            roofline, table1_energy)
+    suites = {
+        "comm_model": comm_model.run,
+        "fig5_comm": fig5_comm.run,
+        "fig5_exec": fig5_exec.run,
+        "fig6_large": fig6_large.run,
+        "table1_energy": table1_energy.run,
+        "roofline": roofline.run,
+    }
+    for name, fn in suites.items():
+        if only and name != only:
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            print(f"{name}_FAILED,0.0,")
+        print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Paper reproduction driver (§VI-B): train TP and PP FFNs to the SAME
+fixed loss, record iterations/model sizes, and evaluate the energy model
+E = nu * p * (A*alpha + B*beta) at the paper's scale.
+
+  PYTHONPATH=src python examples/train_ffn_phantom.py [--n 1024] [--k 8]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, PhantomConfig
+from repro.core.energy import (FRONTIER_A_W, FRONTIER_B_W, TPU_PEAK_FLOPS,
+                               energy_to_loss, pp_costs, tp_costs)
+from repro.core.ffn import ffn_model_params, init_ffn, make_ffn_train_step
+from repro.data.synthetic import TeacherDataset
+from repro.launch.mesh import make_local_mesh
+from repro.optim import AdamW
+
+
+def train_to(cfg, mesh, ds, batch, target, max_iters):
+    opt = AdamW(3e-3, weight_decay=0.0)
+    step, decls, _ = make_ffn_train_step(cfg, mesh, opt, batch)
+    params, opt_state = init_ffn(cfg, mesh, opt)
+    for s in range(max_iters):
+        x, y = ds(s)
+        params, opt_state, loss = step(params, opt_state, jnp.int32(s),
+                                       x, y)
+        if float(loss) <= target:
+            return s + 1, float(loss)
+    return max_iters, float(loss)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1024)
+    ap.add_argument("--L", type=int, default=2)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--target", type=float, default=0.175)
+    ap.add_argument("--max-iters", type=int, default=500)
+    args = ap.parse_args()
+
+    mesh = make_local_mesh(1, 8)
+    p = 8
+    ds = TeacherDataset(args.n, args.batch)
+
+    base = dict(family="ffn", num_layers=args.L, d_model=args.n,
+                ffn_width=args.n, ffn_depth=args.L, mlp="relu")
+    tp_cfg = ModelConfig(name="tp", ffn_impl="dense",
+                         phantom=PhantomConfig(k=args.k), **base)
+    pp_cfg = ModelConfig(name="pp", ffn_impl="phantom",
+                         phantom=PhantomConfig(k=args.k), **base)
+
+    nu_tp, l_tp = train_to(tp_cfg, mesh, ds, args.batch, args.target,
+                           args.max_iters)
+    nu_pp, l_pp = train_to(pp_cfg, mesh, ds, args.batch, args.target,
+                           args.max_iters)
+
+    print(f"\n== fixed-loss comparison (target {args.target}) ==")
+    print(f"TP: {ffn_model_params(tp_cfg, p):>9,} params, "
+          f"{nu_tp} iters (final {l_tp:.4f})")
+    print(f"PP: {ffn_model_params(pp_cfg, p):>9,} params, "
+          f"{nu_pp} iters (final {l_pp:.4f})")
+
+    a_t, b_t = tp_costs(args.n, p, args.L, args.batch, TPU_PEAK_FLOPS)
+    a_p, b_p = pp_costs(args.n, p, args.L, args.k, args.batch,
+                        TPU_PEAK_FLOPS)
+    E_tp = energy_to_loss(a_t, b_t, p, nu_tp, FRONTIER_A_W, FRONTIER_B_W)
+    E_pp = energy_to_loss(a_p, b_p, p, nu_pp, FRONTIER_A_W, FRONTIER_B_W)
+    print(f"\n== energy model (paper Eqn. 1/2, A={FRONTIER_A_W}W "
+          f"B={FRONTIER_B_W}W) ==")
+    print(f"E_TP = {E_tp:.2f} J   E_PP = {E_pp:.2f} J   "
+          f"saving = {(1 - E_pp / E_tp) * 100:.0f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Build the §Dry-run and §Roofline markdown tables in EXPERIMENTS.md
+from experiments/dryrun/*.json."""
+import glob
+import json
+import os
+import sys
+
+DIR = os.path.join(os.path.dirname(__file__), "dryrun")
+
+
+def load():
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DIR, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(recs, mesh_tag):
+    lines = [
+        "| arch | shape | impl | method | device bytes (arg/temp GiB) | "
+        "GFLOPs/dev | HBM GB/dev | collective wire MB/dev "
+        "(AG/AR/RS/A2A/CP counts) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("skipped"):
+            if mesh_tag == "sp" and r.get("impl") != "phantom":
+                lines.append(f"| {r['arch']} | {r['shape']} | "
+                             f"{r.get('impl','-')} | - | SKIP: "
+                             f"{r['skipped']} | - | - | - |")
+            continue
+        tag = "mp" if r["mesh"].get("pod") else "sp"
+        if tag != mesh_tag:
+            continue
+        m = r["memory"]
+        c = r["collectives"]
+        method = ("exact" if r.get("cost_method") == "scan-extrapolated"
+                  else "raw*")
+        counts = "/".join(str(c.get(k, {}).get("count", 0)) for k in
+                          ("all-gather", "all-reduce", "reduce-scatter",
+                           "all-to-all", "collective-permute"))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['impl']} | {method} | "
+            f"{fmt_bytes(m['argument_bytes'])}/{fmt_bytes(m['temp_bytes'])}"
+            f" | {r['flops_per_device']/1e9:.1f} | "
+            f"{r['hbm_bytes_per_device']/1e9:.1f} | "
+            f"{r['collective_wire_bytes_per_device']/1e6:.1f} ({counts}) |")
+    lines.append("")
+    lines.append("`exact` = scan-extrapolated totals; `raw*` = "
+                 "cost_analysis of the scanned compile (counts each scan "
+                 "body once — compare only against other raw rows of the "
+                 "same depth).  Memory columns are always from the real "
+                 "full compile.")
+    return "\n".join(lines)
+
+
+def roofline_table(recs):
+    lines = [
+        "| arch | shape | impl | method | compute_s | memory_s | "
+        "collective_s | dominant | step_s | frac | useful/HLO |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("skipped"):
+            continue
+        if r["mesh"].get("pod"):
+            continue                      # roofline table is single-pod
+        rf = r["roofline"]
+        method = ("exact" if r.get("cost_method") == "scan-extrapolated"
+                  else "raw*")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['impl']} | {method} | "
+            f"{rf['compute_s']:.4g} | {rf['memory_s']:.4g} | "
+            f"{rf['collective_s']:.4g} | {rf['dominant']} | "
+            f"{rf['step_s']:.4g} | {rf['fraction']:.3f} | "
+            f"{r['useful_flops_ratio']:.2f} |")
+    lines.append("")
+    lines.append("`exact` = scan-extrapolated totals (cost_fix); `raw*` = "
+                 "full-compile cost_analysis, which counts each scan body "
+                 "once — per-layer-scale numbers, comparable within a row "
+                 "but NOT across depths (see §Roofline methodology note).")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    recs = load()
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### single-pod (16x16)\n")
+        print(dryrun_table(recs, "sp"))
+        print("\n### multi-pod (2x16x16 = 512 chips)\n")
+        print(dryrun_table(recs, "mp"))
+    if which in ("all", "roofline"):
+        print("\n### roofline\n")
+        print(roofline_table(recs))

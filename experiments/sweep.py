@@ -1,0 +1,8 @@
+import sys
+sys.path.insert(0, "/root/repo/src")
+from repro.launch.dryrun import run_all
+run_all("/root/repo/experiments/dryrun", impls=("dense", "phantom"),
+        multi_pods=(False,), timeout=2400)
+run_all("/root/repo/experiments/dryrun", impls=("phantom",),
+        multi_pods=(True,), timeout=2400)
+print("SWEEP DONE")

@@ -1,0 +1,69 @@
+"""Regenerate the data tables inside EXPERIMENTS.md from
+experiments/dryrun/*.json and experiments/perf/*.json.
+
+Everything between the AUTOGEN markers is rewritten; prose outside them is
+preserved.
+"""
+import glob
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+from make_report import dryrun_table, load, roofline_table  # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def perf_rows():
+    out = []
+    for path in sorted(glob.glob(os.path.join(os.path.dirname(__file__),
+                                              "perf", "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        rec["_tag"] = os.path.basename(path)[:-5]
+        out.append(rec)
+    return out
+
+
+def perf_table(recs, prefix):
+    lines = ["| step | compute_s | memory_s | collective_s | step_s | "
+             "frac | Δstep vs prev |", "|---|---|---|---|---|---|---|"]
+    prev = None
+    for rec in recs:
+        if not rec["_tag"].startswith(prefix):
+            continue
+        r = rec["roofline"]
+        delta = ""
+        if prev:
+            delta = f"{(r['step_s']/prev - 1)*100:+.1f}%"
+        prev = r["step_s"]
+        lines.append(f"| {rec['_tag']} | {r['compute_s']:.4g} | "
+                     f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | "
+                     f"{r['step_s']:.4g} | {r['fraction']:.3f} | {delta} |")
+    return "\n".join(lines)
+
+
+def replace_block(text, marker, content):
+    pat = re.compile(rf"(<!-- AUTOGEN:{marker} -->).*?"
+                     rf"(<!-- /AUTOGEN:{marker} -->)", re.S)
+    return pat.sub(lambda m: m.group(1) + "\n" + content + "\n"
+                   + m.group(2), text)
+
+
+def main():
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(path) as f:
+        text = f.read()
+    recs = load()
+    text = replace_block(text, "dryrun_sp", dryrun_table(recs, "sp"))
+    text = replace_block(text, "dryrun_mp", dryrun_table(recs, "mp"))
+    text = replace_block(text, "roofline", roofline_table(recs))
+    with open(path, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md tables regenerated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: phantom parallelism (Seal et al., 2025) as a production-grade
+multi-pod JAX training/inference framework."""

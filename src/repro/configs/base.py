@@ -1,0 +1,247 @@
+"""Config system for the phantom-parallelism framework.
+
+Plain dataclasses (no external deps). A ``ModelConfig`` fully describes one
+architecture; ``ShapeConfig`` describes one (seq_len, global_batch, kind)
+cell; ``RunConfig`` binds the two to a mesh and training hyper-params.
+
+Every assigned architecture lives in ``src/repro/configs/<id>.py`` and
+exposes ``config()`` (the exact published geometry) and ``smoke_config()``
+(a reduced same-family geometry for CPU tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+# ---------------------------------------------------------------------------
+# sub-configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    # apply MoE on layers where (layer_idx % every_n) == offset
+    every_n: int = 1
+    offset: int = 0
+    # "expert": shard the expert dim over the model axis (needs E % tp == 0)
+    # "tensor": shard each expert's d_ff over the model axis
+    partition: str = "expert"
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128          # SSD chunk length
+    ngroups: int = 1
+
+
+@dataclass(frozen=True)
+class PhantomConfig:
+    """The paper's technique — knobs for where/how it is applied."""
+    k: int = 64                     # ghost neurons per phantom layer
+    apply_ffn: bool = True          # factorize the MLP projections
+    apply_attn_proj: bool = False   # factorize QKV/O projections (beyond-paper)
+    include_self_term: bool = False # False = faithful (self block excluded)
+    variant: str = "fused"          # "faithful" | "fused" | "ring"
+    # faithful: per-source decompress GEMMs + custom_vjp AllGather (paper Alg. 1)
+    # fused:    single concatenated decompress GEMM (TPU/MXU adaptation)
+    # ring:     ppermute ring with overlapped partial decompress GEMMs
+
+
+# ---------------------------------------------------------------------------
+# model config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | encdec | vlm | ffn
+    num_layers: int
+    d_model: int
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    head_dim: int = 0               # 0 -> d_model // num_heads
+
+    # encoder/decoder (seamless)
+    encoder_layers: int = 0
+
+    # norm / activation / misc
+    norm: str = "rmsnorm"           # rmsnorm | layernorm
+    mlp: str = "swiglu"             # swiglu | gelu | relu
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+
+    # rope
+    rope: str = "full"              # full | partial | mrope | none
+    rope_fraction: float = 1.0      # chatglm3 "2d rope" == rotate half the dims
+    rope_theta: float = 10000.0
+
+    # hybrid interleave: one attention layer per `attn_period` layers
+    # (0 = every layer is attention, -1 = attention-free)
+    attn_period: int = 0
+
+    # frontends (stubbed per spec: input_specs() yields embeddings)
+    frontend: str = "none"          # none | audio | vision
+
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+
+    # --- parallelism / technique selection -------------------------------
+    ffn_impl: str = "dense"         # dense (Megatron TP baseline) | phantom
+    phantom: PhantomConfig = field(default_factory=PhantomConfig)
+    attn_shard: str = "auto"        # auto | head | ring
+    # decode-time: model axis factors into (gcd(kv,p) kv-groups x seq chunks)
+
+    # --- numerics / memory -----------------------------------------------
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: str = "full"             # full | none  (checkpoint each block)
+    optimizer: str = "adamw"        # adamw | adafactor | sgd
+    fsdp: bool = False              # additionally shard params over data axis
+    loss_chunk: int = 2048          # seq chunk for sharded cross-entropy
+    microbatches: int = 1           # gradient-accumulation microbatching
+    attn_bf16_scores: bool = False  # bf16 attention score blocks (§Perf)
+    kv_cache_quant: bool = False    # int8 KV cache w/ per-head scales
+    attn_kv_chunk: int = 0          # 0 = default blockwise chunking;
+                                    # -1 = unrolled (dry-run cost analysis:
+                                    # XLA counts scan bodies once)
+    scan_layers: bool = True        # False = python-loop layer stack
+                                    # (dry-run cost analysis only)
+    fsdp_gather_quant: bool = False  # int8-quantize FSDP weight gathers
+                                     # (serving: halves gather wire bytes)
+    attn_ring_gather_kv: bool = False  # ring mode: gather KV once instead
+                                       # of p ppermute hops (same wire
+                                       # bytes, 1 accumulator pass instead
+                                       # of p — §Perf cell C)
+
+    # paper-FFN-specific (family == "ffn")
+    ffn_width: int = 0
+    ffn_depth: int = 0
+
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.num_heads:
+            return self.d_model // self.num_heads
+        return 0
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # rough parameter counts, used for MODEL_FLOPS and memory napkin math ---
+    def param_count(self) -> int:
+        from repro.models.model import count_params  # lazy, avoids cycle
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.model import count_params
+        return count_params(self, active_only=True)
+
+
+# ---------------------------------------------------------------------------
+# shapes
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k":    ShapeConfig("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768,   32, "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeConfig("long_500k",  524_288,    1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    grad_clip: float = 1.0
+    microbatches: int = 1            # gradient accumulation
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+ARCH_IDS = [
+    "granite-moe-3b-a800m",
+    "olmoe-1b-7b",
+    "seamless-m4t-large-v2",
+    "chatglm3-6b",
+    "qwen2.5-14b",
+    "stablelm-3b",
+    "phi3-mini-3.8b",
+    "mamba2-370m",
+    "qwen2-vl-72b",
+    "jamba-1.5-large-398b",
+]
+
+_MODULES = {
+    "granite-moe-3b-a800m": "granite_moe_3b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "seamless-m4t-large-v2": "seamless_m4t_large",
+    "chatglm3-6b": "chatglm3_6b",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "stablelm-3b": "stablelm_3b",
+    "phi3-mini-3.8b": "phi3_mini",
+    "mamba2-370m": "mamba2_370m",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "jamba-1.5-large-398b": "jamba_1_5_large",
+    # the paper's own FFN models
+    "paper-ffn-4k": "paper_ffn",
+    "paper-ffn-16k": "paper_ffn",
+    "paper-ffn-64k": "paper_ffn",
+    "paper-ffn-131k": "paper_ffn",
+    "paper-ffn-262k": "paper_ffn",
+}
+
+
+def get_config(arch: str, smoke: bool = False, **overrides) -> ModelConfig:
+    """Load an architecture config by id (``--arch`` flag)."""
+    import importlib
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    if arch.startswith("paper-ffn"):
+        cfg = (mod.smoke_config if smoke else mod.config)(arch)
+    else:
+        cfg = (mod.smoke_config if smoke else mod.config)()
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return cfg
+
+
+def applicable_shapes(cfg: ModelConfig) -> list[str]:
+    """Which of the 4 assigned shapes apply to this architecture.
+
+    ``long_500k`` needs sub-quadratic attention: only SSM/hybrid run it
+    (skip recorded for full-attention archs, per DESIGN.md).
+    """
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.family in ("ssm", "hybrid"):
+        names.append("long_500k")
+    return names

@@ -1,0 +1,51 @@
+"""granite-moe-3b-a800m  [moe]
+
+32L d_model=1536 24H (GQA kv=8) d_ff=512/expert vocab=49155, MoE 40 experts
+top-8.  [hf:ibm-granite family]
+
+Notes (DESIGN.md §5): 40 % 16 != 0 -> experts tensor-partitioned (each
+expert's d_ff sharded over the model axis).  24 heads % 16 != 0 -> ring
+(sequence-sharded) attention.
+"""
+from repro.configs.base import ModelConfig, MoEConfig, PhantomConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-3b-a800m",
+        family="moe",
+        num_layers=32,
+        d_model=1536,
+        num_heads=24,
+        num_kv_heads=8,
+        d_ff=512,
+        vocab_size=49155,
+        moe=MoEConfig(num_experts=40, top_k=8, d_ff_expert=512,
+                      partition="tensor"),
+        attn_shard="ring",
+        # Phantom is INAPPLICABLE here (DESIGN.md §Arch-applicability):
+        # ring attention keeps activations sequence-sharded (no cross-rank
+        # feature blocks to factorize) and the experts are tiny (d_ff=512)
+        # tensor-partitioned FFNs.  The arch runs without the technique.
+        phantom=PhantomConfig(k=8, apply_ffn=False, apply_attn_proj=False),
+        rope="full",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-smoke",
+        family="moe",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=32,
+        vocab_size=256,
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=32,
+                      partition="tensor"),
+        attn_shard="ring",
+        phantom=PhantomConfig(k=4, apply_ffn=False, apply_attn_proj=False),
+        rope="full",
+        loss_chunk=64,
+    )

@@ -1,0 +1,54 @@
+"""jamba-1.5-large-398b  [hybrid]
+
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536, MoE 16 experts
+top-2 — Mamba+attention 1:7 interleave.  [arXiv:2403.19887]
+
+72 layers = 9 superblocks x (1 attn + 7 mamba); MoE on every other layer
+(even offsets).  Adafactor (Adam fp32 states would not fit 16 GB/chip at
+398B/256 chips — DESIGN.md §5).  FSDP over data axis.  Runs ``long_500k``.
+"""
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig, PhantomConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-1.5-large-398b",
+        family="hybrid",
+        num_layers=72,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        d_ff=24576,
+        vocab_size=65536,
+        attn_period=8,            # 1 attention layer per 8 (1:7 interleave)
+        moe=MoEConfig(num_experts=16, top_k=2, d_ff_expert=24576,
+                      every_n=2, offset=1, partition="expert"),
+        ssm=SSMConfig(d_state=128, head_dim=64, expand=2, conv_width=4),
+        attn_shard="head",
+        phantom=PhantomConfig(k=32, apply_ffn=True),
+        fsdp=True,
+        optimizer="adafactor",
+        param_dtype="bfloat16",   # 398B: fp32 params would not fit
+        microbatches=8,           # activation footprint /8 at train_4k
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-smoke",
+        family="hybrid",
+        num_layers=8,             # one superblock
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=128,
+        vocab_size=256,
+        attn_period=8,
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=128,
+                      every_n=2, offset=1, partition="expert"),
+        ssm=SSMConfig(d_state=16, head_dim=16, expand=2, conv_width=4,
+                      chunk=32),
+        attn_shard="head",
+        phantom=PhantomConfig(k=4, apply_ffn=True),
+        loss_chunk=64,
+    )

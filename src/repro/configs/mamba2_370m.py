@@ -1,0 +1,44 @@
+"""mamba2-370m  [ssm]
+
+48L d_model=1024 (attention-free) vocab=50280, ssm_state=128 — SSD
+(state-space duality).  [arXiv:2405.21060; unverified]
+
+d_inner = 2*d_model = 2048, head_dim = 64 -> 32 SSD heads.
+Phantom applicability: in/out projections only (DESIGN.md §Arch-applicability);
+the SSD scan itself has no cross-rank weight block to factorize.
+Runs ``long_500k`` (sub-quadratic by construction).
+"""
+from repro.configs.base import ModelConfig, SSMConfig, PhantomConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-370m",
+        family="ssm",
+        num_layers=48,
+        d_model=1024,
+        num_heads=0,
+        num_kv_heads=0,
+        d_ff=0,
+        vocab_size=50280,
+        attn_period=-1,
+        ssm=SSMConfig(d_state=128, head_dim=64, expand=2, conv_width=4),
+        phantom=PhantomConfig(k=8, apply_ffn=False, apply_attn_proj=True),
+        rope="none",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-smoke",
+        family="ssm",
+        num_layers=2,
+        d_model=64,
+        vocab_size=256,
+        attn_period=-1,
+        ssm=SSMConfig(d_state=16, head_dim=16, expand=2, conv_width=4,
+                      chunk=32),
+        phantom=PhantomConfig(k=4, apply_ffn=False, apply_attn_proj=True),
+        rope="none",
+        loss_chunk=64,
+    )

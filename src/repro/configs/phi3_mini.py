@@ -1,0 +1,37 @@
+"""phi3-mini-3.8b  [dense]
+
+32L d_model=3072 32H (kv=32 -> MHA) d_ff=8192 vocab=32064 — RoPE, SwiGLU,
+RMSNorm.  [arXiv:2404.14219; unverified]
+"""
+from repro.configs.base import ModelConfig, PhantomConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="phi3-mini-3.8b",
+        family="dense",
+        num_layers=32,
+        d_model=3072,
+        num_heads=32,
+        num_kv_heads=32,
+        d_ff=8192,
+        vocab_size=32064,
+        attn_shard="head",
+        phantom=PhantomConfig(k=12, apply_ffn=True),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="phi3-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=128,
+        vocab_size=256,
+        attn_shard="head",
+        phantom=PhantomConfig(k=4, apply_ffn=True),
+        loss_chunk=64,
+    )

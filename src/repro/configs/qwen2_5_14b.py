@@ -1,0 +1,42 @@
+"""qwen2.5-14b  [dense]
+
+48L d_model=5120 40H (GQA kv=8) d_ff=13824 vocab=152064 — GQA, QKV bias.
+[hf:Qwen/Qwen2.5 family]
+
+40 heads % 16 != 0 -> ring (sequence-sharded) attention (DESIGN.md §5).
+"""
+from repro.configs.base import ModelConfig, PhantomConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2.5-14b",
+        family="dense",
+        num_layers=48,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=8,
+        d_ff=13824,
+        vocab_size=152064,
+        attn_shard="ring",
+        qkv_bias=True,
+        phantom=PhantomConfig(k=16, apply_ffn=True),
+        optimizer="adamw",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2.5-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=128,
+        vocab_size=256,
+        attn_shard="ring",
+        qkv_bias=True,
+        phantom=PhantomConfig(k=4, apply_ffn=True),
+        loss_chunk=64,
+    )

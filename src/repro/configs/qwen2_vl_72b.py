@@ -1,0 +1,51 @@
+"""qwen2-vl-72b  [vlm]
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064 — M-RoPE, dynamic
+resolution.  [arXiv:2409.12191]
+
+Backbone only (per spec): vision frontend stubbed; ``input_specs()`` yields
+patch embeddings merged at fixed positions plus 3-axis M-RoPE position ids.
+FSDP over the data axis on top of TP (72B does not fit TP-only).
+"""
+from repro.configs.base import ModelConfig, PhantomConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-72b",
+        family="vlm",
+        num_layers=80,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        d_ff=29568,
+        vocab_size=152064,
+        attn_shard="head",
+        rope="mrope",
+        qkv_bias=True,
+        frontend="vision",
+        phantom=PhantomConfig(k=32, apply_ffn=True),
+        fsdp=True,
+        optimizer="adafactor",
+        param_dtype="bfloat16",   # 72B: fp32 params would not fit
+        microbatches=4,           # activation footprint /4 at train_4k
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-smoke",
+        family="vlm",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=128,
+        vocab_size=256,
+        attn_shard="head",
+        rope="mrope",
+        qkv_bias=True,
+        frontend="vision",
+        phantom=PhantomConfig(k=4, apply_ffn=True),
+        loss_chunk=64,
+    )

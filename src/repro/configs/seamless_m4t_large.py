@@ -1,0 +1,52 @@
+"""seamless-m4t-large-v2  [audio]
+
+24L d_model=1024 16H (kv=16) d_ff=8192 vocab=256206 — encoder-decoder,
+multimodal.  [arXiv:2308.11596]
+
+Backbone only (per spec): the audio frontend is a stub — ``input_specs()``
+yields precomputed frame embeddings ``[B, S, d]``.  "24L" is read as 24
+encoder + 24 decoder layers (DESIGN.md §5).
+"""
+from repro.configs.base import ModelConfig, PhantomConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-large-v2",
+        family="encdec",
+        num_layers=24,            # decoder layers
+        encoder_layers=24,
+        d_model=1024,
+        num_heads=16,
+        num_kv_heads=16,
+        d_ff=8192,
+        vocab_size=256206,
+        frontend="audio",
+        attn_shard="head",
+        phantom=PhantomConfig(k=8, apply_ffn=True),
+        norm="layernorm",
+        mlp="gelu",
+        rope="none",              # seamless uses learned/relative positions;
+                                  # backbone stub uses none + frame embeddings
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-smoke",
+        family="encdec",
+        num_layers=2,
+        encoder_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=128,
+        vocab_size=256,
+        frontend="audio",
+        attn_shard="head",
+        phantom=PhantomConfig(k=4, apply_ffn=True),
+        norm="layernorm",
+        mlp="gelu",
+        rope="none",
+        loss_chunk=64,
+    )

@@ -1,0 +1,5 @@
+from repro.core.phantom import (  # noqa: F401
+    phantom_apply, phantom_decls, phantom_dense_equivalent,
+    phantom_param_count,
+)
+from repro.core.autograd import all_gather_ghosts, psum_scatter_tiled  # noqa: F401

@@ -1,0 +1,68 @@
+"""Custom-VJP collectives — the paper's Algorithm 1 ("Custom AllGather
+Autograd Function") transcribed to JAX.
+
+The paper extends ``torch.autograd.Function`` so that the forward pass
+all-gathers the k-wide phantom (ghost) activations and the backward pass
+reduce-scatters the ghost gradients back to their originating ranks.  In
+JAX the VJP of ``lax.all_gather`` *is* ``lax.psum_scatter``, so the native
+path gets this for free; we nevertheless provide the explicit custom_vjp
+version (a) to mirror the paper's implementation, and (b) as the hook where
+gradient compression can be spliced into the collective (see
+``optim/compress.py``).
+
+``tests/test_phantom.py::test_custom_allgather_matches_native`` checks the
+two paths produce identical gradients.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def all_gather_ghosts(g, axis_name: str):
+    """Paper Algorithm 1, FORWARD: gather k-wide ghost activations.
+
+    g: local ghost activations ``[..., k]`` -> ``[p, ..., k]`` stacked by
+    source rank.
+    """
+    return lax.all_gather(g, axis_name)
+
+
+def _ag_fwd(g, axis_name):
+    return lax.all_gather(g, axis_name), None
+
+
+def _ag_bwd(axis_name, _res, grad_out):
+    # Paper Algorithm 1, BACKWARD: Reduce-Scatter of the ghost gradients
+    # (sum the (p-1) remote contributions for each source rank and deliver
+    # them to it).
+    grad_in = lax.psum_scatter(grad_out, axis_name, scatter_dimension=0,
+                               tiled=False)
+    return (grad_in,)
+
+
+all_gather_ghosts.defvjp(_ag_fwd, _ag_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def psum_scatter_tiled(x, axis_name: str, scatter_dim: int):
+    """Reduce-scatter with all-gather backward (transpose pair of above)."""
+    return lax.psum_scatter(x, axis_name, scatter_dimension=scatter_dim,
+                            tiled=True)
+
+
+def _rs_fwd(x, axis_name, scatter_dim):
+    return lax.psum_scatter(x, axis_name, scatter_dimension=scatter_dim,
+                            tiled=True), None
+
+
+def _rs_bwd(axis_name, scatter_dim, _res, grad_out):
+    return (lax.all_gather(grad_out, axis_name, axis=scatter_dim,
+                           tiled=True),)
+
+
+psum_scatter_tiled.defvjp(_rs_fwd, _rs_bwd)

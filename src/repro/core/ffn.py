@@ -1,0 +1,153 @@
+"""The paper's experimental subject: width-n, depth-L fully-connected
+networks trained with MSE on the Gaussian-teacher dataset (§VI), in both
+parallelization styles:
+
+  * TP  — conventional tensor parallelism (baseline, paper Fig. 1a)
+  * PP  — phantom parallelism (paper Fig. 1b/3/4)
+
+Both run as a single ``shard_map`` over the whole mesh with explicit
+collectives, so measured/lowered communication is exactly the paper's
+Table II schedule:
+
+  TP per layer:  All-Gather(n/p * batch) fwd, Reduce-Scatter bwd
+  PP per layer:  All-Gather(k * batch)   fwd, Reduce-Scatter bwd
+
+This module is used by the paper-reproduction benchmarks (Fig. 5/6/7,
+Table I), the examples, and the equivalence tests.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import tp as tpmod
+from repro.core.phantom import phantom_apply, phantom_decls, phantom_param_count
+from repro.parallel.axes import MeshAxes, resolve_spec
+from repro.parallel.params import ParamDecl, abstract, materialize, specs, stack
+
+
+# ---------------------------------------------------------------------------
+# declarations
+# ---------------------------------------------------------------------------
+
+def ffn_decls(cfg: ModelConfig, axes: MeshAxes):
+    n, L = cfg.ffn_width, cfg.num_layers
+    if cfg.ffn_impl == "phantom":
+        layer = phantom_decls(n, n, cfg.phantom.k, axes.tp)
+    else:
+        layer = {
+            "w": ParamDecl((n, n), P(None, "tp")),
+            "b": ParamDecl((n,), P("tp"), init="zeros"),
+        }
+    return {"layers": stack(layer, L)}
+
+
+def ffn_model_params(cfg: ModelConfig, p: int) -> int:
+    """Model size (paper Table I): TP size is p-independent; PP shrinks."""
+    n, L = cfg.ffn_width, cfg.num_layers
+    if cfg.ffn_impl == "phantom":
+        return L * phantom_param_count(n, n, cfg.phantom.k, p)
+    return L * (n * n + n)
+
+
+# ---------------------------------------------------------------------------
+# forward (inside shard_map; x is the local [B_loc, n/p] feature shard)
+# ---------------------------------------------------------------------------
+
+def _act(name: str):
+    return {"relu": jax.nn.relu, "gelu": jax.nn.gelu}.get(name, jax.nn.relu)
+
+
+def ffn_apply(cfg: ModelConfig, axes: MeshAxes, params, x):
+    act = _act(cfg.mlp)
+
+    if cfg.ffn_impl == "phantom":
+        def body(carry, layer):
+            z = phantom_apply(cfg.phantom, layer, carry, axes)
+            return act(z), None
+    else:
+        def body(carry, layer):
+            x_full = tpmod.gather_features(carry, axes)       # AG(n/p*B)
+            z = jnp.einsum("bi,io->bo", x_full, layer["w"])
+            z = z + layer["b"]
+            return act(z), None
+
+    x, _ = lax.scan(body, x, params["layers"])
+    return x
+
+
+# ---------------------------------------------------------------------------
+# train step (whole step inside one shard_map)
+# ---------------------------------------------------------------------------
+
+def make_ffn_train_step(cfg: ModelConfig, mesh, optimizer,
+                        global_batch: int):
+    """Returns (step_fn, decls, opt_decls).
+
+    step_fn(params, opt_state, step, x, y) -> (params, opt_state, loss)
+    jit-compiled; params/opt sharded per decls; x,y sharded (dp, tp).
+    """
+    axes = MeshAxes.from_mesh(mesh)
+    decls = ffn_decls(cfg, axes)
+    opt_decls = optimizer.state_decls(decls)
+    n = cfg.ffn_width
+
+    def step_fn(params, opt_state, step, x, y):
+        def loss_fn(p):
+            out = ffn_apply(cfg, axes, p, x)
+            # local share only — outputs are fully sharded (batch over dp,
+            # features over tp) so the local sse IS this device's unique
+            # contribution; cross-device sums happen via grad psums.
+            return jnp.sum(jnp.square(out - y)) / (global_batch * n)
+
+        sse_local, grads = jax.value_and_grad(loss_fn)(params)
+        loss = lax.psum(sse_local, axes.all_names)
+        grads = jax.tree.map(lambda g: lax.psum(g, axes.dp_names), grads)
+        params, opt_state = optimizer.update(grads, opt_state, params, step)
+        return params, opt_state, loss
+
+    pspecs = jax.tree.map(lambda s: resolve_spec(s, axes), specs(decls))
+    ospecs = jax.tree.map(lambda s: resolve_spec(s, axes), specs(opt_decls))
+    bspec = resolve_spec(P("dp", "tp"), axes)
+
+    sharded = jax.shard_map(
+        step_fn, mesh=mesh,
+        in_specs=(pspecs, ospecs, P(), bspec, bspec),
+        out_specs=(pspecs, ospecs, P()),
+        check_vma=False,
+    )
+    return jax.jit(sharded, donate_argnums=(0, 1)), decls, opt_decls
+
+
+def make_ffn_forward(cfg: ModelConfig, mesh):
+    """jit'd forward pass for inference benchmarks."""
+    axes = MeshAxes.from_mesh(mesh)
+    decls = ffn_decls(cfg, axes)
+    pspecs = jax.tree.map(lambda s: resolve_spec(s, axes), specs(decls))
+    bspec = resolve_spec(P("dp", "tp"), axes)
+    fwd = jax.shard_map(
+        partial(ffn_apply, cfg, axes), mesh=mesh,
+        in_specs=(pspecs, bspec), out_specs=bspec, check_vma=False)
+    return jax.jit(fwd), decls
+
+
+def init_ffn(cfg: ModelConfig, mesh, optimizer, seed: int = 0):
+    """Materialized params + optimizer state (for real training runs)."""
+    axes = MeshAxes.from_mesh(mesh)
+    decls = ffn_decls(cfg, axes)
+    params = materialize(decls, seed)
+    opt_state = optimizer.init(params)
+    return params, opt_state
+
+
+def abstract_ffn(cfg: ModelConfig, mesh, optimizer):
+    """ShapeDtypeStruct stand-ins for the dry-run path."""
+    axes = MeshAxes.from_mesh(mesh)
+    decls = ffn_decls(cfg, axes)
+    return abstract(decls), abstract(optimizer.state_decls(decls))

@@ -1,0 +1,57 @@
+"""Spectral initialization of phantom factors from a dense teacher matrix.
+
+Beyond-paper utility: given a dense W [n_in, n_out] (e.g. a pretrained TP
+weight), produce the best rank-k phantom factors per off-diagonal block via
+truncated SVD, with the shared-compressor constraint handled by stacking
+the row-block targets (C^(i) must serve every destination j).
+
+Used by ``examples/distill_phantom.py`` and the approximation-quality tests.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def svd_phantom_init(W, p: int, k: int):
+    """Factor W [n_in, n_out] into phantom params {L, C, D}.
+
+    For row-block i, the compressor C^(i) [n_in/p, k] must serve all p-1
+    destinations: choose it as the top-k left singular vectors of the
+    concatenated off-diagonal row block W^(i, !=i) [n_in/p, (p-1)n_out/p],
+    then D^(i,j) = C^(i)^T W^(i,j) (least squares given C).
+    """
+    W = np.asarray(W, np.float64)
+    n_in, n_out = W.shape
+    bi, bo = n_in // p, n_out // p
+    L = np.zeros((p, bi, bo))
+    C = np.zeros((n_in, k))
+    D = np.zeros((p, k, n_out))
+    for i in range(p):
+        rows = slice(i * bi, (i + 1) * bi)
+        L[i] = W[rows, i * bo:(i + 1) * bo]
+        off = np.concatenate(
+            [W[rows, j * bo:(j + 1) * bo] for j in range(p) if j != i],
+            axis=1) if p > 1 else np.zeros((bi, 0))
+        if off.shape[1]:
+            u, s, _ = np.linalg.svd(off, full_matrices=False)
+            basis = u[:, :k]                      # [bi, k]
+        else:
+            basis = np.eye(bi)[:, :k]
+        C[rows, :basis.shape[1]] = basis
+        for j in range(p):
+            if j == i:
+                continue
+            D[i, :, j * bo:(j + 1) * bo] = basis.T @ W[rows, j * bo:(j + 1) * bo]
+    return {"L": jnp.asarray(L, jnp.float32),
+            "C": jnp.asarray(C, jnp.float32),
+            "D": jnp.asarray(D, jnp.float32)}
+
+
+def block_lowrank_error(W, p: int, k: int) -> float:
+    """Relative Frobenius error of the best phantom approximation of W."""
+    from repro.core.phantom import phantom_dense_equivalent
+    params = svd_phantom_init(W, p, k)
+    W_hat = phantom_dense_equivalent(params)
+    W = jnp.asarray(W, jnp.float32)
+    return float(jnp.linalg.norm(W - W_hat) / jnp.linalg.norm(W))

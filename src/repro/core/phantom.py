@@ -1,0 +1,202 @@
+"""Phantom parallelism — the paper's core contribution, as a composable
+JAX module.
+
+A phantom linear replaces a tensor-parallel ``n_in x n_out`` projection.
+The weight matrix is viewed in ``p x p`` blocks (p = model-axis size):
+
+  * diagonal blocks stay exact:      L^(j)      [n_in/p, n_out/p]
+  * off-diagonal blocks are rank-k:  W^(i,j) ~= C^(i) D^(i,j)
+       compressor   C^(i)  [n_in/p, k]   (shared across destinations j!)
+       decompressor D^(i,j) [k, n_out/p]
+
+Per-rank forward (paper Eqn. 11):
+  g^(j)  = x^(j) C^(j)                      (compress: k ghost neurons)
+  g_all  = AllGather_k(g)                   (k-wide collective, not n/p-wide)
+  z^(j)  = x^(j) L^(j) + sum_{i != j} g^(i) D^(i,j)  (+ bias)
+
+Backward (paper Eqns. 15-21) falls out of AD; the ghost-gradient
+reduce-scatter of paper Algorithm 1 is the VJP of the all-gather (see
+``core/autograd.py``).
+
+Three execution variants (DESIGN.md §2):
+  * ``faithful`` — (p-1) separate skinny decompress GEMMs + the custom_vjp
+    AllGather, mirroring the paper's PyTorch implementation op-for-op.
+  * ``fused``    — single concatenated decompress GEMM ``g_cat @ D_cat``:
+    the TPU/MXU adaptation (one [B, p*k] x [p*k, n_out/p] matmul).  Removes
+    the paper's small-GEMM "flip-flop" regime at large p by construction.
+  * ``ring``     — ppermute ring; each hop overlaps a partial decompress
+    GEMM with the next ghost transfer (collective-matmul style).
+
+All apply functions run *inside* ``shard_map`` over the model axis and see
+local parameter shards (see param layout in ``phantom_decls``).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import PhantomConfig
+from repro.core.autograd import all_gather_ghosts
+from repro.parallel.params import ParamDecl
+
+
+# ---------------------------------------------------------------------------
+# declarations
+# ---------------------------------------------------------------------------
+
+def phantom_decls(n_in: int, n_out: int, k: int, tp: int,
+                  dtype=jnp.float32, bias: bool = True,
+                  fsdp: bool = False, dp: int = 1) -> Dict[str, ParamDecl]:
+    """Parameter layout for one phantom projection on a tp-way model axis.
+
+    Global shapes (local views in brackets):
+      L [tp, n_in/tp, n_out/tp]  sharded on dim0   ([1, n_in/tp, n_out/tp])
+      C [n_in, k]                sharded on dim0   ([n_in/tp, k])
+      D [tp, k, n_out]           sharded on dim2   ([tp, k, n_out/tp])
+      b [n_out]                  sharded           ([n_out/tp])
+
+    Note the phantom model class is mesh-dependent (paper Table I: PP model
+    size varies with p).
+    """
+    assert n_in % tp == 0 and n_out % tp == 0, (n_in, n_out, tp)
+    # FSDP applies to L only: C is tiny and D is already small per-device
+    # after TP sharding (k << n/p); sharding k-sized dims over dp would
+    # break divisibility (DESIGN.md §6).  The dp-sharded dim is whichever
+    # local dim the dp ways divide (e.g. qwen2-vl down-proj: ff/tp=1848
+    # doesn't divide 16, d/tp=512 does).
+    l_spec = P("tp", None, None)
+    if fsdp:
+        if (n_in // tp) % max(dp, 1) == 0:
+            l_spec = P("tp", "dp", None)
+        elif (n_out // tp) % max(dp, 1) == 0:
+            l_spec = P("tp", None, "dp")
+    d = {
+        "L": ParamDecl((tp, n_in // tp, n_out // tp), l_spec,
+                       scale=(n_in // tp) ** -0.5, dtype=dtype),
+        "C": ParamDecl((n_in, k), P("tp", None),
+                       scale=(n_in // tp) ** -0.5, dtype=dtype),
+        "D": ParamDecl((tp, k, n_out), P(None, None, "tp"),
+                       scale=(max(tp - 1, 1) * k) ** -0.5, dtype=dtype),
+    }
+    if bias:
+        d["b"] = ParamDecl((n_out,), P("tp"), init="zeros", dtype=dtype)
+    return d
+
+
+def phantom_param_count(n_in: int, n_out: int, k: int, tp: int,
+                        bias: bool = True) -> int:
+    """Paper §VI-B model-size accounting: n_in*n_out/p + n_in*k + p*k*n_out."""
+    n = (n_in // tp) * (n_out // tp) * tp + n_in * k + tp * k * n_out
+    return n + (n_out if bias else 0)
+
+
+# ---------------------------------------------------------------------------
+# apply (inside shard_map over the 'model' axis)
+# ---------------------------------------------------------------------------
+
+def _unshard_fsdp(p, axes, decls):
+    """All-gather FSDP-sharded dims (VJP = reduce-scatter of grads)."""
+    def fix(a, d):
+        for dim, entry in enumerate(d.spec):
+            if entry == "dp":
+                return lax.all_gather(a, axes.dp_names, axis=dim, tiled=True)
+        return a
+    return jax.tree.map(fix, p, decls,
+                        is_leaf=lambda x: isinstance(x, ParamDecl))
+
+
+def phantom_apply(pp: PhantomConfig, params, x, axes, compute_dtype=None):
+    """x: [..., n_in/p] local feature shard -> [..., n_out/p].
+
+    Activations stay feature-sharded end-to-end — the paper's "no
+    concatenation between layers" property.
+    """
+    tp_name = axes.tp_name
+    p = axes.tp
+    L = params["L"][0]                      # [n_in/p, n_out/p] local
+    C = params["C"]                         # [n_in/p, k]
+    D = params["D"]                         # [p, k, n_out/p]
+    if compute_dtype is not None:
+        x = x.astype(compute_dtype)
+        L, C, D = (a.astype(compute_dtype) for a in (L, C, D))
+
+    j = lax.axis_index(tp_name)
+
+    # --- compress: k ghost neurons (paper: g = C y) ---
+    g = jnp.einsum("...i,ik->...k", x, C)
+
+    # --- local update ---
+    z = jnp.einsum("...i,io->...o", x, L)
+
+    if pp.variant == "ring" and p > 1:
+        # ppermute ring: hop s brings the ghosts of rank (j - s) mod p; the
+        # decompress GEMM for hop s-1 overlaps the transfer of hop s.
+        perm = [(s, (s + 1) % p) for s in range(p)]
+        g_rot = g
+        for s in range(1, p):
+            g_rot = lax.ppermute(g_rot, tp_name, perm)
+            src = (j - s) % p
+            Dsrc = jnp.take(D, src, axis=0)          # [k, n_out/p]
+            z = z + jnp.einsum("...k,ko->...o", g_rot, Dsrc)
+        if pp.include_self_term:
+            Dself = jnp.take(D, j, axis=0)
+            z = z + jnp.einsum("...k,ko->...o", g, Dself)
+    elif pp.variant == "faithful" and p > 1:
+        # paper-faithful: custom autograd AllGather (Algorithm 1) and p-1
+        # separate skinny decompress GEMMs D^(i,j) g^(i).
+        g_all = all_gather_ghosts(g, tp_name)        # [p, ..., k]
+        for i in range(p):
+            mask = (i != j) | jnp.asarray(pp.include_self_term)
+            contrib = jnp.einsum("...k,ko->...o", g_all[i], D[i])
+            z = z + jnp.where(mask, 1, 0).astype(z.dtype) * contrib
+    elif p > 1:
+        # fused (TPU adaptation): one concatenated GEMM over all sources.
+        g_all = lax.all_gather(g, tp_name)           # [p, ..., k]
+        gcat = jnp.moveaxis(g_all, 0, -2)            # [..., p, k]
+        gcat = gcat.reshape(*gcat.shape[:-2], p * D.shape[1])
+        Dcat = D.reshape(p * D.shape[1], D.shape[2])  # [p*k, n_out/p]
+        z = z + jnp.einsum("...k,ko->...o", gcat, Dcat)
+        if not pp.include_self_term:
+            Dself = jnp.take(D, j, axis=0)
+            z = z - jnp.einsum("...k,ko->...o", g, Dself)
+    else:  # p == 1: purely local (self term is the only term)
+        if pp.include_self_term:
+            z = z + jnp.einsum("...k,ko->...o", g, jnp.take(D, j, axis=0))
+
+    if "b" in params:
+        z = z + params["b"].astype(z.dtype)
+    return z
+
+
+# ---------------------------------------------------------------------------
+# dense equivalence (for tests and for spectral init)
+# ---------------------------------------------------------------------------
+
+def phantom_dense_equivalent(params, include_self_term: bool = False):
+    """Assemble the dense [n_in, n_out] matrix this phantom layer computes.
+
+    Used by tests: phantom_apply(x) must equal x @ W_dense + b for the
+    *global* x.  params here are GLOBAL (unsharded) arrays.
+    """
+    L, C, D = params["L"], params["C"], params["D"]
+    p, nin_p, nout_p = L.shape
+    k = C.shape[1]
+    n_in, n_out = p * nin_p, p * nout_p
+    W = jnp.zeros((n_in, n_out), L.dtype)
+    Csh = C.reshape(p, nin_p, k)
+    Dsh = D.reshape(p, k, p, nout_p)     # [src, k, dst, n_out/p]
+    for i in range(p):
+        for j in range(p):
+            if i == j:
+                blk = L[j]
+                if include_self_term:
+                    blk = blk + Csh[i] @ Dsh[i, :, j, :]
+            else:
+                blk = Csh[i] @ Dsh[i, :, j, :]
+            W = W.at[i * nin_p:(i + 1) * nin_p,
+                     j * nout_p:(j + 1) * nout_p].set(blk)
+    return W

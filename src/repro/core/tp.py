@@ -1,0 +1,83 @@
+"""Conventional tensor parallelism — the paper's baseline (Megatron-style
+column/row sharded projections), implemented with explicit collectives
+inside ``shard_map`` so its communication volume is exactly controlled and
+comparable against phantom parallelism.
+
+Collectives per TP FFN layer (paper Table II):
+  forward:  All-Gather of the n/p activation shard  (message ~ n)
+  backward: Reduce-Scatter of the activation grads  (VJP of the gather)
+
+which reproduces beta_tau = L * O(p log p + n) — against phantom's
+k-wide ghosts, beta_pi = L * O(p log p + k p).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.params import ParamDecl
+
+
+def col_linear_decls(n_in: int, n_out: int, tp: int, dtype=jnp.float32,
+                     bias: bool = True, fsdp: bool = False) -> Dict[str, ParamDecl]:
+    """Column-parallel: W [n_in, n_out] sharded on n_out."""
+    d = {"w": ParamDecl((n_in, n_out), P("dp" if fsdp else None, "tp"),
+                        dtype=dtype)}
+    if bias:
+        d["b"] = ParamDecl((n_out,), P("tp"), init="zeros", dtype=dtype)
+    return d
+
+
+def row_linear_decls(n_in: int, n_out: int, tp: int, dtype=jnp.float32,
+                     bias: bool = True, fsdp: bool = False) -> Dict[str, ParamDecl]:
+    """Row-parallel: W [n_in, n_out] sharded on n_in."""
+    d = {"w": ParamDecl((n_in, n_out), P("tp", "dp" if fsdp else None),
+                        dtype=dtype)}
+    if bias:
+        d["b"] = ParamDecl((n_out,), P(), init="zeros", dtype=dtype)
+    return d
+
+
+def col_linear_apply(params, x_full, compute_dtype=None):
+    """x_full: [..., n_in] (replicated features) -> [..., n_out/p] shard."""
+    w = params["w"]
+    if compute_dtype is not None:
+        x_full, w = x_full.astype(compute_dtype), w.astype(compute_dtype)
+    z = jnp.einsum("...i,io->...o", x_full, w)
+    if "b" in params:
+        z = z + params["b"].astype(z.dtype)
+    return z
+
+
+def row_linear_apply(params, x_shard, compute_dtype=None):
+    """x_shard: [..., n_in/p] -> PARTIAL [..., n_out]; caller psum/scatters."""
+    w = params["w"]
+    if compute_dtype is not None:
+        x_shard, w = x_shard.astype(compute_dtype), w.astype(compute_dtype)
+    z = jnp.einsum("...i,io->...o", x_shard, w)
+    return z  # bias added after the reduction by the caller
+
+
+def gather_features(x_shard, axes):
+    """[..., n/p] feature shard -> [..., n] full (fwd AG, bwd RS)."""
+    return lax.all_gather(x_shard, axes.tp_name, axis=-1, tiled=True)
+
+
+def scatter_features(z_partial, axes):
+    """partial [..., n] -> reduced [..., n/p] (fwd RS, bwd AG)."""
+    return lax.psum_scatter(z_partial, axes.tp_name,
+                            scatter_dimension=z_partial.ndim - 1, tiled=True)
+
+
+def gather_seq(x, axes, axis=1):
+    """sequence-parallel gather: [B, S/p, d] -> [B, S, d]."""
+    return lax.all_gather(x, axes.tp_name, axis=axis, tiled=True)
+
+
+def scatter_seq(z, axes, axis=1):
+    """partial [B, S, d] -> reduced [B, S/p, d]."""
+    return lax.psum_scatter(z, axes.tp_name, scatter_dimension=axis,
+                            tiled=True)

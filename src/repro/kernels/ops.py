@@ -1,0 +1,3 @@
+"""jit'd wrappers around the Pallas kernels (the public kernel API)."""
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.phantom_fused import phantom_fused_matmul  # noqa: F401

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: fused phantom-layer update
+
+    z = x @ L  +  g_cat @ D_cat
+
+i.e. the per-rank phantom forward (local update + concatenated ghost
+decompression, DESIGN.md §2) as ONE kernel so the small decompress GEMM
+shares the output tile residency of the local GEMM instead of issuing a
+second pass over HBM.  This is the op the paper identifies as the
+performance cliff at large p (the "flip-flop"): (p-1) skinny GEMMs die on
+GPU; on TPU we concatenate them and fuse with the local update.
+
+Tiling: grid (M/bm, N/bn, K/bk) over the x@L contraction; the ghost GEMM
+(contraction p*k, small) is computed once per output tile at k==0 into the
+fp32 VMEM accumulator.  MXU-aligned tile defaults (128x128x128).
+
+TARGET is TPU (compiled via pl.pallas_call + BlockSpec); this container is
+CPU-only so tests run interpret=True against ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, l_ref, g_ref, d_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.dot(
+            g_ref[...], d_ref[...],
+            preferred_element_type=jnp.float32)
+
+    acc_ref[...] += jnp.dot(x_ref[...], l_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def phantom_fused_matmul(x, L, g, D, *, bm: int = 128, bn: int = 128,
+                         bk: int = 128, interpret: bool = False):
+    """z = x @ L + g @ D.
+
+    x [M, K]   local activation shard      (K = n_in / p)
+    L [K, N]   local diagonal block        (N = n_out / p)
+    g [M, PK]  gathered ghosts             (PK = p * k, MXU-aligned)
+    D [PK, N]  concatenated decompressors
+    -> z [M, N]
+    """
+    M, K = x.shape
+    _, N = L.shape
+    PK = g.shape[1]
+    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm_ == 0 and N % bn_ == 0 and K % bk_ == 0, (M, N, K)
+    nk = K // bk_
+
+    grid = (M // bm_, N // bn_, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),   # x
+            pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),   # L
+            pl.BlockSpec((bm_, PK), lambda i, j, k: (i, 0)),    # g
+            pl.BlockSpec((PK, bn_), lambda i, j, k: (0, j)),    # D
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, L, g, D)

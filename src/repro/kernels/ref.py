@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+for the interpret-mode shape/dtype sweeps in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def phantom_fused_ref(x, L, g, D):
+    """z = x @ L + g @ D in fp32 accumulation."""
+    z = (jnp.einsum("mk,kn->mn", x.astype(jnp.float32),
+                    L.astype(jnp.float32))
+         + jnp.einsum("mp,pn->mn", g.astype(jnp.float32),
+                      D.astype(jnp.float32)))
+    return z.astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """[B,S,H,hd] x [B,S,KV,hd] -> [B,S,H,hd]; GQA broadcast; fp32
+    softmax."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    qg = q.reshape(B, S, KV, H // KV, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bckh->bqkgc", qg, k.astype(jnp.float32))
+    s = s * hd ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = p / jnp.sum(p, -1, keepdims=True)
+    o = jnp.einsum("bqkgc,bckh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)

@@ -1,0 +1,94 @@
+"""Parse collective-communication traffic out of compiled HLO text.
+
+cost_analysis() has FLOPs and HBM bytes but NOT collective bytes, so we
+walk the post-optimization HLO for all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops, take each op's
+result shapes, its replica group size, and convert to per-device *wire*
+bytes under a ring algorithm:
+
+  all-gather       result*(g-1)/g        (device receives all but its own)
+  reduce-scatter   result*(g-1)          (input = g x result, ring passes)
+  all-reduce       2*result*(g-1)/g      (RS + AG phases)
+  all-to-all       result*(g-1)/g
+  collective-permute  result             (single hop)
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64"
+                       r"|f64)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[0-9, ]+\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).strip("{}").split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # replica_groups=[G,S]<=[N]: G groups of size S
+        return int(m.group(2))
+    return default
+
+
+def collective_bytes(hlo_text: str, default_group: int = 16):
+    """Returns (per_device_wire_bytes_total, breakdown dict with per-op
+    counts and bytes)."""
+    out = defaultdict(lambda: {"count": 0, "result_bytes": 0,
+                               "wire_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        result_shapes, op, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":       # started ops counted at -start
+            continue
+        rb = _shape_bytes(result_shapes)
+        if rb == 0:
+            # fallback: scan whole line (result may be a named tuple ref)
+            rb = _shape_bytes(line.split("(", 1)[0])
+        g = _group_size(line, default_group)
+        g = max(g, 1)
+        if op == "all-gather":
+            wb = rb * (g - 1) / g
+        elif op == "reduce-scatter":
+            wb = rb * (g - 1)
+        elif op == "all-reduce":
+            wb = 2 * rb * (g - 1) / g
+        elif op == "all-to-all":
+            wb = rb * (g - 1) / g
+        else:  # collective-permute
+            wb = rb
+        rec = out[op]
+        rec["count"] += 1
+        rec["result_bytes"] += rb
+        rec["wire_bytes"] += wb
+    total = sum(r["wire_bytes"] for r in out.values())
+    return total, dict(out)
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

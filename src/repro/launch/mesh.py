@@ -1,0 +1,30 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; tests/benches use small local meshes.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(dp: int = 2, tp: int = 4):
+    """Small mesh over host devices (tests/benches/examples)."""
+    n = len(jax.devices())
+    if dp * tp > n:
+        dp = max(1, n // tp)
+        if dp * tp > n:
+            tp = n
+            dp = 1
+    return jax.make_mesh((dp, tp), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

@@ -1,0 +1,52 @@
+"""Serving launcher: continuous-batching engine over the mesh.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch chatglm3-6b \
+      --requests 8
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="chatglm3-6b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--dp", type=int, default=2)
+    ap.add_argument("--tp", type=int, default=4)
+    args = ap.parse_args()
+
+    if "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.dp * args.tp} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    import numpy as np
+
+    from repro.configs.base import get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.models.model import model_decls
+    from repro.parallel.axes import MeshAxes
+    from repro.parallel.params import materialize
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_config(args.arch, smoke=True)
+    mesh = make_local_mesh(args.dp, args.tp)
+    axes = MeshAxes.from_mesh(mesh)
+    params = materialize(model_decls(cfg, axes), 0)
+    eng = ServeEngine(cfg, mesh, params, slots=args.slots,
+                      max_len=args.max_len)
+    rng = np.random.RandomState(0)
+    reqs = [Request(prompt=rng.randint(0, cfg.vocab_size, 16,
+                                       dtype=np.int64).astype(np.int32),
+                    max_new_tokens=args.new_tokens)
+            for _ in range(args.requests)]
+    eng.run(reqs)
+    for i, r in enumerate(reqs):
+        print(f"req{i}: {len(r.out_tokens)} tokens, done={r.done}")
+
+
+if __name__ == "__main__":
+    main()

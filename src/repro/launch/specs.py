@@ -1,0 +1,60 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input of every
+(arch x shape) cell — weak-type-correct, shardable, zero allocation.  Used
+by the dry-run, the trainer and the serve engine.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import cache_decls, n_vision_tokens
+from repro.parallel.axes import MeshAxes
+
+
+def _bspec(batch: int, axes: MeshAxes):
+    """'dp' when the global batch divides the dp ways, else replicated
+    (long_500k has batch 1)."""
+    return "dp" if (axes.dp > 1 and batch % axes.dp == 0) else None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, axes: MeshAxes):
+    """Returns (sds_tree, spec_tree) for the step function's batch input.
+
+    train:   tokens/labels [B, S] (+ frames / vision_embeds / positions)
+    prefill: tokens [B, S] (+ modality extras)
+    decode:  tokens [B, 1] (+ pos scalar; cache comes from cache_specs)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    bs = _bspec(B, axes)
+    sds, spec = {}, {}
+
+    if shape.kind in ("train", "prefill"):
+        sds["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        spec["tokens"] = P(bs, None)
+        if shape.kind == "train":
+            sds["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            spec["labels"] = P(bs, None)
+        if cfg.family == "encdec":
+            sds["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                 jnp.float32)
+            spec["frames"] = P(bs, None, None)
+        if cfg.frontend == "vision":
+            nv = n_vision_tokens(cfg, S)
+            sds["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, nv, cfg.d_model), jnp.float32)
+            spec["vision_embeds"] = P(bs, None, None)
+        if cfg.rope == "mrope":
+            sds["positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+            spec["positions"] = P(None, bs, None)
+    else:  # decode
+        sds["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        spec["tokens"] = P(bs, None)
+    return sds, spec
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, axes: MeshAxes):
+    """(sds, spec) for the decode KV/state cache of this cell."""
+    return cache_decls(cfg, axes, shape.global_batch, shape.seq_len,
+                       enc_len=shape.seq_len)

@@ -1,0 +1,70 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-14b \
+      --smoke --steps 50
+
+Full (non-smoke) configs target the production TPU mesh; on this CPU
+container they are exercised through the dry-run
+(``python -m repro.launch.dryrun``), so --smoke is the default here.
+On a real multi-host TPU deployment this same entry point is launched
+once per host after ``jax.distributed.initialize()`` (see README).
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--impl", default="phantom",
+                    choices=["dense", "phantom"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--dp", type=int, default=2)
+    ap.add_argument("--tp", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    if "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+        ndev = args.dp * args.tp
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={ndev} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    import dataclasses
+
+    from repro.configs.base import ShapeConfig, get_config
+    from repro.data.synthetic import LMDataset
+    from repro.launch.mesh import make_local_mesh, make_production_mesh
+    from repro.launch.specs import input_specs
+    from repro.optim import make_optimizer
+    from repro.optim.schedules import warmup_cosine
+    from repro.parallel.axes import MeshAxes
+    from repro.train.trainer import Trainer
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.impl == "dense":
+        cfg = cfg.replace(phantom=dataclasses.replace(
+            cfg.phantom, apply_ffn=False, apply_attn_proj=False))
+    mesh = (make_local_mesh(args.dp, args.tp) if args.smoke
+            else make_production_mesh())
+    axes = MeshAxes.from_mesh(mesh)
+    _, bspec = input_specs(
+        cfg, ShapeConfig("cli", args.seq, args.batch, "train"), axes)
+    opt = make_optimizer(cfg.optimizer,
+                         warmup_cosine(3e-4, 20, args.steps),
+                         weight_decay=0.1)
+    ds = LMDataset(cfg.vocab_size, args.batch, args.seq + 1)
+    trainer = Trainer(cfg, mesh, opt, ds, batch_spec=bspec,
+                      microbatches=args.microbatches,
+                      checkpoint_dir=args.ckpt_dir)
+    state = trainer.restore_or_init()
+    trainer.run(state, args.steps)
+
+
+if __name__ == "__main__":
+    main()

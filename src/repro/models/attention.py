@@ -1,0 +1,608 @@
+"""GQA attention with three sharding modes (DESIGN.md §6), all explicit
+collectives inside shard_map:
+
+* ``head`` — Megatron-style: Q heads column-sharded over the model axis
+  (requires H % tp == 0); KV heads column-sharded when kv % tp == 0, else
+  the (small) KV projection is replicated and each rank dynamic-slices its
+  GQA group's head.  Optionally the projections themselves are *phantom*
+  matmuls (the paper's technique applied to attention — beyond-paper).
+
+* ``ring`` — sequence-sharded ring attention for archs whose head counts
+  don't divide the model axis (granite 24H, qwen2.5 40H on tp=16): each
+  rank holds a seq chunk with FULL heads; KV rotates via ppermute with
+  online-softmax accumulation.  Projection weights are sharded on the
+  input dim and gathered on use.
+
+* decode — KV cache is *sequence-sharded* over the model axis
+  ([L, B, Smax/p, kv, hd] local chunks); every rank computes partial
+  attention of the (replicated, tiny) new-token Q over its chunk and the
+  partials merge with a flash-decoding log-sum-exp psum.  Works for every
+  GQA geometry with zero head-divisibility constraints.
+
+The attention core is blockwise (kv-chunked online softmax) so no
+[B, S, S] score tensor is ever materialized — 32k prefill stays within
+VMEM-scale working sets.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.phantom import phantom_apply, phantom_decls
+from repro.models import rope as ropemod
+from repro.models.layers import (from_partial, gather_fsdp, gather_on_use,
+                                 seq_to_feature, to_full)
+from repro.parallel.axes import MeshAxes
+from repro.parallel.params import ParamDecl
+
+NEG_INF = -1e30
+
+
+def _kv_chunk(cfg, full: int, default: int) -> int:
+    """-1 = unrolled (single block; dry-run cost accounting), 0 = default
+    blockwise size, else explicit."""
+    if cfg.attn_kv_chunk == -1:
+        return full
+    return cfg.attn_kv_chunk or default
+
+
+def resolve_attn_mode(cfg, axes: MeshAxes) -> str:
+    if cfg.attn_shard in ("head", "ring"):
+        return cfg.attn_shard
+    return "head" if cfg.num_heads % axes.tp == 0 else "ring"
+
+
+def uses_phantom_proj(cfg, axes: MeshAxes) -> bool:
+    H, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim()
+    return (cfg.phantom.apply_attn_proj
+            and resolve_attn_mode(cfg, axes) == "head"
+            and H % axes.tp == 0 and kv % axes.tp == 0)
+
+
+# ---------------------------------------------------------------------------
+# declarations
+# ---------------------------------------------------------------------------
+
+def attn_decls(cfg, axes: MeshAxes, cross: bool = False):
+    d, H, kv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim()
+    p = axes.tp
+    mode = resolve_attn_mode(cfg, axes)
+    fs = "dp" if cfg.fsdp else None
+    bias = cfg.qkv_bias
+
+    if uses_phantom_proj(cfg, axes):
+        k = cfg.phantom.k
+        return {
+            "wq": phantom_decls(d, H * hd, k, p, bias=bias,
+                                fsdp=cfg.fsdp, dp=axes.dp),
+            "wk": phantom_decls(d, kv * hd, k, p, bias=bias,
+                                fsdp=cfg.fsdp, dp=axes.dp),
+            "wv": phantom_decls(d, kv * hd, k, p, bias=bias,
+                                fsdp=cfg.fsdp, dp=axes.dp),
+            "wo": phantom_decls(H * hd, d, k, p, bias=False,
+                                fsdp=cfg.fsdp, dp=axes.dp),
+        }
+
+    if mode == "ring":
+        # input-dim sharded, gathered on use (DESIGN.md §6)
+        dec = {
+            "wq": {"w": ParamDecl((d, H * hd), P("tp", None))},
+            "wk": {"w": ParamDecl((d, kv * hd), P("tp", None))},
+            "wv": {"w": ParamDecl((d, kv * hd), P("tp", None))},
+            "wo": {"w": ParamDecl((H * hd, d), P("tp", None))},
+        }
+    else:
+        kv_sharded = kv % p == 0
+        kspec = P(fs, "tp") if kv_sharded else P()
+        dec = {
+            "wq": {"w": ParamDecl((d, H * hd), P(fs, "tp"))},
+            "wk": {"w": ParamDecl((d, kv * hd), kspec)},
+            "wv": {"w": ParamDecl((d, kv * hd), kspec)},
+            "wo": {"w": ParamDecl((H * hd, d), P("tp", fs))},
+        }
+    if bias:
+        kv_sharded = kv % p == 0
+        dec["wq"]["b"] = ParamDecl((H * hd,),
+                                   P() if mode == "ring" else P("tp"),
+                                   init="zeros")
+        bspec = P("tp") if (mode != "ring" and kv_sharded) else P()
+        dec["wk"]["b"] = ParamDecl((kv * hd,), bspec, init="zeros")
+        dec["wv"]["b"] = ParamDecl((kv * hd,), bspec, init="zeros")
+    return dec
+
+
+# ---------------------------------------------------------------------------
+# blockwise online-softmax attention core
+# ---------------------------------------------------------------------------
+
+class AttnAcc(NamedTuple):
+    num: jax.Array      # [B, Sq, KV, Hg, hd] fp32 running numerator
+    m: jax.Array        # [B, Sq, KV, Hg] running max
+    l: jax.Array        # [B, Sq, KV, Hg] running denominator
+
+
+def init_acc(B, Sq, KV, Hg, hd):
+    return AttnAcc(jnp.zeros((B, Sq, KV, Hg, hd), jnp.float32),
+                   jnp.full((B, Sq, KV, Hg), NEG_INF, jnp.float32),
+                   jnp.zeros((B, Sq, KV, Hg), jnp.float32))
+
+
+def attn_block_update(acc: AttnAcc, q, k, v, q_pos, kv_pos0, *,
+                      causal: bool, kv_limit=None, kv_chunk: int = 512,
+                      scores_dtype=jnp.float32):
+    """Accumulate attention of q against (k, v), kv-chunked.
+
+    q: [B, Sq, KV, Hg, hd]   (Hg = query heads per kv head)
+    k,v: [B, Skv, KV, hd]
+    q_pos: [B, Sq] global query positions (int32; per-sequence for the
+      continuous-batching decode path)
+    kv_pos0: scalar global position of k[:,0]
+    kv_limit: optional [B]; kv positions >= kv_limit[b] are masked (decode
+      masks unwritten cache slots).
+    """
+    B, Skv = k.shape[0], k.shape[1]
+    hd = q.shape[-1]
+    kv_chunk = min(kv_chunk, Skv)
+    n = Skv // kv_chunk
+    assert Skv % kv_chunk == 0, (Skv, kv_chunk)
+    scale = hd ** -0.5
+
+    def body(acc, i):
+        ks = lax.dynamic_slice_in_dim(k, i * kv_chunk, kv_chunk, 1)
+        vs = lax.dynamic_slice_in_dim(v, i * kv_chunk, kv_chunk, 1)
+        # score chain kept END-TO-END in scores_dtype: bf16 halves the
+        # dominant HBM traffic of blockwise attention (§Perf; the max
+        # shift keeps exp args near 0 so bf16 exp is safe); the running
+        # softmax stats and the accumulator stay fp32.
+        s = jnp.einsum("bqkgh,bckh->bqkgc", q.astype(scores_dtype),
+                       ks.astype(scores_dtype),
+                       preferred_element_type=scores_dtype) \
+            * jnp.asarray(scale, scores_dtype)
+        kv_pos = kv_pos0 + i * kv_chunk + jnp.arange(kv_chunk)
+        mask = jnp.ones((B, q.shape[1], kv_chunk), bool)
+        if causal:
+            mask = mask & (kv_pos[None, None, :] <= q_pos[:, :, None])
+        if kv_limit is not None:
+            mask = mask & (kv_pos[None, None, :]
+                           < kv_limit[:, None, None])
+        s = jnp.where(mask[:, :, None, None, :], s,
+                      jnp.asarray(NEG_INF, scores_dtype))
+        m_new = jnp.maximum(acc.m, jnp.max(s, axis=-1).astype(jnp.float32))
+        # guard: fully-masked rows keep m at NEG_INF; exp() underflows to 0
+        p_ = jnp.exp(s - m_new[..., None].astype(scores_dtype))
+        corr = jnp.exp(acc.m - m_new)
+        num = (acc.num * corr[..., None]
+               + jnp.einsum("bqkgc,bckh->bqkgh", p_,
+                            vs.astype(scores_dtype),
+                            preferred_element_type=jnp.float32))
+        l_ = acc.l * corr + jnp.sum(p_, axis=-1, dtype=jnp.float32)
+        return AttnAcc(num, m_new, l_), None
+
+    acc, _ = lax.scan(body, acc, jnp.arange(n))
+    return acc
+
+
+def finalize_acc(acc: AttnAcc, dtype):
+    l_ = jnp.maximum(acc.l, 1e-30)
+    out = acc.num / l_[..., None]
+    B, Sq, KV, Hg, hd = out.shape
+    return out.reshape(B, Sq, KV * Hg, hd).astype(dtype)
+
+
+def _gqa_q(q, KV):
+    """[B, S, H, hd] -> [B, S, KV, H/KV, hd]."""
+    B, S, H, hd = q.shape
+    return q.reshape(B, S, KV, H // KV, hd)
+
+
+# ---------------------------------------------------------------------------
+# projection helpers
+# ---------------------------------------------------------------------------
+
+def _proj(params, x, nheads, hd, dtype, bias_key="b"):
+    w = params["w"].astype(dtype)
+    y = jnp.einsum("...d,dn->...n", x.astype(dtype), w)
+    if bias_key in params:
+        y = y + params[bias_key].astype(dtype)
+    return y.reshape(*y.shape[:-1], nheads, hd)
+
+
+def _phantom_proj(pp, params, x, nh_local, hd, axes, dtype):
+    y = phantom_apply(pp, params, x, axes, compute_dtype=dtype)
+    return y.reshape(*y.shape[:-1], nh_local, hd)
+
+
+# ---------------------------------------------------------------------------
+# main entry
+# ---------------------------------------------------------------------------
+
+def attention(cfg, layout: str, params, x, positions, axes: MeshAxes,
+              decls=None, *, kind: str = "train", causal: bool = True,
+              cache=None, pos=None, memory=None, cross: bool = False,
+              return_kv: bool = False):
+    """Returns (residual-shard out, new_kv_or_None).
+
+    kind: train | prefill | decode.  memory: encoder output (cross-attn,
+    full [B, S_enc, d] per-rank).  cache: decode KV cache {k, v} local
+    [B, Smax/p, kv, hd] (cross decode reads it, never writes).  pos:
+    decode position.
+    """
+    mode = resolve_attn_mode(cfg, axes)
+    if kind == "decode":
+        return _attention_decode(cfg, layout, params, x, axes, decls,
+                                 cache=cache, pos=pos, cross=cross)
+    if mode == "ring" and not cross:
+        return _attention_ring(cfg, layout, params, x, positions, axes,
+                               decls, kind=kind, causal=causal,
+                               return_kv=return_kv)
+    return _attention_head(cfg, layout, params, x, positions, axes, decls,
+                           kind=kind, causal=causal,
+                           memory=memory if cross else None,
+                           return_kv=return_kv)
+
+
+def _qkv_head_mode(cfg, params, x_full, positions, axes, decls, dtype,
+                   rope=True):
+    """Column-sharded QKV in head mode. Returns q [B,S,Hloc,hd],
+    k/v [B,S,KVloc,hd] (KVloc = kv/p, or full kv if replicated)."""
+    H, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim()
+    p = axes.tp
+    if uses_phantom_proj(cfg, axes):
+        # x is the fp-layout feature shard (NOT gathered) for phantom
+        q = _phantom_proj(cfg.phantom, _g(params, decls, "wq", axes), x_full,
+                          H // p, hd, axes, dtype)
+        k = _phantom_proj(cfg.phantom, _g(params, decls, "wk", axes), x_full,
+                          kv // p, hd, axes, dtype)
+        v = _phantom_proj(cfg.phantom, _g(params, decls, "wv", axes), x_full,
+                          kv // p, hd, axes, dtype)
+    else:
+        q = _proj(_g(params, decls, "wq", axes), x_full, H // p, hd, dtype)
+        kvh = kv // p if kv % p == 0 else kv
+        k = _proj(_g(params, decls, "wk", axes), x_full, kvh, hd, dtype)
+        v = _proj(_g(params, decls, "wv", axes), x_full, kvh, hd, dtype)
+    if rope and cfg.rope != "none":
+        q = ropemod.rope_for(cfg, q, positions)
+        k = ropemod.rope_for(cfg, k, positions)
+    return q, k, v
+
+
+def _attention_head(cfg, layout, params, x, positions, axes, decls, *,
+                    kind, causal, memory=None, return_kv=False):
+    H, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim()
+    p = axes.tp
+    dtype = jnp.dtype(cfg.dtype)
+    phantom = uses_phantom_proj(cfg, axes)
+    j = lax.axis_index(axes.tp_name)
+
+    if phantom:
+        xq = x                                   # fp shard, no gather
+    else:
+        xq = to_full(x, layout, axes)            # [B, S, d]
+
+    if memory is None:
+        q, k, v = _qkv_head_mode(cfg, params, xq, positions, axes, decls,
+                                 dtype)
+        kv_positions = positions
+    else:
+        # cross-attention: q from x, kv from encoder memory (full [B,Se,d])
+        if phantom:
+            q = _phantom_proj(cfg.phantom, _g(params, decls, "wq", axes),
+                              xq, H // p, hd, axes, dtype)
+        else:
+            q = _proj(_g(params, decls, "wq", axes), xq, H // p, hd, dtype)
+        kvh = kv // p if kv % p == 0 else kv
+        k = _proj(_g(params, decls, "wk", axes), memory, kvh, hd, dtype)
+        v = _proj(_g(params, decls, "wv", axes), memory, kvh, hd, dtype)
+        causal = False
+        kv_positions = None
+
+    B, S = q.shape[0], q.shape[1]
+    kv_sharded = (kv % p == 0)
+    if not kv_sharded:
+        # replicated KV weights: slice this rank's GQA group's head(s)
+        grp = (j * kv) // p
+        k_use = lax.dynamic_slice_in_dim(k, grp, 1, axis=2)
+        v_use = lax.dynamic_slice_in_dim(v, grp, 1, axis=2)
+        KV_loc = 1
+    else:
+        k_use, v_use = k, v
+        KV_loc = kv // p
+
+    Hg = (H // p) // KV_loc
+    qg = _gqa_q(q, KV_loc)
+    Skv = k_use.shape[1]
+    acc = init_acc(B, S, KV_loc, Hg, hd)
+    q_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    sdt = jnp.bfloat16 if cfg.attn_bf16_scores else jnp.float32
+    kvc = _kv_chunk(cfg, Skv, 512)
+    acc = attn_block_update(acc, qg, k_use, v_use, q_pos, 0, causal=causal,
+                            scores_dtype=sdt, kv_chunk=kvc)
+    out = finalize_acc(acc, dtype)               # [B, S, Hloc, hd]
+    out = out.reshape(B, S, -1)
+
+    if phantom:
+        z = phantom_apply(cfg.phantom, _g(params, decls, "wo", axes), out,
+                          axes, compute_dtype=dtype)
+        res = z                                   # stays feature-sharded
+    else:
+        wo = _g(params, decls, "wo", axes)["w"].astype(dtype)
+        z = jnp.einsum("bsn,nd->bsd", out, wo)    # partial over tp
+        res = from_partial(z, layout, axes)
+
+    new_kv = None
+    if return_kv:
+        new_kv = _emit_cache_head_mode(k, v, kv_sharded, axes)
+    return res, new_kv
+
+
+def _emit_cache_head_mode(k, v, kv_sharded, axes):
+    """Convert prefill-layout KV to the decode cache layout
+    [B, S/p, kv, hd] (sequence-sharded)."""
+    p = axes.tp
+    if kv_sharded:
+        # [B, S, kv/p, hd] head-sharded -> all_to_all -> [B, S/p, kv, hd]
+        ck = lax.all_to_all(k, axes.tp_name, split_axis=1, concat_axis=2,
+                            tiled=True)
+        cv = lax.all_to_all(v, axes.tp_name, split_axis=1, concat_axis=2,
+                            tiled=True)
+        return {"k": ck, "v": cv}
+    # replicated KV: every rank holds identical full [B, S, kv, hd];
+    # just slice this rank's seq chunk.
+    j = lax.axis_index(axes.tp_name)
+    chunk = k.shape[1] // p
+    ck = lax.dynamic_slice_in_dim(k, j * chunk, chunk, 1)
+    cv = lax.dynamic_slice_in_dim(v, j * chunk, chunk, 1)
+    return {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# ring attention (sequence-sharded; granite/qwen2.5 train+prefill)
+# ---------------------------------------------------------------------------
+
+def _attention_ring(cfg, layout, params, x, positions, axes, decls, *,
+                    kind, causal, return_kv=False):
+    H, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim()
+    p = axes.tp
+    dtype = jnp.dtype(cfg.dtype)
+    j = lax.axis_index(axes.tp_name)
+
+    # get this rank's seq chunk with full features
+    if layout == "sp":
+        xc = x                                    # [B, C, d] already
+    else:
+        x_full = to_full(x, layout, axes)
+        C = x_full.shape[1] // p
+        xc = lax.dynamic_slice_in_dim(x_full, j * C, C, 1)
+    B, C = xc.shape[0], xc.shape[1]
+
+    wq = gather_on_use(_g(params, decls, "wq", axes)["w"], axes)
+    wk = gather_on_use(_g(params, decls, "wk", axes)["w"], axes)
+    wv = gather_on_use(_g(params, decls, "wv", axes)["w"], axes)
+    wo = gather_on_use(_g(params, decls, "wo", axes)["w"], axes)
+
+    def proj(w, b, nh):
+        y = jnp.einsum("bcd,dn->bcn", xc.astype(dtype), w.astype(dtype))
+        if b is not None:
+            y = y + b.astype(dtype)
+        return y.reshape(B, C, nh, hd)
+
+    q = proj(wq, params["wq"].get("b"), H)
+    k = proj(wk, params["wk"].get("b"), kv)
+    v = proj(wv, params["wv"].get("b"), kv)
+
+    # positions of this chunk
+    chunk_pos = j * C + jnp.arange(C)
+    if cfg.rope != "none":
+        if cfg.rope == "mrope":
+            pos_c = lax.dynamic_slice_in_dim(positions, j * C, C, 2)
+            q = ropemod.rope_for(cfg, q, pos_c)
+            k = ropemod.rope_for(cfg, k, pos_c)
+        else:
+            pos_c = chunk_pos[None, :].astype(jnp.int32)
+            q = ropemod.rope_for(cfg, q, jnp.broadcast_to(pos_c, (B, C)))
+            k = ropemod.rope_for(cfg, k, jnp.broadcast_to(pos_c, (B, C)))
+
+    qg = _gqa_q(q, kv)
+    acc = init_acc(B, C, kv, H // kv, hd)
+    sdt = jnp.bfloat16 if cfg.attn_bf16_scores else jnp.float32
+
+    if cfg.attn_ring_gather_kv:
+        # gather-KV variant (§Perf cell C): one all-gather of the (small)
+        # KV instead of p ppermute hops — same wire bytes, but the online-
+        # softmax accumulator is written ONCE instead of p times.  The
+        # gathered KV must be in global seq order: gather stacks by rank,
+        # which IS seq order for sp sharding.
+        k_all = lax.all_gather(k, axes.tp_name, axis=1, tiled=True)
+        v_all = lax.all_gather(v, axes.tp_name, axis=1, tiled=True)
+        acc = attn_block_update(acc, qg, k_all, v_all,
+                                jnp.broadcast_to(chunk_pos, (B, C)),
+                                0, causal=causal, scores_dtype=sdt,
+                                kv_chunk=_kv_chunk(cfg, p * C, 512))
+    else:
+        perm = [(s, (s + 1) % p) for s in range(p)]
+        k_rot, v_rot = k, v
+        for s in range(p):
+            src = (j - s) % p
+            kv_pos0 = src * C
+            acc = attn_block_update(acc, qg, k_rot, v_rot,
+                                    jnp.broadcast_to(chunk_pos, (B, C)),
+                                    kv_pos0, causal=causal,
+                                    scores_dtype=sdt,
+                                    kv_chunk=_kv_chunk(cfg, C, 512))
+            if s < p - 1:
+                k_rot = lax.ppermute(k_rot, axes.tp_name, perm)
+                v_rot = lax.ppermute(v_rot, axes.tp_name, perm)
+
+    out = finalize_acc(acc, dtype).reshape(B, C, H * hd)
+    z = jnp.einsum("bcn,nd->bcd", out, wo.astype(dtype))   # [B, C, d]
+
+    if layout == "sp":
+        res = z
+    else:
+        res = seq_to_feature(z, axes)             # [B, S, d/p]
+
+    new_kv = {"k": k, "v": v} if return_kv else None   # already seq-sharded
+    return res, new_kv
+
+
+# ---------------------------------------------------------------------------
+# decode: seq-sharded cache + LSE-combine (flash-decoding over the mesh)
+# ---------------------------------------------------------------------------
+
+def _attention_decode(cfg, layout, params, x, axes, decls, *, cache, pos,
+                      cross=False):
+    H, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim()
+    p = axes.tp
+    dtype = jnp.dtype(cfg.dtype)
+    j = lax.axis_index(axes.tp_name)
+    phantom = uses_phantom_proj(cfg, axes)
+
+    x_full = to_full(x, layout, axes)             # [B, 1, d] tiny
+    B = x_full.shape[0]
+
+    # --- project the new token; all ranks need FULL heads -> tiny gathers
+    if phantom:
+        xq = x
+        q = _phantom_proj(cfg.phantom, _g(params, decls, "wq", axes), xq,
+                          H // p, hd, axes, dtype)
+        q = lax.all_gather(q, axes.tp_name, axis=2, tiled=True)
+        if not cross:
+            kn = _phantom_proj(cfg.phantom, _g(params, decls, "wk", axes),
+                               xq, kv // p, hd, axes, dtype)
+            vn = _phantom_proj(cfg.phantom, _g(params, decls, "wv", axes),
+                               xq, kv // p, hd, axes, dtype)
+            kn = lax.all_gather(kn, axes.tp_name, axis=2, tiled=True)
+            vn = lax.all_gather(vn, axes.tp_name, axis=2, tiled=True)
+    else:
+        mode = resolve_attn_mode(cfg, axes)
+        if mode == "ring":
+            wq = gather_on_use(_g(params, decls, "wq", axes)["w"], axes)
+            q = jnp.einsum("btd,dn->btn", x_full.astype(dtype),
+                           wq.astype(dtype))
+            if "b" in params["wq"]:
+                q = q + params["wq"]["b"].astype(dtype)
+            q = q.reshape(B, 1, H, hd)
+            if not cross:
+                wk = gather_on_use(_g(params, decls, "wk", axes)["w"], axes)
+                wv = gather_on_use(_g(params, decls, "wv", axes)["w"], axes)
+                kn = jnp.einsum("btd,dn->btn", x_full.astype(dtype),
+                                wk.astype(dtype))
+                vn = jnp.einsum("btd,dn->btn", x_full.astype(dtype),
+                                wv.astype(dtype))
+                if "b" in params["wk"]:
+                    kn = kn + params["wk"]["b"].astype(dtype)
+                    vn = vn + params["wv"]["b"].astype(dtype)
+                kn = kn.reshape(B, 1, kv, hd)
+                vn = vn.reshape(B, 1, kv, hd)
+        else:
+            q = _proj(_g(params, decls, "wq", axes,
+                         cfg.fsdp_gather_quant), x_full, H // p, hd,
+                      dtype)
+            q = lax.all_gather(q, axes.tp_name, axis=2, tiled=True)
+            if not cross:
+                kvh = kv // p if kv % p == 0 else kv
+                kn = _proj(_g(params, decls, "wk", axes), x_full, kvh, hd,
+                           dtype)
+                vn = _proj(_g(params, decls, "wv", axes), x_full, kvh, hd,
+                           dtype)
+                if kv % p == 0:
+                    kn = lax.all_gather(kn, axes.tp_name, axis=2, tiled=True)
+                    vn = lax.all_gather(vn, axes.tp_name, axis=2, tiled=True)
+
+    # rope on q and new kv at per-sequence positions `pos` [B]
+    pos = jnp.asarray(pos, jnp.int32).reshape(B)
+    if cfg.rope != "none" and cfg.rope != "mrope":
+        pos_b = pos[:, None]                      # [B, 1]
+        q = ropemod.rope_for(cfg, q, pos_b)
+        if not cross:
+            kn = ropemod.rope_for(cfg, kn, pos_b)
+    elif cfg.rope == "mrope":
+        pos3 = jnp.broadcast_to(pos[None, :, None], (3, B, 1))
+        q = ropemod.rope_for(cfg, q, pos3)
+        if not cross:
+            kn = ropemod.rope_for(cfg, kn, pos3)
+
+    # --- cache update: write each row's new kv into this rank's chunk ----
+    chunk = cache["k"].shape[1]
+    if not cross:
+        local_idx = pos - j * chunk               # [B]
+        in_range = (local_idx >= 0) & (local_idx < chunk)
+        widx = jnp.clip(local_idx, 0, chunk - 1)
+        rows = jnp.arange(B)
+        kcur = cache["k"][rows, widx]             # [B, kv, hd]
+        vcur = cache["v"][rows, widx]
+        sel = in_range[:, None, None]
+        kwrite = jnp.where(sel, kn[:, 0].astype(cache["k"].dtype), kcur)
+        vwrite = jnp.where(sel, vn[:, 0].astype(cache["v"].dtype), vcur)
+        new_cache = {
+            "k": cache["k"].at[rows, widx].set(kwrite),
+            "v": cache["v"].at[rows, widx].set(vwrite),
+        }
+    else:
+        new_cache = cache
+
+    # --- partial attention over the local chunk --------------------------
+    qg = _gqa_q(q, kv)                            # [B, 1, kv, H/kv, hd]
+    acc = init_acc(B, 1, kv, H // kv, hd)
+    kv_pos0 = j * chunk
+    kv_limit = (pos + 1) if not cross else None
+    acc = attn_block_update(acc, qg, new_cache["k"], new_cache["v"],
+                            pos[:, None], kv_pos0,
+                            causal=not cross, kv_limit=kv_limit,
+                            kv_chunk=_kv_chunk(cfg, chunk,
+                                               min(1024, chunk)),
+                            scores_dtype=(jnp.bfloat16
+                                          if cfg.attn_bf16_scores
+                                          else jnp.float32))
+
+    # --- LSE combine across the model axis (flash-decoding merge) --------
+    m_g = lax.pmax(acc.m, axes.tp_name)
+    w = jnp.exp(acc.m - m_g)
+    num = lax.psum(acc.num * w[..., None], axes.tp_name)
+    den = lax.psum(acc.l * w, axes.tp_name)
+    out = num / jnp.maximum(den, 1e-30)[..., None]
+    out = out.reshape(B, 1, H * hd).astype(dtype)
+
+    # --- output projection ------------------------------------------------
+    if phantom:
+        # out is replicated; phantom wo expects feature shard: slice ours
+        sl = out.reshape(B, 1, p, (H * hd) // p)
+        mine = jnp.take(sl, j, axis=2)
+        z = phantom_apply(cfg.phantom, _g(params, decls, "wo", axes), mine,
+                          axes, compute_dtype=dtype)
+        res = z
+    else:
+        mode = resolve_attn_mode(cfg, axes)
+        wo = _g(params, decls, "wo", axes)["w"]
+        if mode == "ring":
+            # wo gathered: z is COMPLETE (not a partial sum) on every rank
+            wo_f = gather_on_use(wo, axes)
+            z = jnp.einsum("btn,nd->btd", out, wo_f.astype(dtype))
+            if layout == "fp":  # slice this rank's feature shard
+                fsh = z.shape[-1] // p
+                res = lax.dynamic_slice_in_dim(z, j * fsh, fsh, 2)
+            else:
+                res = z
+        else:
+            # row-parallel: slice our input block, psum
+            nshard = wo.shape[0]
+            mine = lax.dynamic_slice_in_dim(out, j * nshard, nshard, 2)
+            z = jnp.einsum("btn,nd->btd", mine, wo.astype(dtype))
+            res = from_partial(z, layout, axes)
+    return res, new_cache
+
+
+def _g(params, decls, key, axes, quant: bool = False):
+    """FSDP gather-on-use for a named projection subtree."""
+    sub_p = params[key]
+    if decls is None:
+        return sub_p
+    sub_d = decls[key]
+    return jax.tree.map(
+        lambda w, d: gather_fsdp(w, d.spec, axes, quant=quant), sub_p,
+        sub_d, is_leaf=lambda v: isinstance(v, ParamDecl))

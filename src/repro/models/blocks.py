@@ -1,0 +1,120 @@
+"""Composable blocks: (mixer + ffn) residual layers.
+
+mixer: "attn" (GQA, any sharding mode) or "mamba" (SSD).
+ffn:   "mlp" (dense-TP or phantom), "moe", or None (mamba2 has no FFN).
+
+A layer plan (list of (mixer, ffn) pairs) describes any assigned arch;
+hybrid archs scan over superblocks of `period` layers (jamba: 8).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moemod
+from repro.models import ssm as ssmmod
+from repro.models.layers import mlp_decls, mlp_apply, norm_decls, norm_apply
+from repro.parallel.axes import MeshAxes
+
+
+def layer_plan(cfg):
+    """[(mixer, ffn)] for each layer."""
+    plan = []
+    for l in range(cfg.num_layers):
+        if cfg.attn_period == -1:
+            mixer = "mamba"
+        elif cfg.attn_period and cfg.attn_period > 0:
+            mixer = "attn" if l % cfg.attn_period == 0 else "mamba"
+        else:
+            mixer = "attn"
+        if cfg.family == "ssm":
+            ffn = None
+        elif cfg.moe is not None and l % cfg.moe.every_n == cfg.moe.offset:
+            ffn = "moe"
+        elif cfg.d_ff > 0:
+            ffn = "mlp"
+        else:
+            ffn = None
+        plan.append((mixer, ffn))
+    return plan
+
+
+def plan_period(cfg) -> int:
+    """Smallest repeating period of the layer plan (scan superblock size)."""
+    plan = layer_plan(cfg)
+    for per in range(1, len(plan) + 1):
+        if len(plan) % per == 0 and plan == plan[:per] * (len(plan) // per):
+            return per
+    return len(plan)
+
+
+# ---------------------------------------------------------------------------
+
+def block_decls(cfg, axes: MeshAxes, mixer: str, ffn, layout: str,
+                cross: bool = False):
+    d = {"norm1": norm_decls(cfg, layout, cfg.d_model)}
+    if mixer == "attn":
+        d["mixer"] = attn.attn_decls(cfg, axes)
+    else:
+        d["mixer"] = ssmmod.ssm_decls(cfg, axes)
+    if cross:
+        d["norm_x"] = norm_decls(cfg, layout, cfg.d_model)
+        d["cross"] = attn.attn_decls(cfg, axes, cross=True)
+    if ffn == "mlp":
+        d["norm2"] = norm_decls(cfg, layout, cfg.d_model)
+        d["ffn"] = mlp_decls(cfg, axes, cfg.d_model, cfg.d_ff)
+    elif ffn == "moe":
+        d["norm2"] = norm_decls(cfg, layout, cfg.d_model)
+        d["ffn"] = moemod.moe_decls(cfg, axes)
+    return d
+
+
+def block_apply(cfg, layout: str, params, decls, x, positions,
+                axes: MeshAxes, *, mixer: str, ffn, kind: str,
+                causal: bool = True, cache=None, pos=None, memory=None,
+                return_kv: bool = False):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.float32(0)
+    has_cross = "cross" in params
+    # train-mode scan passes a dummy (non-dict) placeholder for cache
+    cache = cache if isinstance(cache, dict) else None
+    self_cache = (cache.get("self") if (has_cross and cache is not None)
+                  else cache)
+    h = norm_apply(cfg, layout, params["norm1"], x, axes)
+    if mixer == "attn":
+        out, new_kv = attn.attention(
+            cfg, layout, params["mixer"], h, positions, axes,
+            decls["mixer"], kind=kind, causal=causal, cache=self_cache,
+            pos=pos, return_kv=return_kv)
+    else:
+        out, new_kv = ssmmod.ssm_apply(
+            cfg, layout, params["mixer"], h, axes, decls["mixer"],
+            kind=kind, cache=self_cache)
+    x = x + out.astype(x.dtype)
+
+    if has_cross:
+        hx = norm_apply(cfg, layout, params["norm_x"], x, axes)
+        cross_cache = (cache.get("cross")
+                       if (cache is not None and kind == "decode") else None)
+        cout, cross_kv = attn.attention(
+            cfg, layout, params["cross"], hx, positions, axes,
+            decls["cross"], kind=kind, causal=False, memory=memory,
+            cross=True, cache=cross_cache, pos=pos,
+            return_kv=return_kv and kind == "prefill")
+        x = x + cout.astype(x.dtype)
+        if kind == "prefill" and return_kv:
+            new_kv = {"self": new_kv, "cross": cross_kv}
+        elif kind == "decode":
+            new_kv = {"self": new_kv, "cross": cross_kv}
+
+    if ffn is not None:
+        h2 = norm_apply(cfg, layout, params["norm2"], x, axes)
+        if ffn == "moe":
+            f, aux = moemod.moe_apply(cfg, layout, params["ffn"], h2, axes,
+                                      decls["ffn"])
+        else:
+            f = mlp_apply(cfg, layout, params["ffn"], h2, axes,
+                          decls["ffn"])
+        x = x + f.astype(x.dtype)
+    return x, new_kv, aux

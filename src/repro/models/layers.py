@@ -1,0 +1,371 @@
+"""Shared layers: norms (layout-aware), embeddings, MLPs (dense-TP and
+phantom), logit head with sharded+chunked cross-entropy.
+
+Residual-stream layouts (DESIGN.md §6) — all code here runs inside
+``shard_map`` and sees local shards:
+
+  * ``sp``  — sequence-parallel  [B_loc, S/p, d]   (dense TP baseline)
+  * ``fp``  — feature-parallel   [B_loc, S, d/p]   (phantom: activations
+              stay feature-sharded end-to-end, the paper's layout)
+  * ``rep`` — replicated         [B_loc, S, d]     (dense decode)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import tp as tpmod
+from repro.core.phantom import phantom_apply, phantom_decls
+from repro.parallel.axes import MeshAxes
+from repro.parallel.params import ParamDecl
+
+
+# ---------------------------------------------------------------------------
+# layout helpers
+# ---------------------------------------------------------------------------
+
+def residual_layout(cfg, kind: str) -> str:
+    """Which layout the residual stream uses for this config/step kind."""
+    phantom_used = cfg.phantom.apply_ffn or cfg.phantom.apply_attn_proj
+    if cfg.ffn_impl == "phantom" or phantom_used:
+        return "fp"
+    if kind == "decode":
+        return "rep"
+    return "sp"
+
+
+def to_full(x, layout: str, axes: MeshAxes):
+    """local residual shard -> full [B, S, d] (fwd AG, bwd RS)."""
+    if layout == "sp":
+        return tpmod.gather_seq(x, axes, axis=1)
+    if layout == "fp":
+        return tpmod.gather_features(x, axes)
+    return x
+
+
+def from_partial(z, layout: str, axes: MeshAxes):
+    """partial-sum full [B, S, d] -> reduced local shard (fwd RS, bwd AG)."""
+    if layout == "sp":
+        return tpmod.scatter_seq(z, axes, axis=1)
+    if layout == "fp":
+        return tpmod.scatter_features(z, axes)
+    return lax.psum(z, axes.tp_name)
+
+
+def seq_to_feature(x, axes: MeshAxes):
+    """[B, S/p, d] -> [B, S, d/p] (single all-to-all)."""
+    return lax.all_to_all(x, axes.tp_name, split_axis=2, concat_axis=1,
+                          tiled=True)
+
+
+def feature_to_seq(x, axes: MeshAxes):
+    """[B, S, d/p] -> [B, S/p, d] (single all-to-all)."""
+    return lax.all_to_all(x, axes.tp_name, split_axis=1, concat_axis=2,
+                          tiled=True)
+
+
+def gather_on_use(w, axes: MeshAxes, dim: int = 0):
+    """'Weight-sharded, gather-on-use' params (ring-attention projections,
+    FSDP dims): fwd all-gather, bwd reduce-scatter of the grads."""
+    return lax.all_gather(w, axes.tp_name, axis=dim, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_decls(cfg, layout: str, d: int):
+    spec = P("tp") if layout == "fp" else P()
+    decl = {"scale": ParamDecl((d,), spec, init="ones")}
+    if cfg.norm == "layernorm":
+        decl["bias"] = ParamDecl((d,), spec, init="zeros")
+    return decl
+
+
+def norm_apply(cfg, layout: str, params, x, axes: MeshAxes):
+    """RMSNorm/LayerNorm over the feature dim; psums partial moments when
+    the features are sharded (fp layout)."""
+    xf = x.astype(jnp.float32)
+    d_local = x.shape[-1]
+    if layout == "fp":
+        d_global = d_local * axes.tp
+        if cfg.norm == "layernorm":
+            mean = lax.psum(jnp.sum(xf, -1, keepdims=True), axes.tp_name)
+            mean = mean / d_global
+            xc = xf - mean
+            var = lax.psum(jnp.sum(xc * xc, -1, keepdims=True),
+                           axes.tp_name) / d_global
+            y = xc * lax.rsqrt(var + cfg.norm_eps)
+            y = y * params["scale"] + params["bias"]
+        else:
+            ms = lax.psum(jnp.sum(xf * xf, -1, keepdims=True),
+                          axes.tp_name) / d_global
+            y = xf * lax.rsqrt(ms + cfg.norm_eps) * params["scale"]
+    else:
+        if cfg.norm == "layernorm":
+            mean = jnp.mean(xf, -1, keepdims=True)
+            xc = xf - mean
+            var = jnp.mean(xc * xc, -1, keepdims=True)
+            y = xc * lax.rsqrt(var + cfg.norm_eps)
+            y = y * params["scale"] + params["bias"]
+        else:
+            ms = jnp.mean(xf * xf, -1, keepdims=True)
+            y = xf * lax.rsqrt(ms + cfg.norm_eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding
+# ---------------------------------------------------------------------------
+
+def padded_vocab(cfg) -> int:
+    """Vocab rounded up to a multiple of 128 so vocab-sharding divides any
+    tp <= 128 and logit GEMMs stay MXU-aligned.  Padded columns are masked
+    to -inf in the softmax (see xent_loss)."""
+    v = cfg.vocab_size
+    return -(-v // 128) * 128
+
+
+def embed_decls(cfg):
+    fs = "dp" if cfg.fsdp else None
+    return {"table": ParamDecl((padded_vocab(cfg), cfg.d_model),
+                               P("tp", fs), init="embed")}
+
+
+def embed_apply(cfg, layout: str, params, tokens, axes: MeshAxes,
+                decls=None):
+    """tokens [B_loc, S] -> residual shard in `layout`.
+
+    Vocab-sharded lookup: local take + masked, then a single fused
+    psum-scatter into the residual layout (psum for rep).
+    """
+    table = params["table"]
+    if cfg.fsdp:
+        table = gather_fsdp(table, P("tp", "dp"), axes,
+                            quant=cfg.fsdp_gather_quant)
+    vshard = table.shape[0]
+    j = lax.axis_index(axes.tp_name)
+    start = j * vshard
+    local = tokens - start
+    ok = (local >= 0) & (local < vshard)
+    local = jnp.clip(local, 0, vshard - 1)
+    h = jnp.take(table, local, axis=0)                    # [B, S, d]
+    h = jnp.where(ok[..., None], h, 0).astype(cfg.dtype)
+    if layout == "sp":
+        return lax.psum_scatter(h, axes.tp_name, scatter_dimension=1,
+                                tiled=True)
+    if layout == "fp":
+        return lax.psum_scatter(h, axes.tp_name,
+                                scatter_dimension=h.ndim - 1, tiled=True)
+    return lax.psum(h, axes.tp_name)
+
+
+def gather_fsdp(w, spec: P, axes: MeshAxes, quant: bool = False):
+    """All-gather any 'dp'-sharded dims of a param (FSDP gather-on-use).
+
+    quant=True (serving, §Perf): symmetric-int8-quantize the local shard
+    per output column before the gather and dequantize after — halves the
+    wire bytes of the dominant decode collective at ~1e-2 relative error
+    (w8a16, standard serving practice)."""
+    for dim, entry in enumerate(spec):
+        if entry == "dp":
+            if quant and jnp.issubdtype(w.dtype, jnp.floating):
+                scale = jnp.max(jnp.abs(w), axis=dim, keepdims=True) / 127.0
+                scale = jnp.maximum(scale, 1e-12)
+                wq = jnp.round(w / scale).astype(jnp.int8)
+                wq = lax.all_gather(wq, axes.dp_names, axis=dim,
+                                    tiled=True)
+                sc = lax.all_gather(scale, axes.dp_names, axis=dim,
+                                    tiled=True)
+                # scales along the gathered dim are per-shard: broadcast
+                w = (wq.astype(jnp.bfloat16)
+                     * _expand_scales(sc, wq.shape, dim).astype(jnp.bfloat16))
+            else:
+                w = lax.all_gather(w, axes.dp_names, axis=dim, tiled=True)
+    return w
+
+
+def _expand_scales(sc, target_shape, dim):
+    """Per-shard scales gathered along `dim` -> broadcast to target."""
+    reps = target_shape[dim] // sc.shape[dim]
+    return jnp.repeat(sc, reps, axis=dim)[
+        tuple(slice(0, s) for s in target_shape)]
+
+
+def gather_tree_fsdp(params, decls, axes: MeshAxes, quant: bool = False):
+    """FSDP gather-on-use for a whole param subtree (VJP: reduce-scatter)."""
+    if decls is None:
+        return params
+    from repro.parallel.params import ParamDecl
+    return jax.tree.map(
+        lambda w, d: gather_fsdp(w, d.spec, axes, quant=quant), params,
+        decls, is_leaf=lambda v: isinstance(v, ParamDecl))
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense TP and phantom)
+# ---------------------------------------------------------------------------
+
+def mlp_decls(cfg, axes: MeshAxes, d: int, ff: int):
+    fs = cfg.fsdp
+    if cfg.phantom.apply_ffn and cfg.ffn_impl != "dense_force":
+        k = cfg.phantom.k
+        if cfg.mlp == "swiglu":
+            return {"gate": phantom_decls(d, ff, k, axes.tp, bias=False,
+                                          fsdp=fs, dp=axes.dp),
+                    "up": phantom_decls(d, ff, k, axes.tp, bias=False,
+                                        fsdp=fs, dp=axes.dp),
+                    "down": phantom_decls(ff, d, k, axes.tp, bias=False,
+                                          fsdp=fs, dp=axes.dp)}
+        return {"up": phantom_decls(d, ff, k, axes.tp, bias=True, fsdp=fs,
+                                    dp=axes.dp),
+                "down": phantom_decls(ff, d, k, axes.tp, bias=False,
+                                      fsdp=fs, dp=axes.dp)}
+    if cfg.mlp == "swiglu":
+        return {"gate": tpmod.col_linear_decls(d, ff, axes.tp, bias=False,
+                                               fsdp=fs),
+                "up": tpmod.col_linear_decls(d, ff, axes.tp, bias=False,
+                                             fsdp=fs),
+                "down": tpmod.row_linear_decls(ff, d, axes.tp, bias=False,
+                                               fsdp=fs)}
+    return {"up": tpmod.col_linear_decls(d, ff, axes.tp, bias=True, fsdp=fs),
+            "down": tpmod.row_linear_decls(ff, d, axes.tp, bias=False,
+                                           fsdp=fs)}
+
+
+def _mlp_act(cfg):
+    return {"swiglu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[cfg.mlp]
+
+
+def mlp_apply(cfg, layout: str, params, x, axes: MeshAxes, decls=None):
+    """x: residual shard -> residual shard (same layout).
+
+    phantom: stays feature-sharded; communicates only k-wide ghosts.
+    dense:   gather -> col -> act -> row -> reduce-scatter (Megatron-SP).
+    """
+    act = _mlp_act(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.phantom.apply_ffn:
+        pp = cfg.phantom
+        if cfg.mlp == "swiglu":
+            g = phantom_apply(pp, _fs(params["gate"], decls, "gate", axes, cfg.fsdp_gather_quant),
+                              x, axes, compute_dtype=dt)
+            u = phantom_apply(pp, _fs(params["up"], decls, "up", axes, cfg.fsdp_gather_quant),
+                              x, axes, compute_dtype=dt)
+            h = act(g) * u
+        else:
+            h = act(phantom_apply(pp, _fs(params["up"], decls, "up", axes, cfg.fsdp_gather_quant),
+                                  x, axes, compute_dtype=dt))
+        return phantom_apply(pp, _fs(params["down"], decls, "down", axes, cfg.fsdp_gather_quant),
+                             h, axes, compute_dtype=dt)
+
+    x_full = to_full(x, layout, axes)
+    if cfg.mlp == "swiglu":
+        g = tpmod.col_linear_apply(_fs(params["gate"], decls, "gate", axes, cfg.fsdp_gather_quant),
+                                   x_full, dt)
+        u = tpmod.col_linear_apply(_fs(params["up"], decls, "up", axes, cfg.fsdp_gather_quant),
+                                   x_full, dt)
+        h = act(g) * u
+    else:
+        h = act(tpmod.col_linear_apply(_fs(params["up"], decls, "up", axes, cfg.fsdp_gather_quant),
+                                       x_full, dt))
+    z = tpmod.row_linear_apply(_fs(params["down"], decls, "down", axes, cfg.fsdp_gather_quant),
+                               h, dt)
+    return from_partial(z, layout, axes)
+
+
+def _fs(params, decls, key, axes, quant: bool = False):
+    """Gather FSDP-sharded dims of a param subtree on use."""
+    if decls is None:
+        return params
+    sub = decls[key]
+    return jax.tree.map(
+        lambda w, d: gather_fsdp(w, d.spec, axes, quant=quant), params,
+        sub, is_leaf=lambda v: isinstance(v, ParamDecl))
+
+
+# ---------------------------------------------------------------------------
+# logit head + sharded, seq-chunked cross entropy
+# ---------------------------------------------------------------------------
+
+def head_decls(cfg):
+    fs = "dp" if cfg.fsdp else None
+    return {"w": ParamDecl((cfg.d_model, padded_vocab(cfg)), P(fs, "tp"),
+                           scale=cfg.d_model ** -0.5)}
+
+
+def xent_loss(cfg, layout: str, params, h, labels, axes: MeshAxes,
+              valid=None):
+    """h: residual shard; labels [B_loc, S] -> (sum_loss, n_valid) local
+    contributions (caller psums over dp; tp already reduced here).
+
+    Never materializes [B, S, V]: scans seq chunks of `cfg.loss_chunk`,
+    each chunk computing local-vocab logits + global logsumexp via psums.
+    """
+    w = params["w"]
+    if cfg.fsdp:
+        w = gather_fsdp(w, P("dp", "tp"), axes,
+                        quant=cfg.fsdp_gather_quant)
+    h_full = to_full(h, layout, axes)                 # [B, S, d]
+    B, S, d = h_full.shape
+    vshard = w.shape[1]
+    j = lax.axis_index(axes.tp_name)
+    vstart = j * vshard
+
+    chunk = min(cfg.loss_chunk, S)
+    n_chunks = S // chunk
+    assert S % chunk == 0, (S, chunk)
+
+    hc = h_full.reshape(B, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+    if valid is None:
+        vc = jnp.ones((n_chunks, B, chunk), bool)
+    else:
+        vc = valid.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    # mask padded vocab columns (global col id >= true vocab)
+    col_ok = (vstart + jnp.arange(vshard)) < cfg.vocab_size
+
+    def body(carry, xs):
+        hch, lch, vch = xs
+        logits = jnp.einsum("bcd,dv->bcv", hch.astype(jnp.float32),
+                            w.astype(jnp.float32))
+        logits = jnp.where(col_ok, logits, -1e30)
+        # the max shift is a mathematical constant: stop_gradient is exact
+        # (placed BEFORE pmax — pmax has no differentiation rule)
+        m = lax.pmax(jnp.max(lax.stop_gradient(logits), -1), axes.tp_name)
+        se = jnp.sum(jnp.exp(logits - m[..., None]), -1)
+        lse = jnp.log(lax.psum(se, axes.tp_name)) + m
+        loc = lch - vstart
+        ok = (loc >= 0) & (loc < vshard)
+        loc = jnp.clip(loc, 0, vshard - 1)
+        true_logit = jnp.take_along_axis(logits, loc[..., None],
+                                         axis=-1)[..., 0]
+        true_logit = lax.psum(jnp.where(ok, true_logit, 0.0), axes.tp_name)
+        tok_loss = jnp.where(vch, lse - true_logit, 0.0)
+        sl, nv = carry
+        return (sl + jnp.sum(tok_loss), nv + jnp.sum(vch)), None
+
+    (sum_loss, n_valid), _ = lax.scan(body, (jnp.float32(0), jnp.int32(0)),
+                                      (hc, lc, vc))
+    return sum_loss, n_valid
+
+
+def head_logits(cfg, layout: str, params, h_last, axes: MeshAxes):
+    """Logits for the last position only (decode): h_last [B, 1, d-shard]
+    -> full-vocab logits [B, 1, V] (gathered; decode batch is small)."""
+    w = params["w"]
+    if cfg.fsdp:
+        w = gather_fsdp(w, P("dp", "tp"), axes,
+                        quant=cfg.fsdp_gather_quant)
+    h_full = to_full(h_last, layout, axes) if layout == "fp" else h_last
+    logits_loc = jnp.einsum("btd,dv->btv", h_full.astype(jnp.float32),
+                            w.astype(jnp.float32))
+    vshard = w.shape[1]
+    j = lax.axis_index(axes.tp_name)
+    col_ok = (j * vshard + jnp.arange(vshard)) < cfg.vocab_size
+    logits_loc = jnp.where(col_ok, logits_loc, -1e30)
+    return lax.all_gather(logits_loc, axes.tp_name, axis=-1, tiled=True)

@@ -1,0 +1,509 @@
+"""Model assembly: decls + forward passes (train / prefill / decode) for
+every assigned architecture family.  All forward code runs inside
+``shard_map``; layers scan over stacked params (HLO size independent of
+depth), hybrid archs scan over superblocks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.blocks import (block_apply, block_decls, layer_plan,
+                                 plan_period)
+from repro.models.layers import (embed_apply, embed_decls, head_decls,
+                                 head_logits, norm_apply, norm_decls,
+                                 residual_layout, xent_loss)
+from repro.models.ssm import ssm_dims
+from repro.parallel.axes import MeshAxes
+from repro.parallel.params import ParamDecl, is_decl, param_count, stack
+
+VISION_TOKENS = 256
+AUX_LOSS_WEIGHT = 0.01
+
+
+def n_vision_tokens(cfg, seq_len: int) -> int:
+    return min(VISION_TOKENS, seq_len // 4)
+
+
+# ---------------------------------------------------------------------------
+# declarations
+# ---------------------------------------------------------------------------
+
+def _cast_decls(tree, dtype_str: str):
+    """Store params in cfg.param_dtype (bf16 for the largest archs)."""
+    import dataclasses
+    dt = jnp.dtype(dtype_str)
+    if dt == jnp.float32:
+        return tree
+    return jax.tree.map(
+        lambda d: (dataclasses.replace(d, dtype=dt)
+                   if jnp.issubdtype(jnp.dtype(d.dtype), jnp.floating)
+                   else d),
+        tree, is_leaf=is_decl)
+
+
+def model_decls(cfg: ModelConfig, axes: MeshAxes):
+    layout = residual_layout(cfg, "train")
+    d = {"embed": embed_decls(cfg),
+         "final_norm": norm_decls(cfg, layout, cfg.d_model),
+         "head": head_decls(cfg)}
+    if cfg.family == "encdec":
+        enc = block_decls(cfg, axes, "attn", "mlp", layout)
+        dec = block_decls(cfg, axes, "attn", "mlp", layout, cross=True)
+        d["enc_layers"] = stack(enc, cfg.encoder_layers)
+        d["dec_layers"] = stack(dec, cfg.num_layers)
+        d["enc_final_norm"] = norm_decls(cfg, layout, cfg.d_model)
+        return _cast_decls(d, cfg.param_dtype)
+    per = plan_period(cfg)
+    plan = layer_plan(cfg)[:per]
+    if per == 1:
+        layer = block_decls(cfg, axes, plan[0][0], plan[0][1], layout)
+        d["layers"] = stack(layer, cfg.num_layers)
+    else:
+        sup = {f"sub{i}": block_decls(cfg, axes, mx, ff, layout)
+               for i, (mx, ff) in enumerate(plan)}
+        d["layers"] = stack(sup, cfg.num_layers // per)
+    return _cast_decls(d, cfg.param_dtype)
+
+
+def _layer_decls_unstacked(cfg, axes):
+    layout = residual_layout(cfg, "train")
+    per = plan_period(cfg)
+    plan = layer_plan(cfg)[:per]
+    if per == 1:
+        return block_decls(cfg, axes, plan[0][0], plan[0][1], layout), plan
+    return ({f"sub{i}": block_decls(cfg, axes, mx, ff, layout)
+             for i, (mx, ff) in enumerate(plan)}, plan)
+
+
+# ---------------------------------------------------------------------------
+# embedding (+ modality stubs)
+# ---------------------------------------------------------------------------
+
+def _embed(cfg, layout, params, decls, batch, axes):
+    h = embed_apply(cfg, layout, params["embed"], batch["tokens"], axes,
+                    decls["embed"] if cfg.fsdp else None)
+    if cfg.frontend == "vision" and "vision_embeds" in batch:
+        v = batch["vision_embeds"].astype(h.dtype)         # [B, n_img, d]
+        n_img = v.shape[1]
+        p = axes.tp
+        j = lax.axis_index(axes.tp_name)
+        if layout == "fp":
+            fsh = h.shape[-1]
+            vloc = lax.dynamic_slice_in_dim(v, j * fsh, fsh, 2)
+            h = jnp.concatenate([vloc, h[:, n_img:, :]], axis=1)
+        elif layout == "sp":
+            C = h.shape[1]
+            pos = j * C + jnp.arange(C)
+            vpad = jnp.pad(v, ((0, 0), (0, C - n_img), (0, 0)))
+            h = jnp.where((pos < n_img)[None, :, None], vpad, h)
+        else:
+            h = jnp.concatenate([v, h[:, n_img:, :]], axis=1)
+    return h
+
+
+def _positions(cfg, batch, B, S):
+    if cfg.rope == "mrope":
+        return batch["positions"]                          # [3, B, S]
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+
+
+# ---------------------------------------------------------------------------
+# decoder-only / hybrid stacks
+# ---------------------------------------------------------------------------
+
+def _run_stack(cfg, layout, params, decls_layer, plan, h, positions, axes,
+               *, kind, cache=None, pos=None, causal=True):
+    """Scan the (super)layer stack.  Returns (h, new_cache, aux)."""
+    per = len(plan)
+    remat = cfg.remat in ("full", "dots") and kind == "train"
+
+    def body(carry, xs):
+        x, aux = carry
+        layer_params, layer_cache = xs
+        if per == 1:
+            x, new_kv, a = block_apply(
+                cfg, layout, layer_params, decls_layer, x, positions, axes,
+                mixer=plan[0][0], ffn=plan[0][1], kind=kind, causal=causal,
+                cache=layer_cache, pos=pos,
+                return_kv=(kind == "prefill"))
+            aux = aux + a
+        else:
+            new_kv = {}
+            for i, (mx, ff) in enumerate(plan):
+                sub = f"sub{i}"
+                x, kv_i, a = block_apply(
+                    cfg, layout, layer_params[sub], decls_layer[sub], x,
+                    positions, axes, mixer=mx, ffn=ff, kind=kind,
+                    causal=causal,
+                    cache=None if layer_cache is None else layer_cache[sub],
+                    pos=pos, return_kv=(kind == "prefill"))
+                new_kv[sub] = kv_i
+                aux = aux + a
+        return (x, aux), new_kv
+
+    if remat:
+        # "full": save only the carry (recompute everything in bwd —
+        # minimum memory, ~3x fwd HBM traffic in bwd).  "dots": save
+        # matmul outputs (skips most recompute, costs the saved-tensor
+        # residency — §Perf hillclimb knob).
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat == "dots" else None)
+        body = jax.checkpoint(body, policy=policy)
+
+    n_groups = jax.tree.leaves(params["layers"])[0].shape[0]
+    if cache is None:
+        cache_xs = _none_like_cache(cfg, plan, n_groups)
+    else:
+        cache_xs = cache
+    if cfg.scan_layers:
+        (h, aux), new_cache = lax.scan(body, (h, jnp.float32(0)),
+                                       (params["layers"], cache_xs))
+        return h, new_cache, aux
+    # unrolled python loop (dry-run cost analysis: scan bodies are counted
+    # once by cost_analysis, so the roofline pass unrolls)
+    carry = (h, jnp.float32(0))
+    outs = []
+    for i in range(n_groups):
+        xs_i = jax.tree.map(lambda a: a[i], (params["layers"], cache_xs))
+        carry, kv_i = body(carry, xs_i)
+        outs.append(kv_i)
+    h, aux = carry
+    new_cache = (jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+                 if outs and outs[0] is not None else None)
+    return h, new_cache, aux
+
+
+def _none_like_cache(cfg, plan, n_groups):
+    """Scan xs stand-in when there is no cache (train): a pytree of Nones
+    isn't scannable, so use per-group dummy zeros of shape [n]."""
+    if len(plan) == 1:
+        return jnp.zeros((n_groups,), jnp.int8)
+    return {f"sub{i}": jnp.zeros((n_groups,), jnp.int8)
+            for i in range(len(plan))}
+
+
+# ---------------------------------------------------------------------------
+# public forwards (inside shard_map)
+# ---------------------------------------------------------------------------
+
+def forward_train(cfg: ModelConfig, axes: MeshAxes, params, batch):
+    """batch: tokens/labels [B_loc, S] (+positions/vision_embeds/frames).
+    Returns (sum_loss, n_valid, aux) — local (pre-dp-psum) contributions."""
+    if cfg.family == "encdec":
+        return _encdec_forward_train(cfg, axes, params, batch)
+    layout = residual_layout(cfg, "train")
+    decls_layer, plan = _layer_decls_unstacked(cfg, axes)
+    B, S = batch["tokens"].shape
+    h = _embed(cfg, layout, params, model_decls_cache(cfg, axes), batch,
+               axes)
+    positions = _positions(cfg, batch, B, S)
+    h, _, aux = _run_stack(cfg, layout, params, decls_layer, plan, h,
+                           positions, axes, kind="train")
+    h = norm_apply(cfg, layout, params["final_norm"], h, axes)
+    sum_loss, n_valid = xent_loss(cfg, layout, params["head"], h,
+                                  batch["labels"], axes)
+    return sum_loss, n_valid, aux
+
+
+def forward_logits(cfg: ModelConfig, axes: MeshAxes, params, batch):
+    """Full per-position logits [B, S, V_pad] — test/debug reference path
+    (materializes the whole logit tensor; smoke configs only)."""
+    from repro.models.layers import padded_vocab, to_full
+    layout = residual_layout(cfg, "train")
+    if cfg.family == "encdec":
+        memory, _ = _enc_stack(cfg, layout, params, axes, batch["frames"])
+        B, S = batch["tokens"].shape
+        h = embed_apply(cfg, layout, params["embed"], batch["tokens"], axes)
+        positions = _positions(cfg, batch, B, S)
+        h, _, _ = _dec_stack(cfg, layout, params, axes, h, positions,
+                             memory, kind="train")
+    else:
+        decls_layer, plan = _layer_decls_unstacked(cfg, axes)
+        B, S = batch["tokens"].shape
+        h = _embed(cfg, layout, params, model_decls_cache(cfg, axes),
+                   batch, axes)
+        positions = _positions(cfg, batch, B, S)
+        h, _, _ = _run_stack(cfg, layout, params, decls_layer, plan, h,
+                             positions, axes, kind="train")
+    h = norm_apply(cfg, layout, params["final_norm"], h, axes)
+    h_full = to_full(h, layout, axes)
+    w = params["head"]["w"]
+    logits_loc = jnp.einsum("bsd,dv->bsv", h_full.astype(jnp.float32),
+                            w.astype(jnp.float32))
+    j = lax.axis_index(axes.tp_name)
+    vshard = w.shape[1]
+    col_ok = (j * vshard + jnp.arange(vshard)) < cfg.vocab_size
+    logits_loc = jnp.where(col_ok, logits_loc, -1e30)
+    return lax.all_gather(logits_loc, axes.tp_name, axis=-1, tiled=True)
+
+
+def forward_prefill(cfg: ModelConfig, axes: MeshAxes, params, batch):
+    """Returns (last_token_logits [B,1,V], cache)."""
+    if cfg.family == "encdec":
+        return _encdec_forward_prefill(cfg, axes, params, batch)
+    layout = residual_layout(cfg, "prefill")
+    decls_layer, plan = _layer_decls_unstacked(cfg, axes)
+    B, S = batch["tokens"].shape
+    h = _embed(cfg, layout, params, model_decls_cache(cfg, axes), batch,
+               axes)
+    positions = _positions(cfg, batch, B, S)
+    h, cache, _ = _run_stack(cfg, layout, params, decls_layer, plan, h,
+                             positions, axes, kind="prefill")
+    h = norm_apply(cfg, layout, params["final_norm"], h, axes)
+    h_last = _last_position(h, layout, axes)
+    logits = head_logits(cfg, layout, params["head"], h_last, axes)
+    return logits, cache
+
+
+def forward_decode(cfg: ModelConfig, axes: MeshAxes, params, cache,
+                   tokens, pos):
+    """tokens [B_loc, 1]; pos: int32 scalar.  Returns (logits, new_cache)."""
+    layout = residual_layout(cfg, "decode")
+    decls_layer, plan = _layer_decls_unstacked(cfg, axes)
+    if cfg.family == "encdec":
+        return _encdec_forward_decode(cfg, axes, params, cache, tokens, pos)
+    h = embed_apply(cfg, layout, params["embed"], tokens, axes,
+                    model_decls_cache(cfg, axes)["embed"] if cfg.fsdp
+                    else None)
+    h, new_cache, _ = _run_stack(cfg, layout, params, decls_layer, plan, h,
+                                 None, axes, kind="decode", cache=cache,
+                                 pos=pos)
+    h = norm_apply(cfg, layout, params["final_norm"], h, axes)
+    logits = head_logits(cfg, layout, params["head"], h, axes)
+    return logits, new_cache
+
+
+def _last_position(h, layout, axes):
+    if layout == "fp":
+        return h[:, -1:, :]
+    if layout == "sp":
+        j = lax.axis_index(axes.tp_name)
+        p = axes.tp
+        mine = jnp.where(j == p - 1, 1.0, 0.0).astype(h.dtype)
+        return lax.psum(h[:, -1:, :] * mine, axes.tp_name)
+    return h[:, -1:, :]
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (seamless)
+# ---------------------------------------------------------------------------
+
+def _enc_stack(cfg, layout, params, axes, frames, kind="train"):
+    """frames [B, S_enc, d] replicated input -> (memory_full [B,S,d],
+    enc hidden in layout)."""
+    decls = block_decls(cfg, axes, "attn", "mlp", layout)
+    j = lax.axis_index(axes.tp_name)
+    p = axes.tp
+    # shard the replicated frames into the residual layout
+    if layout == "fp":
+        fsh = frames.shape[-1] // p
+        h = lax.dynamic_slice_in_dim(frames, j * fsh, fsh, 2)
+    else:
+        C = frames.shape[1] // p
+        h = lax.dynamic_slice_in_dim(frames, j * C, C, 1)
+    h = h.astype(cfg.dtype)
+    B, S = frames.shape[0], frames.shape[1]
+    positions = _positions(cfg, {}, B, S)
+
+    def body(carry, layer_params):
+        x, _ = carry
+        x, _, a = block_apply(cfg, layout, layer_params, decls, x,
+                              positions, axes, mixer="attn", ffn="mlp",
+                              kind="train", causal=False)
+        return (x, a), None
+
+    bodyf = jax.checkpoint(body) if (cfg.remat == "full"
+                                     and kind == "train") else body
+    if cfg.scan_layers:
+        (h, _), _ = lax.scan(bodyf, (h, jnp.float32(0)),
+                             params["enc_layers"])
+    else:
+        carry = (h, jnp.float32(0))
+        n = jax.tree.leaves(params["enc_layers"])[0].shape[0]
+        for i in range(n):
+            carry, _ = bodyf(carry,
+                             jax.tree.map(lambda a: a[i],
+                                          params["enc_layers"]))
+        h = carry[0]
+    h = norm_apply(cfg, layout, params["enc_final_norm"], h, axes)
+    from repro.models.layers import to_full
+    return to_full(h, layout, axes), h
+
+
+def _dec_stack(cfg, layout, params, axes, h, positions, memory, *, kind,
+               cache=None, pos=None):
+    decls = block_decls(cfg, axes, "attn", "mlp", layout, cross=True)
+
+    def body(carry, xs):
+        x, aux = carry
+        layer_params, layer_cache = xs
+        x, new_kv, a = block_apply(
+            cfg, layout, layer_params, decls, x, positions, axes,
+            mixer="attn", ffn="mlp", kind=kind, causal=True,
+            cache=layer_cache, pos=pos, memory=memory,
+            return_kv=(kind == "prefill"))
+        return (x, aux + a), new_kv
+
+    bodyf = jax.checkpoint(body) if (cfg.remat == "full"
+                                     and kind == "train") else body
+    n = jax.tree.leaves(params["dec_layers"])[0].shape[0]
+    cache_xs = cache if cache is not None else jnp.zeros((n,), jnp.int8)
+    if cfg.scan_layers:
+        (h, aux), new_cache = lax.scan(bodyf, (h, jnp.float32(0)),
+                                       (params["dec_layers"], cache_xs))
+        return h, new_cache, aux
+    carry = (h, jnp.float32(0))
+    outs = []
+    for i in range(n):
+        carry, kv_i = bodyf(carry, jax.tree.map(
+            lambda a: a[i], (params["dec_layers"], cache_xs)))
+        outs.append(kv_i)
+    h, aux = carry
+    new_cache = (jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+                 if outs and outs[0] is not None else None)
+    return h, new_cache, aux
+
+
+def _encdec_forward_train(cfg, axes, params, batch):
+    layout = residual_layout(cfg, "train")
+    memory, _ = _enc_stack(cfg, layout, params, axes, batch["frames"])
+    B, S = batch["tokens"].shape
+    h = embed_apply(cfg, layout, params["embed"], batch["tokens"], axes)
+    positions = _positions(cfg, batch, B, S)
+    h, _, aux = _dec_stack(cfg, layout, params, axes, h, positions, memory,
+                           kind="train")
+    h = norm_apply(cfg, layout, params["final_norm"], h, axes)
+    sum_loss, n_valid = xent_loss(cfg, layout, params["head"], h,
+                                  batch["labels"], axes)
+    return sum_loss, n_valid, aux
+
+
+def _encdec_forward_prefill(cfg, axes, params, batch):
+    layout = residual_layout(cfg, "prefill")
+    memory, _ = _enc_stack(cfg, layout, params, axes, batch["frames"],
+                           kind="prefill")
+    B, S = batch["tokens"].shape
+    h = embed_apply(cfg, layout, params["embed"], batch["tokens"], axes)
+    positions = _positions(cfg, batch, B, S)
+    h, cache, _ = _dec_stack(cfg, layout, params, axes, h, positions,
+                             memory, kind="prefill")
+    h = norm_apply(cfg, layout, params["final_norm"], h, axes)
+    h_last = _last_position(h, layout, axes)
+    logits = head_logits(cfg, layout, params["head"], h_last, axes)
+    return logits, cache
+
+
+def _encdec_forward_decode(cfg, axes, params, cache, tokens, pos):
+    layout = residual_layout(cfg, "decode")
+    h = embed_apply(cfg, layout, params["embed"], tokens, axes)
+    h, new_cache, _ = _dec_stack(cfg, layout, params, axes, h, None, None,
+                                 kind="decode", cache=cache, pos=pos)
+    h = norm_apply(cfg, layout, params["final_norm"], h, axes)
+    logits = head_logits(cfg, layout, params["head"], h, axes)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache declarations (for serve/dry-run: abstract global shapes + specs)
+# ---------------------------------------------------------------------------
+
+def cache_decls(cfg: ModelConfig, axes: MeshAxes, batch: int, max_len: int,
+                enc_len: int | None = None):
+    """Global-shape ShapeDtypeStruct pytree + PartitionSpec pytree for the
+    decode cache, structured to match the scan grouping of model_decls."""
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim()
+    bspec = "dp" if batch % max(axes.dp, 1) == 0 and axes.dp > 1 else None
+
+    def attn_cache():
+        shape = (batch, max_len, kv, hd)
+        return ({"k": jax.ShapeDtypeStruct(shape, jnp.bfloat16),
+                 "v": jax.ShapeDtypeStruct(shape, jnp.bfloat16)},
+                {"k": P(bspec, "tp", None, None),
+                 "v": P(bspec, "tp", None, None)})
+
+    def mamba_cache():
+        d_inner, H, N, hdm = ssm_dims(cfg)
+        # kv_cache_quant also downgrades the SSD state fp32->bf16
+        # (serving §Perf: halves the dominant decode state traffic)
+        sdt = jnp.bfloat16 if cfg.kv_cache_quant else jnp.float32
+        return ({"conv": jax.ShapeDtypeStruct(
+                    (batch, cfg.ssm.conv_width - 1, d_inner), jnp.bfloat16),
+                 "ssm": jax.ShapeDtypeStruct((batch, H, hdm, N), sdt)},
+                {"conv": P(bspec, None, "tp"),
+                 "ssm": P(bspec, "tp", None, None)})
+
+    if cfg.family == "encdec":
+        self_sds, self_spec = attn_cache()
+        ck = (batch, enc_len or max_len, kv, hd)
+        cross_sds = {"k": jax.ShapeDtypeStruct(ck, jnp.bfloat16),
+                     "v": jax.ShapeDtypeStruct(ck, jnp.bfloat16)}
+        cross_spec = {"k": P(bspec, "tp", None, None),
+                      "v": P(bspec, "tp", None, None)}
+        sds = {"self": self_sds, "cross": cross_sds}
+        spec = {"self": self_spec, "cross": cross_spec}
+        return (_stack_sds(sds, cfg.num_layers),
+                _stack_spec(spec, cfg.num_layers))
+
+    per = plan_period(cfg)
+    plan = layer_plan(cfg)[:per]
+    n_groups = cfg.num_layers // per
+
+    def one(mx):
+        return attn_cache() if mx == "attn" else mamba_cache()
+
+    if per == 1:
+        sds, spec = one(plan[0][0])
+        return _stack_sds(sds, n_groups), _stack_spec(spec, n_groups)
+    sds = {}
+    spec = {}
+    for i, (mx, _f) in enumerate(plan):
+        s, sp = one(mx)
+        sds[f"sub{i}"] = s
+        spec[f"sub{i}"] = sp
+    return _stack_sds(sds, n_groups), _stack_spec(spec, n_groups)
+
+
+def _stack_sds(tree, n):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+
+def _stack_spec(tree, n):
+    return jax.tree.map(lambda s: P(*((None,) + tuple(s))), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+_DECLS_CACHE = {}
+
+
+def model_decls_cache(cfg, axes):
+    key = (cfg.name, cfg.ffn_impl, cfg.phantom, axes.tp, axes.dp, cfg.fsdp)
+    if key not in _DECLS_CACHE:
+        _DECLS_CACHE[key] = model_decls(cfg, axes)
+    return _DECLS_CACHE[key]
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False,
+                 tp: int = 16) -> int:
+    if cfg.family == "ffn":
+        from repro.core.ffn import ffn_model_params
+        return ffn_model_params(cfg, tp)
+    axes = MeshAxes(tp=tp, dp=1, dp_names=("data",))
+    decls = model_decls(cfg, axes)
+    total = param_count(decls)
+    if active_only and cfg.moe is not None:
+        m = cfg.moe
+        n_moe = sum(1 for _mx, ff in layer_plan(cfg) if ff == "moe")
+        per_layer_expert = (m.num_experts * cfg.d_model * m.d_ff_expert
+                            * (3 if cfg.mlp == "swiglu" else 2))
+        inactive = per_layer_expert * (1 - m.top_k / m.num_experts) * n_moe
+        total -= int(inactive)
+    return total

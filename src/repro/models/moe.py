@@ -1,0 +1,256 @@
+"""Mixture-of-Experts with top-k routing and capacity-based, index-driven
+dispatch (take/scatter-add, NOT the GShard one-hot einsum — the einsum
+dispatch costs O(T^2) FLOPs at these token counts and would wreck the
+roofline; DESIGN.md §6).
+
+Two expert partitioning strategies over the model axis:
+
+* ``expert`` (olmoe 64e, jamba 16e): experts sharded over the model axis;
+  one all-to-all routes capacity slots to expert owners and (in fp layout)
+  simultaneously un-shards features, its inverse routes outputs back.
+* ``tensor`` (granite 40e, E % tp != 0): every expert's d_ff is sharded
+  over the model axis; tokens are gathered once (the standard Megatron AG)
+  and expert outputs reduce-scatter back.
+
+Routing is computed identically on every rank (router weights replicated
+or psum'd logits), so dispatch indices agree across the mesh without
+communication.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import (_mlp_act, from_partial, gather_fsdp,
+                                 to_full)
+from repro.parallel.axes import MeshAxes
+from repro.parallel.params import ParamDecl
+
+
+# ---------------------------------------------------------------------------
+# declarations
+# ---------------------------------------------------------------------------
+
+def moe_decls(cfg, axes: MeshAxes):
+    m = cfg.moe
+    d, E, ff = cfg.d_model, m.num_experts, m.d_ff_expert
+    fs = "dp" if cfg.fsdp else None
+    swiglu = cfg.mlp == "swiglu"
+    if m.partition == "expert":
+        assert E % axes.tp == 0, (E, axes.tp)
+        from repro.models.layers import residual_layout
+        layout = residual_layout(cfg, "train")
+        # fp layout: router input is a feature shard -> row-sharded router
+        # (partial logits psum'd); sp/rep layouts see full features ->
+        # replicated router.
+        rspec = P("tp", None) if layout == "fp" else P()
+        espec_in = P("tp", fs, None)
+        espec_out = P("tp", None, fs)
+        dec = {
+            "router": {"w": ParamDecl((d, E), rspec, scale=d ** -0.5)},
+            "w_up": {"w": ParamDecl((E, d, ff), espec_in)},
+            "w_down": {"w": ParamDecl((E, ff, d), espec_out)},
+        }
+        if swiglu:
+            dec["w_gate"] = {"w": ParamDecl((E, d, ff), espec_in)}
+    else:  # tensor partition (works for any E)
+        dec = {
+            "router": {"w": ParamDecl((d, E), P(), scale=d ** -0.5)},
+            "w_up": {"w": ParamDecl((E, d, ff), P(None, fs, "tp"))},
+            "w_down": {"w": ParamDecl((E, ff, d), P(None, "tp", fs))},
+        }
+        if swiglu:
+            dec["w_gate"] = {"w": ParamDecl((E, d, ff), P(None, fs, "tp"))}
+    return dec
+
+
+# ---------------------------------------------------------------------------
+# routing: top-k + capacity assignment (index-based)
+# ---------------------------------------------------------------------------
+
+def route(logits, top_k: int, capacity: int):
+    """logits [T, E] -> (disp_tok [E, C], disp_ok [E, C], combine [T, K]
+    gate weights, combine_slot [T, K] flat slot ids or -1 if dropped).
+
+    Position-in-expert via cumsum over token order (deterministic,
+    mesh-replicated).
+    """
+    T, E = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, exp_idx = lax.top_k(probs, top_k)           # [T, K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # one-hot per (t, k) slot over experts; rank within expert = cumsum
+    oh = jax.nn.one_hot(exp_idx, E, dtype=jnp.int32)       # [T, K, E]
+    ohf = oh.reshape(T * top_k, E)
+    pos = jnp.cumsum(ohf, axis=0) - ohf                    # rank in expert
+    pos = jnp.sum(pos * ohf, axis=-1)                      # [T*K]
+    e_flat = exp_idx.reshape(-1)
+    keep = pos < capacity
+
+    # dispatch tables; dropped entries route to the sentinel row E*C
+    # (NOT e*C+capacity, which would collide with expert e+1's slot 0)
+    slot = jnp.where(keep, e_flat * capacity + pos, E * capacity)
+    disp_tok = jnp.zeros((E * capacity + 1,), jnp.int32)
+    tok_ids = jnp.repeat(jnp.arange(T), top_k)
+    disp_tok = disp_tok.at[slot].set(tok_ids, mode="drop")
+    disp_ok = jnp.zeros((E * capacity + 1,), bool).at[slot].set(
+        keep, mode="drop")
+    combine_slot = jnp.where(keep, slot, -1).reshape(T, top_k)
+    return (disp_tok[:-1].reshape(E, capacity),
+            disp_ok[:-1].reshape(E, capacity),
+            gate_vals, combine_slot)
+
+
+def moe_capacity(tokens: int, E: int, top_k: int, cf: float) -> int:
+    c = int(tokens * top_k * cf / E)
+    return max(8, c + (-c) % 8)   # pad to a multiple of 8 lanes
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+def moe_apply(cfg, layout: str, params, x, axes: MeshAxes, decls=None):
+    m = cfg.moe
+    if m.partition == "expert":
+        return _moe_expert_partition(cfg, layout, params, x, axes, decls)
+    return _moe_tensor_partition(cfg, layout, params, x, axes, decls)
+
+
+def _expert_ffn(cfg, params, decls, xin, axes, dtype):
+    """xin [E_loc, C', d] -> [E_loc, C', d] batched expert GEMMs."""
+    act = _mlp_act(cfg)
+    w_up = _w(params, decls, "w_up", axes,
+              cfg.fsdp_gather_quant).astype(dtype)
+    w_down = _w(params, decls, "w_down", axes,
+                cfg.fsdp_gather_quant).astype(dtype)
+    if cfg.mlp == "swiglu":
+        w_gate = _w(params, decls, "w_gate", axes,
+                    cfg.fsdp_gather_quant).astype(dtype)
+        h = act(jnp.einsum("ecd,edf->ecf", xin, w_gate)) \
+            * jnp.einsum("ecd,edf->ecf", xin, w_up)
+    else:
+        h = act(jnp.einsum("ecd,edf->ecf", xin, w_up))
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def _moe_expert_partition(cfg, layout, params, x, axes, decls):
+    """Experts sharded over the model axis.  Three residual layouts:
+
+    fp  — x [B, S, d/p]: all tokens, feature shard.  One all-to-all moves
+          capacity slots to expert owners AND un-shards features.
+    sp  — x [B, S/p, d]: this rank's tokens, full features.  Classic EP:
+          all-to-all swaps (expert -> owner) against (source rank).
+    rep — x [B, 1, d] replicated (dense decode): each rank computes its
+          own experts' contributions, psum combines.
+    """
+    m = cfg.moe
+    dtype = jnp.dtype(cfg.dtype)
+    p = axes.tp
+    E = m.num_experts
+    B, S = x.shape[0], x.shape[1]
+    T = B * S
+    xf = x.reshape(T, -1)
+
+    if layout == "fp":
+        # routing (replicated decisions): partial logits + psum
+        rl = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        params["router"]["w"].astype(jnp.float32))
+        logits = lax.psum(rl, axes.tp_name)                 # [T, E]
+    else:
+        logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                            params["router"]["w"].astype(jnp.float32))
+    C = moe_capacity(T, E, m.top_k, m.capacity_factor)
+    disp_tok, disp_ok, gates, combine_slot = route(logits, m.top_k, C)
+
+    # dispatch: [E, C, d_local_or_full]
+    xin = jnp.take(xf, disp_tok.reshape(-1), axis=0)
+    xin = jnp.where(disp_ok.reshape(-1, 1), xin, 0)
+    xin = xin.reshape(E, C, -1).astype(dtype)
+
+    if layout == "fp":
+        # split experts -> concat features: [E/p, C, d]
+        xin = lax.all_to_all(xin, axes.tp_name, split_axis=0,
+                             concat_axis=2, tiled=True)
+        yout = _expert_ffn(cfg, params, decls, xin, axes, dtype)
+        yout = lax.all_to_all(yout, axes.tp_name, split_axis=2,
+                              concat_axis=0, tiled=True)
+    elif layout == "sp":
+        # split experts -> concat capacity (tokens from all source ranks):
+        # [E/p, p*C, d]
+        xin = lax.all_to_all(xin, axes.tp_name, split_axis=0,
+                             concat_axis=1, tiled=True)
+        yout = _expert_ffn(cfg, params, decls, xin, axes, dtype)
+        yout = lax.all_to_all(yout, axes.tp_name, split_axis=1,
+                              concat_axis=0, tiled=True)
+    else:  # rep: tokens replicated; each rank serves its expert slice
+        j = lax.axis_index(axes.tp_name)
+        E_loc = E // p
+        xin_loc = lax.dynamic_slice_in_dim(xin, j * E_loc, E_loc, 0)
+        yout_loc = _expert_ffn(cfg, params, decls, xin_loc, axes, dtype)
+        yout = jnp.zeros((E, C, xf.shape[-1]), yout_loc.dtype)
+        yout = lax.dynamic_update_slice_in_dim(yout, yout_loc, j * E_loc,
+                                               0)
+        yout = lax.psum(yout, axes.tp_name)
+
+    # combine: weighted scatter back to tokens
+    yflat = yout.reshape(E * C, -1)
+    ok = combine_slot >= 0                                  # [T, K]
+    slots = jnp.where(ok, combine_slot, 0)
+    picked = jnp.take(yflat, slots.reshape(-1), axis=0)
+    picked = picked.reshape(T, m.top_k, -1)
+    w = jnp.where(ok, gates, 0.0)[..., None].astype(picked.dtype)
+    y = jnp.sum(picked * w, axis=1)
+    return y.reshape(x.shape), _aux_loss(logits, E)
+
+
+def _moe_tensor_partition(cfg, layout, params, x, axes, decls):
+    """sp layout: x [B, S/p, d].  Tokens gathered once (Megatron AG), every
+    expert's d_ff sharded; outputs reduce-scatter back."""
+    m = cfg.moe
+    dtype = jnp.dtype(cfg.dtype)
+    E = m.num_experts
+    x_full = to_full(x, layout, axes)                       # [B, S, d]
+    B, S, d = x_full.shape
+    T = B * S
+    xf = x_full.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        params["router"]["w"].astype(jnp.float32))
+    C = moe_capacity(T, E, m.top_k, m.capacity_factor)
+    disp_tok, disp_ok, gates, combine_slot = route(logits, m.top_k, C)
+
+    xin = jnp.take(xf, disp_tok.reshape(-1), axis=0)
+    xin = jnp.where(disp_ok.reshape(-1, 1), xin, 0)
+    xin = xin.reshape(E, C, d).astype(dtype)
+
+    yout = _expert_ffn(cfg, params, decls, xin, axes, dtype)  # ff sharded
+    # yout is a PARTIAL sum over the sharded d_ff contraction dim:
+    yflat = yout.reshape(E * C, d)
+    ok = combine_slot >= 0
+    slots = jnp.where(ok, combine_slot, 0)
+    picked = jnp.take(yflat, slots.reshape(-1), axis=0).reshape(T, m.top_k, d)
+    w = jnp.where(ok, gates, 0.0)[..., None].astype(picked.dtype)
+    y = jnp.sum(picked * w, axis=1).reshape(B, S, d)
+    y = from_partial(y, layout, axes)                       # RS the partials
+    return y, _aux_loss(logits, E)
+
+
+def _aux_loss(logits, E):
+    """Load-balancing auxiliary loss (Switch-style): E * sum(f_e * P_e)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    top1 = jnp.argmax(probs, -1)
+    f = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), axis=0)
+    P_ = jnp.mean(probs, axis=0)
+    return E * jnp.sum(f * P_)
+
+
+def _w(params, decls, key, axes, quant: bool = False):
+    if decls is None:
+        return params[key]["w"]
+    return gather_fsdp(params[key]["w"], decls[key]["w"].spec, axes,
+                       quant=quant)

@@ -1,0 +1,75 @@
+"""Rotary position embeddings: full, partial (chatglm3 "2d"/stablelm),
+and M-RoPE (qwen2-vl 3-axis multimodal rope).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _rotate_half(x):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([-x2, x1], axis=-1)
+
+
+def _angles(positions, rot_dim: int, theta: float):
+    """positions [...,] -> cos/sin [..., rot_dim]."""
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32)
+                           / rot_dim))
+    ang = positions[..., None].astype(jnp.float32) * inv     # [..., rot/2]
+    ang = jnp.concatenate([ang, ang], axis=-1)               # [..., rot]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, *, fraction: float = 1.0,
+               theta: float = 10000.0):
+    """x: [B, S, H, hd]; positions: [B, S] (or [S]).  Rotates the first
+    fraction*hd dims (chatglm3's 2d rope == fraction 0.5; stablelm 0.25).
+    """
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    cos, sin = _angles(positions, rot, theta)                # [B, S, rot]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    xr = xr * cos.astype(x.dtype) + _rotate_half(xr) * sin.astype(x.dtype)
+    return jnp.concatenate([xr, xp], axis=-1)
+
+
+# M-RoPE (qwen2-vl): head dim split in 3 sections rotated by (t, h, w)
+# position components.  Section split follows the 1/4-3/8-3/8 convention.
+def mrope_sections(hd: int):
+    half = hd // 2
+    s0 = half // 4
+    s1 = (half - s0) // 2
+    s2 = half - s0 - s1
+    return (2 * s0, 2 * s1, 2 * s2)
+
+
+def apply_mrope(x, positions3, *, theta: float = 10000.0):
+    """x: [B, S, H, hd]; positions3: [3, B, S] (t/h/w position ids)."""
+    hd = x.shape[-1]
+    secs = mrope_sections(hd)
+    outs = []
+    off = 0
+    for i, sec in enumerate(secs):
+        outs.append(apply_rope(x[..., off:off + sec], positions3[i],
+                               fraction=1.0, theta=theta))
+        off += sec
+    if off < hd:
+        outs.append(x[..., off:])
+    return jnp.concatenate(outs, axis=-1)
+
+
+def rope_for(cfg, x, positions):
+    """Dispatch on cfg.rope. positions: [B,S] or [3,B,S] for mrope."""
+    if cfg.rope == "none":
+        return x
+    if cfg.rope == "mrope":
+        return apply_mrope(x, positions, theta=cfg.rope_theta)
+    frac = cfg.rope_fraction if cfg.rope == "partial" else 1.0
+    return apply_rope(x, positions, fraction=frac, theta=cfg.rope_theta)

@@ -1,0 +1,299 @@
+"""Mamba2 (SSD — state-space duality) blocks, TPU-adapted.
+
+Chunked SSD algorithm (arXiv:2405.21060 §6): the sequence is split into
+Q-length chunks; intra-chunk interactions use the quadratic (attention-
+like) form, inter-chunk information flows through the [N x hd] state via a
+short lax.scan over chunks.  Everything is batched over heads.
+
+Sharding: d_inner (and so SSD heads) over the model axis; B/C projections
+are per-group (G small) and replicated; the scan itself is local per head
+— there is no cross-rank weight block, which is why the paper's phantom
+factorization applies only to the in/out projections here
+(DESIGN.md §Arch-applicability).
+
+Simplification noted in DESIGN.md: the short causal conv is applied to x
+only (not the BC streams).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.phantom import phantom_apply, phantom_decls
+from repro.core import tp as tpmod
+from repro.models.layers import from_partial, to_full
+from repro.parallel.axes import MeshAxes
+from repro.parallel.params import ParamDecl
+
+
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    return d_inner, H, s.d_state, s.head_dim
+
+
+# ---------------------------------------------------------------------------
+# declarations
+# ---------------------------------------------------------------------------
+
+def ssm_decls(cfg, axes: MeshAxes):
+    d = cfg.d_model
+    d_inner, H, N, hd = ssm_dims(cfg)
+    p = axes.tp
+    s = cfg.ssm
+    fs = "dp" if cfg.fsdp else None
+    phantom = cfg.phantom.apply_attn_proj and d_inner % p == 0
+
+    if phantom:
+        proj_in = lambda nout: phantom_decls(d, nout, cfg.phantom.k, p,
+                                             bias=False, fsdp=cfg.fsdp,
+                                             dp=axes.dp)
+        proj_out = phantom_decls(d_inner, d, cfg.phantom.k, p, bias=False,
+                                 fsdp=cfg.fsdp, dp=axes.dp)
+    else:
+        proj_in = lambda nout: tpmod.col_linear_decls(d, nout, p,
+                                                      bias=False, fsdp=cfg.fsdp)
+        proj_out = tpmod.row_linear_decls(d_inner, d, p, bias=False,
+                                          fsdp=cfg.fsdp)
+    assert H % p == 0, (H, p)
+    return {
+        "wz": proj_in(d_inner),
+        "wx": proj_in(d_inner),
+        "wbc": {"w": ParamDecl((d, 2 * s.ngroups * N), P(),
+                               scale=d ** -0.5)},           # replicated
+        "wdt": {"w": ParamDecl((d, H), P(None, "tp"), scale=d ** -0.5),
+                "b": ParamDecl((H,), P("tp"), init="zeros")},
+        "out": proj_out,
+        "A_log": ParamDecl((H,), P("tp"), init="zeros"),
+        "Dskip": ParamDecl((H,), P("tp"), init="ones"),
+        "conv_w": ParamDecl((s.conv_width, d_inner), P(None, "tp"),
+                            scale=s.conv_width ** -0.5),
+        "norm_scale": ParamDecl((d_inner,), P("tp"), init="ones"),
+    }
+
+
+def ssm_cache_shape(cfg, axes: MeshAxes, batch: int):
+    """Decode state: conv rolling buffer + SSD state (local shapes have
+    tp-sharded dims; global shapes given here)."""
+    d_inner, H, N, hd = ssm_dims(cfg)
+    return {
+        "conv": ((batch, cfg.ssm.conv_width - 1, d_inner),
+                 P("dp", None, "tp")),
+        "ssm": ((batch, H, hd, N), P("dp", "tp", None, None)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _pick_chunk(S: int, chunk: int) -> int:
+    """Largest divisor of S that is <= chunk (ragged prompt lengths)."""
+    q = min(chunk, S)
+    while S % q:
+        q -= 1
+    return q
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk: int, initial_state=None):
+    """x [B,S,H,hd]; dt [B,S,H] (>0); A [H] (<0); Bm/Cm [B,S,N].
+    Returns (y [B,S,H,hd], final_state [B,H,hd,N])."""
+    Bsz, S, H, hd = x.shape
+    N = Bm.shape[-1]
+    Q = _pick_chunk(S, chunk)
+    nc = S // Q
+
+    xr = x.reshape(Bsz, nc, Q, H, hd)
+    dtr = dt.reshape(Bsz, nc, Q, H)
+    Br = Bm.reshape(Bsz, nc, Q, N)
+    Cr = Cm.reshape(Bsz, nc, Q, N)
+
+    dA = dtr * A[None, None, None, :]                     # [B,nc,Q,H] (<0)
+    cum = jnp.cumsum(dA, axis=2)                          # inclusive
+    # intra-chunk: scores[i,j] = C_i.B_j * exp(cum_i - cum_j) * dt_j, i>=j
+    CB = jnp.einsum("bnim,bnjm->bnij", Cr, Br)            # [B,nc,Q,Q]
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,Q,Q,H]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = CB[..., None] * decay * dtr[:, :, None, :, :]  # [B,nc,i,j,H]
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", scores, xr)
+
+    # chunk-local end states: sum_j exp(cum_Q - cum_j) dt_j  B_j (x) x_j
+    w_end = jnp.exp(cum[:, :, -1:, :] - cum) * dtr        # [B,nc,Q,H]
+    states = jnp.einsum("bnjh,bnjm,bnjhp->bnhpm", w_end, Br, xr)
+
+    # inter-chunk recurrence over nc chunks
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))            # [B,nc,H]
+    s0 = (initial_state if initial_state is not None
+          else jnp.zeros((Bsz, H, hd, N), jnp.float32))
+
+    def step(s_prev, inp):
+        dec, st = inp                                      # [B,H], [B,H,hd,N]
+        s_new = s_prev * dec[:, :, None, None] + st
+        return s_new, s_prev                               # emit state BEFORE
+
+    sc = jnp.moveaxis(chunk_decay, 1, 0)                   # [nc,B,H]
+    st = jnp.moveaxis(states, 1, 0)                        # [nc,B,H,hd,N]
+    final_state, prev_states = lax.scan(step, s0, (sc, st))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # [B,nc,H,hd,N]
+
+    # y_inter[i] = exp(cum_i) * C_i . S_prev
+    y_inter = jnp.einsum("bnim,bnhpm,bnih->bnihp",
+                         Cr, prev_states, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(Bsz, S, H, hd)
+    return y, final_state
+
+
+def _ssd_decode_step(state, x, dt, A, Bm, Cm):
+    """One-token SSD update.  state [B,H,hd,N]; x [B,H,hd]; dt [B,H];
+    Bm/Cm [B,N] -> (y [B,H,hd], new_state)."""
+    dA = jnp.exp(dt * A[None, :])                          # [B,H]
+    dBx = jnp.einsum("bh,bm,bhp->bhpm", dt, Bm, x)
+    s_new = state * dA[:, :, None, None] + dBx
+    y = jnp.einsum("bm,bhpm->bhp", Cm, s_new)
+    return y, s_new
+
+
+# ---------------------------------------------------------------------------
+# full block apply
+# ---------------------------------------------------------------------------
+
+def _in_projs(cfg, params, xin, axes, dtype, phantom):
+    d_inner, H, N, hd = ssm_dims(cfg)
+    p = axes.tp
+    if phantom:
+        z = phantom_apply(cfg.phantom, params["wz"], xin, axes, dtype)
+        xs = phantom_apply(cfg.phantom, params["wx"], xin, axes, dtype)
+    else:
+        z = tpmod.col_linear_apply(params["wz"], xin, dtype)
+        xs = tpmod.col_linear_apply(params["wx"], xin, dtype)
+    return z, xs
+
+
+def ssm_apply(cfg, layout: str, params, x, axes: MeshAxes, decls=None, *,
+              kind: str = "train", cache=None):
+    """x: residual shard -> (residual shard, new_cache|None)."""
+    d_inner, H, N, hd = ssm_dims(cfg)
+    p = axes.tp
+    dtype = jnp.dtype(cfg.dtype)
+    H_loc, dinner_loc = H // p, d_inner // p
+    phantom = cfg.phantom.apply_attn_proj and d_inner % p == 0
+    s = cfg.ssm
+
+    from repro.models.layers import gather_tree_fsdp
+    if cfg.fsdp:
+        params = gather_tree_fsdp(params, decls, axes,
+                                  quant=cfg.fsdp_gather_quant)
+    if kind == "decode":
+        return _ssm_decode(cfg, layout, params, x, axes, cache=cache)
+
+    # --- input projections -------------------------------------------------
+    if phantom:
+        xin = x                                            # fp shard
+        full_for_small = to_full(x, layout, axes)          # [B,S,d] for bc/dt
+    else:
+        xin = to_full(x, layout, axes)
+        full_for_small = xin
+    z, xs = _in_projs(cfg, params, xin, axes, dtype, phantom)
+    Bsz, S = full_for_small.shape[0], full_for_small.shape[1]
+    xs = xs.reshape(Bsz, S, dinner_loc)
+    z = z.reshape(Bsz, S, dinner_loc)
+
+    bc = jnp.einsum("bsd,dn->bsn", full_for_small.astype(dtype),
+                    params["wbc"]["w"].astype(dtype))
+    Bm, Cm = jnp.split(bc.astype(jnp.float32), 2, axis=-1)  # [B,S,N] (G=1)
+    dt_raw = jnp.einsum("bsd,dh->bsh", full_for_small.astype(dtype),
+                        params["wdt"]["w"].astype(dtype))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["wdt"]["b"].astype(jnp.float32))
+
+    # --- short causal conv on x (local channels) ----------------------------
+    conv_w = params["conv_w"]                               # [cw, din_loc]
+    xpad = jnp.pad(xs, ((0, 0), (s.conv_width - 1, 0), (0, 0)))
+    xc = sum(xpad[:, i:i + S] * conv_w[i][None, None, :]
+             for i in range(s.conv_width))
+    xc = jax.nn.silu(xc.astype(jnp.float32))
+
+    # --- SSD ---------------------------------------------------------------
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))       # [H_loc]
+    xh = xc.reshape(Bsz, S, H_loc, hd)
+    y, final_state = _ssd_chunked(xh, dt, A, Bm, Cm, s.chunk)
+    y = y + params["Dskip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(Bsz, S, dinner_loc)
+
+    # --- gate + (local-channel) RMSNorm + out projection --------------------
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(y), -1, keepdims=True)
+    ms = lax.psum(ms, axes.tp_name) / p
+    y = (y * lax.rsqrt(ms + cfg.norm_eps)
+         * params["norm_scale"].astype(jnp.float32)).astype(dtype)
+
+    if phantom:
+        out = phantom_apply(cfg.phantom, params["out"], y, axes, dtype)
+        res = out
+    else:
+        zp = tpmod.row_linear_apply(params["out"], y, dtype)
+        res = from_partial(zp, layout, axes)
+
+    new_cache = None
+    if kind == "prefill":
+        conv_state = xs[:, S - (s.conv_width - 1):, :]     # raw pre-conv x
+        new_cache = {"conv": conv_state.astype(dtype),
+                     "ssm": final_state.astype(jnp.float32)}
+    return res, new_cache
+
+
+def _ssm_decode(cfg, layout, params, x, axes, *, cache):
+    d_inner, H, N, hd = ssm_dims(cfg)
+    p = axes.tp
+    dtype = jnp.dtype(cfg.dtype)
+    H_loc, dinner_loc = H // p, d_inner // p
+    phantom = cfg.phantom.apply_attn_proj and d_inner % p == 0
+    s = cfg.ssm
+
+    x_full = to_full(x, layout, axes)                      # [B,1,d]
+    xin = x if phantom else x_full
+    z, xs = _in_projs(cfg, params, xin, axes, dtype, phantom)
+    Bsz = x_full.shape[0]
+    xs = xs.reshape(Bsz, dinner_loc)
+    z = z.reshape(Bsz, dinner_loc)
+
+    bc = jnp.einsum("bd,dn->bn", x_full[:, 0].astype(dtype),
+                    params["wbc"]["w"].astype(dtype))
+    Bm, Cm = jnp.split(bc.astype(jnp.float32), 2, axis=-1)
+    dt_raw = jnp.einsum("bd,dh->bh", x_full[:, 0].astype(dtype),
+                        params["wdt"]["w"].astype(dtype))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["wdt"]["b"].astype(jnp.float32))
+
+    # conv with rolling state
+    conv_hist = jnp.concatenate([cache["conv"].astype(dtype),
+                                 xs[:, None, :]], axis=1)  # [B,cw,din]
+    conv_w = params["conv_w"]
+    xc = jnp.sum(conv_hist * conv_w[None, :, :], axis=1)
+    xc = jax.nn.silu(xc.astype(jnp.float32))
+    new_conv = conv_hist[:, 1:, :]
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xc.reshape(Bsz, H_loc, hd)
+    y, new_state = _ssd_decode_step(cache["ssm"], xh, dt, A, Bm, Cm)
+    y = y + params["Dskip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(Bsz, dinner_loc)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(y), -1, keepdims=True)
+    ms = lax.psum(ms, axes.tp_name) / p
+    y = (y * lax.rsqrt(ms + cfg.norm_eps)
+         * params["norm_scale"].astype(jnp.float32)).astype(dtype)
+    y = y[:, None, :]                                      # [B,1,din_loc]
+
+    if phantom:
+        res = phantom_apply(cfg.phantom, params["out"], y, axes, dtype)
+    else:
+        zp = tpmod.row_linear_apply(params["out"], y, dtype)
+        res = from_partial(zp, layout, axes)
+    return res, {"conv": new_conv.astype(dtype),
+                 "ssm": new_state.astype(cache["ssm"].dtype)}

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, AdamW, Adafactor, SGD, make_optimizer,
+)
+from repro.optim.schedules import (  # noqa: F401
+    constant, warmup_cosine, warmup_linear,
+)

@@ -1,0 +1,88 @@
+"""Gradient compression for the data-parallel reduction — the phantom idea
+applied to gradients (beyond-paper; DESIGN.md §2).
+
+The paper compresses *activations* crossing the model axis into k ghost
+neurons.  The same structure applies to gradients crossing the data axis:
+PowerSGD-style rank-k factorization
+
+    G [n, m]  ~=  P Q^T,   P [n, k], Q [m, k]
+
+with a warm-started Q and one subspace iteration per step.  The all-reduce
+then carries k(n+m) floats instead of n*m — the dp-axis analogue of the
+paper's k-wide ghost collectives.  Error feedback keeps the scheme
+convergent (the residual G - P Q^T is added to the next step's gradient).
+
+Used by the paper-FFN training pipeline via ``compressed_dp_psum`` (see
+examples/train_ffn_compressed.py) and unit-tested for the exact-when-
+low-rank property.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _orthonormalize(q):
+    """Gram-Schmidt columns (k is tiny: O(m k^2))."""
+    qt, _ = jnp.linalg.qr(q)
+    return qt
+
+
+def compress_grad(g2d, q, axis_names):
+    """One PowerSGD round on a 2D grad shard (replicated over dp).
+
+    g2d [n, m], q [m, k] warm-start.  Returns (approx [n, m], new_q).
+    The two psums are the only cross-dp communication: k*(n+m) floats.
+    """
+    p_ = g2d @ q                                   # [n, k]
+    p_ = lax.psum(p_, axis_names)                  # k*n floats on the wire
+    p_ = _orthonormalize(p_)
+    q_new = g2d.T @ p_                             # [m, k]
+    q_new = lax.psum(q_new, axis_names)            # k*m floats
+    approx = p_ @ q_new.T / lax.psum(1, axis_names)
+    return approx, q_new
+
+
+def compressed_dp_psum(grads, q_state, err_state, axes, rank: int = 4):
+    """Tree-wide compressed gradient reduction with error feedback.
+
+    2D leaves >= 2*rank in both dims go through PowerSGD; small/1D leaves
+    psum exactly.  Returns (reduced_grads, new_q_state, new_err_state).
+    """
+    names = axes.dp_names
+
+    def one(g, q, err):
+        if g.ndim != 2 or min(g.shape) < 2 * rank:
+            return lax.pmean(g, names), q, err
+        g_fb = g + err
+        approx, q_new = compress_grad(g_fb, q, names)
+        return approx, q_new, g_fb - approx
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_q = jax.tree.leaves(q_state)
+    flat_e = jax.tree.leaves(err_state)
+    outs = [one(g, q, e) for g, q, e in zip(flat_g, flat_q, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in outs]),
+            jax.tree.unflatten(tdef, [o[1] for o in outs]),
+            jax.tree.unflatten(tdef, [o[2] for o in outs]))
+
+
+def init_compress_state(params, rank: int = 4, seed: int = 0):
+    """(q_state, err_state) matching the params tree."""
+    key = jax.random.key(seed)
+
+    def q0(p):
+        if p.ndim != 2 or min(p.shape) < 2 * rank:
+            return jnp.zeros((1,), jnp.float32)
+        k2 = jax.random.fold_in(key, p.shape[0] * 7919 + p.shape[1])
+        return jax.random.normal(k2, (p.shape[1], rank), jnp.float32)
+
+    def e0(p):
+        if p.ndim != 2 or min(p.shape) < 2 * rank:
+            return jnp.zeros((1,), jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return jax.tree.map(q0, params), jax.tree.map(e0, params)

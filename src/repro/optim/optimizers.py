@@ -1,0 +1,219 @@
+"""Optimizers in pure JAX (optax is not available in this container).
+
+Each optimizer exposes ``state_decls(param_decls)`` so that the dry-run can
+construct *abstract* optimizer state with the right sharding (optimizer
+states inherit the parameter's logical PartitionSpec; Adafactor's factored
+second moments drop the corresponding axis entries).
+
+AdamW   — fp32 m/v, decoupled weight decay, bias correction.
+Adafactor — factored second moments over the last two dims (used for the
+            >=72B archs where Adam's fp32 states do not fit; DESIGN.md §5).
+SGD     — momentum optional; used by the paper-FFN reproduction to match
+          the paper's fixed-hyperparameter TP-vs-PP comparisons.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.params import ParamDecl, is_decl
+
+
+def _zeros_like_decl(d: ParamDecl) -> ParamDecl:
+    return replace(d, init="zeros", dtype=jnp.float32)
+
+
+def _drop_axis(d: ParamDecl, axis: int) -> ParamDecl:
+    shape = tuple(s for i, s in enumerate(d.shape) if i != axis % len(d.shape))
+    spec_entries = list(d.spec) + [None] * (len(d.shape) - len(d.spec))
+    spec = list(e for i, e in enumerate(spec_entries)
+                if i != axis % len(d.shape))
+    while spec and spec[-1] is None:   # canonical form: no trailing Nones
+        spec.pop()
+    return ParamDecl(shape, P(*spec), init="zeros", dtype=jnp.float32)
+
+
+class Optimizer:
+    def state_decls(self, param_decls):
+        raise NotImplementedError
+
+    def init(self, params):
+        raise NotImplementedError
+
+    def update(self, grads, state, params, step):
+        """Returns (new_params, new_state). step: int32 scalar."""
+        raise NotImplementedError
+
+
+class SGD(Optimizer):
+    def __init__(self, lr: Callable | float, momentum: float = 0.0,
+                 weight_decay: float = 0.0):
+        self.lr = lr if callable(lr) else (lambda _s, v=lr: jnp.float32(v))
+        self.momentum = momentum
+        self.weight_decay = weight_decay
+
+    def state_decls(self, param_decls):
+        if not self.momentum:
+            return {}
+        return {"m": jax.tree.map(_zeros_like_decl, param_decls,
+                                  is_leaf=is_decl)}
+
+    def init(self, params):
+        if not self.momentum:
+            return {}
+        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                  params)}
+
+    def update(self, grads, state, params, step):
+        lr = self.lr(step)
+        if self.momentum:
+            m = jax.tree.map(
+                lambda mi, g: self.momentum * mi + g.astype(jnp.float32),
+                state["m"], grads)
+            upd = m
+            state = {"m": m}
+        else:
+            upd = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        new_params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32)
+                          - lr * (u + self.weight_decay * p.astype(jnp.float32))
+                          ).astype(p.dtype),
+            params, upd)
+        return new_params, state
+
+
+class AdamW(Optimizer):
+    def __init__(self, lr: Callable | float, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1):
+        self.lr = lr if callable(lr) else (lambda _s, v=lr: jnp.float32(v))
+        self.b1, self.b2, self.eps = b1, b2, eps
+        self.weight_decay = weight_decay
+
+    def state_decls(self, param_decls):
+        z = jax.tree.map(_zeros_like_decl, param_decls, is_leaf=is_decl)
+        return {"m": z, "v": jax.tree.map(lambda d: d, z, is_leaf=is_decl)}
+
+    def init(self, params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(jnp.copy, z)}
+
+    def update(self, grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        lr = self.lr(step)
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda vi, g: b2 * vi + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, mi, vi):
+            mhat = mi / bc1
+            vhat = vi / bc2
+            u = mhat / (jnp.sqrt(vhat) + self.eps)
+            return (p.astype(jnp.float32)
+                    - lr * (u + self.weight_decay * p.astype(jnp.float32))
+                    ).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v}
+
+
+class Adafactor(Optimizer):
+    """Factored second moments (Shazeer & Stern 2018), no momentum.
+
+    For params with ndim >= 2 the second moment is stored as a row vector
+    (mean over the last axis) and a column vector (mean over the second-to-
+    last axis): O(n+m) memory instead of O(n*m).
+    """
+
+    def __init__(self, lr: Callable | float, decay: float = 0.8,
+                 eps: float = 1e-30, clip_rms: float = 1.0,
+                 weight_decay: float = 0.0):
+        self.lr = lr if callable(lr) else (lambda _s, v=lr: jnp.float32(v))
+        self.decay = decay
+        self.eps = eps
+        self.clip_rms = clip_rms
+        self.weight_decay = weight_decay
+
+    def _factored(self, shape):
+        return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+    def state_decls(self, param_decls):
+        def vr(d):
+            return (_drop_axis(d, -1) if self._factored(d.shape)
+                    else _zeros_like_decl(d))
+
+        def vc(d):
+            return (_drop_axis(d, -2) if self._factored(d.shape)
+                    else ParamDecl((1,), P(), init="zeros", dtype=jnp.float32))
+
+        return {"vr": jax.tree.map(vr, param_decls, is_leaf=is_decl),
+                "vc": jax.tree.map(vc, param_decls, is_leaf=is_decl)}
+
+    def init(self, params):
+        def vr(p):
+            return (jnp.zeros(p.shape[:-1], jnp.float32)
+                    if self._factored(p.shape)
+                    else jnp.zeros_like(p, jnp.float32))
+
+        def vc(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if self._factored(p.shape) else jnp.zeros((1,), jnp.float32))
+
+        return {"vr": jax.tree.map(vr, params),
+                "vc": jax.tree.map(vc, params)}
+
+    def update(self, grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-self.decay)
+        lr = self.lr(step)
+
+        def upd(p, g, vr, vc):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + self.eps
+            if self._factored(p.shape):
+                vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = (vr[..., None] / jnp.mean(vr, axis=-1,
+                                                  keepdims=True)[..., None]
+                         ) * vc[..., None, :]
+                u = g * jax.lax.rsqrt(denom + self.eps)
+            else:
+                vr = beta2 * vr + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(vr + self.eps)
+            # RMS update clipping
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / self.clip_rms)
+            newp = (p.astype(jnp.float32)
+                    - lr * (u + self.weight_decay * p.astype(jnp.float32)))
+            return newp.astype(p.dtype), vr, vc
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_vr = jax.tree.leaves(state["vr"])
+        flat_vc = jax.tree.leaves(state["vc"])
+        outs = [upd(p, g, vr, vc) for p, g, vr, vc
+                in zip(flat_p, flat_g, flat_vr, flat_vc)]
+        new_params = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        new_vr = jax.tree.unflatten(tdef, [o[1] for o in outs])
+        new_vc = jax.tree.unflatten(tdef, [o[2] for o in outs])
+        return new_params, {"vr": new_vr, "vc": new_vc}
+
+
+def make_optimizer(name: str, lr, weight_decay: float = 0.0,
+                   **kw) -> Optimizer:
+    if name == "adamw":
+        return AdamW(lr, weight_decay=weight_decay, **kw)
+    if name == "adafactor":
+        return Adafactor(lr, weight_decay=weight_decay, **kw)
+    if name == "sgd":
+        return SGD(lr, weight_decay=weight_decay, **kw)
+    raise KeyError(name)

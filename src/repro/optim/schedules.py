@@ -1,0 +1,29 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def sched(step):
+        return jnp.asarray(lr, jnp.float32)
+    return sched
+
+
+def warmup_linear(lr: float, warmup: int, total: int, floor: float = 0.0):
+    def sched(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = lr * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, warm, lr + (floor - lr) * frac)
+    return sched
+
+
+def warmup_cosine(lr: float, warmup: int, total: int, floor_frac: float = 0.1):
+    def sched(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = lr * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, lr * cos)
+    return sched

@@ -1,0 +1,77 @@
+"""Logical parallel axes and their binding to a concrete mesh.
+
+Logical axis names used in all ``ParamDecl`` specs and activation specs:
+
+  * ``"dp"`` — data parallel.  Binds to ``('pod','data')`` on the multi-pod
+    mesh and ``('data',)`` on the single-pod mesh.
+  * ``"tp"`` — tensor/model parallel (also hosts EP and the phantom axis).
+    Binds to ``'model'``.
+
+Everything inside ``shard_map`` uses these via a ``MeshAxes`` handle so the
+same model code runs on any mesh that provides the two logical axes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    tp: int                      # size of the model axis
+    dp: int                      # total data-parallel ways (pod * data)
+    dp_names: tuple              # ('pod','data') or ('data',)
+    tp_name: str = "model"
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh) -> "MeshAxes":
+        names = mesh.axis_names
+        dp_names = tuple(n for n in names if n in ("pod", "data"))
+        dp = 1
+        for n in dp_names:
+            dp *= mesh.shape[n]
+        return cls(tp=mesh.shape["model"], dp=dp, dp_names=dp_names)
+
+    @property
+    def all_names(self):
+        return self.dp_names + (self.tp_name,)
+
+
+def resolve_spec(spec: P, axes: MeshAxes) -> P:
+    """Map a logical PartitionSpec ('dp'/'tp' entries) to mesh axis names."""
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+        elif entry == "dp":
+            out.append(axes.dp_names if len(axes.dp_names) > 1
+                       else axes.dp_names[0])
+        elif entry == "tp":
+            out.append(axes.tp_name)
+        elif isinstance(entry, tuple):
+            flat = []
+            for e in entry:
+                if e == "dp":
+                    flat.extend(axes.dp_names)
+                elif e == "tp":
+                    flat.append(axes.tp_name)
+                else:
+                    flat.append(e)
+            out.append(tuple(flat))
+        else:
+            out.append(entry)
+    return P(*out)
+
+
+def named_sharding(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(spec, MeshAxes.from_mesh(mesh)))
+
+
+def dp_axis_index(axes: MeshAxes):
+    """Linear index of this device along the (flattened) dp axes."""
+    idx = 0
+    for n in axes.dp_names:
+        idx = idx * jax.lax.axis_size(n) + jax.lax.axis_index(n)
+    return idx

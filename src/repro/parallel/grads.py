@@ -1,0 +1,44 @@
+"""Spec-aware gradient reduction (DESIGN.md §6).
+
+Inside shard_map, autodiff produces per-device gradient shards.  A param's
+gradient must be psum'd over every mesh axis group that does NOT appear in
+its PartitionSpec:
+
+  * sharded over tp only              -> psum over dp      (classic DP)
+  * FSDP ('dp' in spec)               -> already reduced by the
+    all-gather-on-use VJP (reduce-scatter) — no dp psum
+  * replicated params (norm scales in sp layout, replicated KV
+    projections, BC/dt projections)   -> psum over dp AND tp
+"""
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+from repro.parallel.axes import MeshAxes
+from repro.parallel.params import ParamDecl, is_decl
+
+
+def _spec_axes(spec):
+    out = set()
+    for e in spec:
+        if e is None:
+            continue
+        if isinstance(e, tuple):
+            out.update(e)
+        else:
+            out.add(e)
+    return out
+
+
+def reduce_grads(grads, decls, axes: MeshAxes):
+    def red(g, d):
+        ax = _spec_axes(d.spec)
+        names = []
+        if "dp" not in ax:
+            names.extend(axes.dp_names)
+        if "tp" not in ax:
+            names.append(axes.tp_name)
+        return lax.psum(g, tuple(names)) if names else g
+
+    return jax.tree.map(red, grads, decls, is_leaf=is_decl)

@@ -1,0 +1,205 @@
+"""Batched serving engine: prefill + decode steps over the mesh, greedy
+generation, and continuous batching (slot-based request scheduling with
+per-slot positions — finished slots are refilled without stalling the
+running batch).
+
+The decode KV cache is sequence-sharded over the model axis and the
+partial-attention merge is a flash-decoding LSE psum (DESIGN.md §6), so
+any GQA geometry serves on any mesh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.specs import cache_specs, input_specs
+from repro.models.model import (forward_decode, forward_prefill,
+                                model_decls)
+from repro.parallel.axes import MeshAxes, resolve_spec
+from repro.parallel.params import specs
+
+
+def make_serve_fns(cfg: ModelConfig, mesh, shape: ShapeConfig):
+    """Returns (prefill_fn, decode_fn, cache_sds, cache_spec_resolved).
+
+    prefill_fn(params, batch) -> (logits [B,1,V], cache)
+    decode_fn(params, cache, tokens [B,1], pos [B]) -> (logits, cache)
+    """
+    axes = MeshAxes.from_mesh(mesh)
+    decls = model_decls(cfg, axes)
+    pspecs = jax.tree.map(lambda s: resolve_spec(s, axes), specs(decls))
+    c_sds, c_spec = cache_specs(cfg, shape, axes)
+    cspecs = jax.tree.map(lambda s: resolve_spec(s, axes), c_spec,
+                          is_leaf=lambda x: isinstance(x, P))
+    in_sds, in_spec = input_specs(
+        cfg, ShapeConfig(shape.name, shape.seq_len, shape.global_batch,
+                         "prefill"), axes)
+    bspecs = jax.tree.map(lambda s: resolve_spec(s, axes), in_spec,
+                          is_leaf=lambda x: isinstance(x, P))
+    tok_spec = bspecs["tokens"]
+    pos_spec = P(tok_spec[0])
+
+    def prefill(params, batch):
+        return forward_prefill(cfg, axes, params, batch)
+
+    def decode(params, cache, tokens, pos):
+        return forward_decode(cfg, axes, params, cache, tokens, pos)
+
+    logits_spec = P(tok_spec[0], None, None)
+    prefill_fn = jax.jit(jax.shard_map(
+        prefill, mesh=mesh,
+        in_specs=(pspecs, bspecs), out_specs=(logits_spec, cspecs),
+        check_vma=False))
+    decode_fn = jax.jit(jax.shard_map(
+        decode, mesh=mesh,
+        in_specs=(pspecs, cspecs, tok_spec, pos_spec),
+        out_specs=(logits_spec, cspecs),
+        check_vma=False), donate_argnums=(1,))
+    return prefill_fn, decode_fn, c_sds, cspecs
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Request:
+    prompt: np.ndarray                  # [S_prompt] int32
+    max_new_tokens: int = 32
+    eos_id: int = -1                    # -1: never stops early
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Slot-based continuous batching.
+
+    All slots decode together each step with per-slot positions; finished
+    slots are refilled from the queue by running a fresh batched prefill
+    for the pending prompts and splicing their cache rows in (a jitted
+    masked merge, so cache sharding is preserved).
+    """
+
+    def __init__(self, cfg: ModelConfig, mesh, params, *, slots: int = 8,
+                 max_len: int = 256):
+        self.cfg, self.mesh, self.params = cfg, mesh, params
+        self.slots = slots
+        self.max_len = max_len
+        shape = ShapeConfig("serve", max_len, slots, "decode")
+        self.prefill_fn, self.decode_fn, self.cache_sds, self.cspecs = \
+            make_serve_fns(cfg, mesh, shape)
+        self.cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), self.cache_sds)
+        self.pos = np.zeros((slots,), np.int32)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.last_tok = np.zeros((slots, 1), np.int32)
+
+        def merge(cache, fresh, mask):
+            def m(c, f):
+                # batch dim is axis 1 (axis 0 is the layer-stacked axis)
+                return jnp.where(
+                    mask.reshape((1, -1) + (1,) * (c.ndim - 2)), f, c)
+            return jax.tree.map(m, cache, fresh)
+
+        self._merge = jax.jit(merge)
+
+    def submit(self, requests: List[Request]):
+        self.queue = list(requests)
+        self._fill_slots()
+
+    def _fill_slots(self):
+        pending = []
+        slot_ids = []
+        for i in range(self.slots):
+            if self.active[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[i] = req
+                pending.append(req)
+                slot_ids.append(i)
+        if not pending:
+            return
+        # batched prefill for ALL slots, then splice the new rows in.
+        # Prompts within one refill group must share a length (real
+        # deployments bucket by length); right-padding would misplace the
+        # last-token logits otherwise.
+        lens = {len(r.prompt) for r in pending}
+        assert len(lens) == 1, ("prompts in one refill group must have "
+                                f"equal length, got {sorted(lens)}")
+        S = max(len(r.prompt) for r in pending)
+        assert S % 16 == 0, ("prompt length must be a multiple of 16 "
+                             "(sequence-sharding divisibility), got "
+                             f"{S}")
+        toks = np.zeros((self.slots, S), np.int32)
+        for i, req in zip(slot_ids, pending):
+            toks[i, :len(req.prompt)] = req.prompt
+        batch = {"tokens": jnp.asarray(toks)}
+        batch = _add_modality_stubs(self.cfg, batch, self.slots, S)
+        logits, fresh_full = self.prefill_fn(self.params, batch)
+        # prefill used seq S; splice into the max_len cache rows
+        fresh = jax.tree.map(
+            lambda f, c: _pad_cache_seq(f, c), fresh_full, self.cache)
+        mask = np.zeros((self.slots,), bool)
+        for i, req in zip(slot_ids, pending):
+            mask[i] = True
+            self.pos[i] = len(req.prompt)
+            nxt = int(np.argmax(np.asarray(logits)[i, 0]))
+            self.last_tok[i, 0] = nxt
+            req.out_tokens.append(nxt)
+        self.cache = self._merge(self.cache, fresh, jnp.asarray(mask))
+
+    def step(self):
+        logits, self.cache = self.decode_fn(
+            self.params, self.cache, jnp.asarray(self.last_tok),
+            jnp.asarray(self.pos))
+        logits = np.asarray(logits)
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.pos[i] += 1
+            nxt = int(np.argmax(logits[i, 0]))
+            req.out_tokens.append(nxt)
+            self.last_tok[i, 0] = nxt
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or nxt == req.eos_id
+                    or self.pos[i] >= self.max_len - 1):
+                req.done = True
+                self.active[i] = None
+        self._fill_slots()
+
+    def run(self, requests: List[Request], max_steps: int = 10_000):
+        self.submit(requests)
+        steps = 0
+        while any(r is not None for r in self.active) and steps < max_steps:
+            self.step()
+            steps += 1
+        return requests
+
+
+def _pad_cache_seq(fresh, target):
+    """Right-pad prefill cache (seq S) to the engine's max_len cache."""
+    if fresh.shape == target.shape:
+        return fresh
+    pads = []
+    for a, b in zip(fresh.shape, target.shape):
+        pads.append((0, b - a))
+    return jnp.pad(fresh, pads)
+
+
+def _add_modality_stubs(cfg, batch, B, S):
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.zeros((B, S, cfg.d_model), jnp.float32)
+    if cfg.frontend == "vision":
+        from repro.models.model import n_vision_tokens
+        nv = n_vision_tokens(cfg, S)
+        batch["vision_embeds"] = jnp.zeros((B, nv, cfg.d_model),
+                                           jnp.float32)
+    if cfg.rope == "mrope":
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        batch["positions"] = jnp.stack([pos, pos, pos])
+    return batch

@@ -1,0 +1,46 @@
+"""Test harness config.
+
+Multi-device correctness tests (shard_map collectives, TP-vs-phantom
+equivalence, elastic checkpointing) need a small local mesh, so we ask the
+CPU backend for 8 virtual devices — the standard JAX testing pattern.
+NOTE: this is deliberately NOT the dry-run's 512 (launch/dryrun.py sets
+that itself, in its own process, before importing jax).
+"""
+import os
+
+flags = os.environ.get("XLA_FLAGS", "")
+if "host_platform_device_count" not in flags:
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 " + flags)
+
+import jax  # noqa: E402  (must import after the flag)
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh24():
+    """(data=2, model=4) mesh."""
+    from repro.launch.mesh import make_local_mesh
+    return make_local_mesh(2, 4)
+
+
+@pytest.fixture(scope="session")
+def mesh18():
+    """(data=1, model=8) mesh."""
+    from repro.launch.mesh import make_local_mesh
+    return make_local_mesh(1, 8)
+
+
+@pytest.fixture(scope="session")
+def mesh42():
+    """(data=4, model=2) mesh."""
+    from repro.launch.mesh import make_local_mesh
+    return make_local_mesh(4, 2)
+
+
+@pytest.fixture(scope="session")
+def mesh14():
+    """(data=1, model=4) mesh — same tp as mesh24, half the dp (elastic
+    rescale changes dp only: the phantom model class is tp-dependent)."""
+    from repro.launch.mesh import make_local_mesh
+    return make_local_mesh(1, 4)

@@ -1,0 +1,49 @@
+"""Shared test helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.axes import MeshAxes, resolve_spec
+from repro.parallel.params import specs
+
+
+def smap(fn, mesh, in_specs, out_specs):
+    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False))
+
+
+def resolved_param_specs(decls, mesh):
+    axes = MeshAxes.from_mesh(mesh)
+    return jax.tree.map(lambda s: resolve_spec(s, axes), specs(decls))
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return jax.random.normal(jax.random.key(key), shape, dtype) * scale
+
+
+def allclose(a, b, rtol=2e-4, atol=2e-4, msg=""):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=rtol, atol=atol, err_msg=msg)
+
+
+def make_batch(cfg, B, S, seed=0):
+    """LM batch + modality stubs for any arch family."""
+    from repro.data.synthetic import LMDataset
+    from repro.models.model import n_vision_tokens
+    ds = LMDataset(cfg.vocab_size, B, S + 1, seed=seed)
+    batch = dict(ds(0))
+    rng = np.random.RandomState(seed)
+    if cfg.family == "encdec":
+        batch["frames"] = rng.randn(B, S, cfg.d_model).astype(np.float32)
+    if cfg.frontend == "vision":
+        nv = n_vision_tokens(cfg, S)
+        batch["vision_embeds"] = rng.randn(B, nv, cfg.d_model).astype(
+            np.float32)
+    if cfg.rope == "mrope":
+        pos = np.broadcast_to(np.arange(S, dtype=np.int32), (B, S)).copy()
+        batch["positions"] = np.stack([pos, pos, pos])
+    return batch

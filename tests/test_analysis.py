@@ -1,0 +1,72 @@
+"""HLO collective parser + roofline/energy model unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.energy import (RooflineTerms, comm_time_us,
+                               energy_to_loss, roofline_terms)
+from repro.launch.hlo_analysis import collective_bytes
+from helpers import smap
+
+
+def test_parser_finds_collectives(mesh18):
+    def f(x):
+        g = jax.lax.all_gather(x, "model")          # AG [8, 8, 16]
+        s = jax.lax.psum(jnp.sum(g), "model")       # AR
+        y = jax.lax.psum_scatter(
+            g * s, "model", scatter_dimension=0, tiled=False)  # RS
+        return y
+
+    fn = smap(f, mesh18, P(None, "model"), P(None, "model"))
+    x = jax.ShapeDtypeStruct((8, 128), jnp.float32)
+    compiled = fn.lower(x).compile()
+    total, breakdown = collective_bytes(compiled.as_text(),
+                                        default_group=8)
+    assert total > 0
+    ops = set(breakdown)
+    assert "all-gather" in ops or "all-reduce" in ops
+    for rec in breakdown.values():
+        assert rec["count"] >= 1
+        assert rec["wire_bytes"] > 0
+
+
+def test_wire_bytes_math():
+    hlo = """
+  %ag = f32[8,16,128]{2,1,0} all-gather(f32[16,128] %x), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %ar = f32[16,128]{1,0} all-reduce(f32[16,128] %y), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+"""
+    total, breakdown = collective_bytes(hlo, default_group=8)
+    ag = breakdown["all-gather"]
+    # result 8*16*128*4 bytes; wire = result * 7/8
+    assert abs(ag["wire_bytes"] - 8 * 16 * 128 * 4 * 7 / 8) < 1
+    ar = breakdown["all-reduce"]
+    assert abs(ar["wire_bytes"] - 2 * 16 * 128 * 4 * 7 / 8) < 1
+
+
+def test_iota_replica_groups():
+    hlo = ("  %rs = bf16[4,64]{1,0} reduce-scatter(bf16[4,64] %x), "
+           "replica_groups=[2,256]<=[512], dimensions={0}\n")
+    total, breakdown = collective_bytes(hlo, default_group=16)
+    assert breakdown["reduce-scatter"]["count"] == 1
+    # group size 256: wire = result * 255
+    expect = 4 * 64 * 2 * 255
+    assert abs(breakdown["reduce-scatter"]["wire_bytes"] - expect) < 1
+
+
+def test_roofline_terms_dominance():
+    rt = roofline_terms(1e12, 1e9, 1e6)
+    assert rt.dominant == "compute"
+    rt2 = roofline_terms(1e9, 1e12, 1e6)
+    assert rt2.dominant == "memory"
+    rt3 = roofline_terms(1e9, 1e9, 1e12)
+    assert rt3.dominant == "collective"
+    assert 0 < rt.fraction_of_roofline() <= 1
+
+
+def test_energy_model_paper_constants():
+    # paper Appendix: reduce-scatter fit c1=145.5, c2=2.4e-3 us
+    t = comm_time_us("reduce_scatter", 1e6, 256)
+    assert t > 2.4e-3 * 1e6          # bandwidth term dominates large m
+    e = energy_to_loss(0.01, 0.002, p=256, iterations=453)
+    assert e > 0

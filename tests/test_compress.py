@@ -1,0 +1,83 @@
+"""Gradient compression (phantom-for-gradients, PowerSGD-style): exactness
+on low-rank grads, error-feedback convergence, wire-bytes accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.compress import (compress_grad, compressed_dp_psum,
+                                  init_compress_state)
+from repro.parallel.axes import MeshAxes
+from helpers import allclose, rand, smap
+
+
+def test_exact_when_lowrank(mesh24):
+    """A rank-2 gradient is reproduced exactly by rank-4 compression."""
+    n, m, r = 32, 16, 4
+    u = rand(0, (n, 2))
+    v = rand(1, (2, m))
+    g = u @ v                      # same on all dp ranks
+
+    def f(gg, q):
+        approx, qn = compress_grad(gg, q, ("data",))
+        return approx
+
+    q0 = rand(2, (m, r))
+    fn = smap(f, mesh24, (P(None, None), P(None, None)), P(None, None))
+    # one subspace iteration of a warm q needs a couple of rounds to
+    # capture the exact column space; iterate
+    q = q0
+    for _ in range(3):
+        def f2(gg, qq):
+            return compress_grad(gg, qq, ("data",))[1]
+        q = smap(f2, mesh24, (P(None, None), P(None, None)),
+                 P(None, None))(g, q)
+    approx = fn(g, q)
+    allclose(approx, g, rtol=1e-3, atol=1e-4)
+
+
+def test_error_feedback_identity(mesh24):
+    """Error feedback guarantees EXACTLY: sum(delivered) + err_T = T * g
+    (each step: delivered = g + err_prev - err_new).  This is the
+    convergence mechanism — nothing is ever lost, only delayed."""
+    g_true = rand(3, (16, 8))
+    params = {"w": jnp.zeros((16, 8))}
+    q_state, err_state = init_compress_state(params, rank=1)
+    axes = MeshAxes.from_mesh(mesh24)
+
+    total = jnp.zeros_like(g_true)
+    q, err = q_state["w"], err_state["w"]
+
+    def step(qq, ee):
+        def f(gg, q_, e_):
+            red, qn, en = compressed_dp_psum(
+                {"w": gg}, {"w": q_}, {"w": e_}, axes, rank=1)
+            return red["w"], qn["w"], en["w"]
+        return smap(f, mesh24,
+                    (P(None, None), P(None, None), P(None, None)),
+                    (P(None, None), P(None, None), P(None, None)))(
+                        g_true, qq, ee)
+
+    T = 30
+    for _ in range(T):
+        red, q, err = step(q, err)
+        total = total + red
+    allclose(total + err, T * g_true, rtol=1e-3, atol=1e-3)
+    # and the rank-1 subspace captures a nontrivial share each step
+    assert float(jnp.linalg.norm(err)) < float(
+        jnp.linalg.norm(T * g_true))
+
+
+def test_small_leaves_pass_through(mesh24):
+    axes = MeshAxes.from_mesh(mesh24)
+    g = {"b": rand(5, (7,))}
+    q, e = init_compress_state({"b": jnp.zeros((7,))}, rank=4)
+
+    def f(gg, qq, ee):
+        red, _, _ = compressed_dp_psum(gg, qq, ee, axes, rank=4)
+        return red
+
+    fn = smap(f, mesh24, (P(None), {"b": P(None)}, {"b": P(None)}),
+              {"b": P(None)})
+    red = fn(g, q, e)
+    allclose(red["b"], g["b"], rtol=1e-6)  # pmean of identical copies

@@ -1,0 +1,125 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.phantom import (phantom_dense_equivalent, phantom_decls,
+                                phantom_param_count)
+from repro.models.moe import moe_capacity, route
+from repro.parallel.params import materialize, param_count
+
+SET = dict(max_examples=20, deadline=None)
+
+
+@given(p=st.sampled_from([2, 4, 8]),
+       bi=st.sampled_from([2, 4, 8]),
+       bo=st.sampled_from([2, 4, 8]),
+       k=st.integers(1, 4),
+       seed=st.integers(0, 10_000))
+@settings(**SET)
+def test_phantom_dense_equivalent_block_structure(p, bi, bo, k, seed):
+    """The dense-equivalent matrix has EXACT diagonal blocks and rank<=k
+    off-diagonal blocks — the paper's Fig. 2/4 structure, for any
+    geometry."""
+    from repro.parallel.axes import MeshAxes
+    decls = phantom_decls(p * bi, p * bo, k, p)
+    params = materialize(decls, seed)
+    W = np.asarray(phantom_dense_equivalent(params))
+    L = np.asarray(params["L"])
+    for i in range(p):
+        for jj in range(p):
+            blk = W[i * bi:(i + 1) * bi, jj * bo:(jj + 1) * bo]
+            if i == jj:
+                np.testing.assert_allclose(blk, L[i], rtol=1e-6)
+            else:
+                assert np.linalg.matrix_rank(blk, tol=1e-5) <= k
+
+
+@given(p=st.sampled_from([2, 4, 8, 16]),
+       n=st.sampled_from([64, 128, 256]),
+       k=st.integers(1, 8))
+@settings(**SET)
+def test_phantom_param_count_matches_decls(p, n, k):
+    decls = phantom_decls(n, n, k, p)
+    assert param_count(decls) == phantom_param_count(n, n, k, p)
+
+
+@given(T=st.sampled_from([16, 64, 256]),
+       E=st.sampled_from([4, 8, 16]),
+       K=st.integers(1, 4),
+       seed=st.integers(0, 1000))
+@settings(**SET)
+def test_route_invariants(T, E, K, seed):
+    """Dispatch invariants for any routing input: capacity respected,
+    tokens valid, gates normalized, kept slots bijective."""
+    K = min(K, E)
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.standard_normal((T, E)), jnp.float32)
+    C = moe_capacity(T, E, K, 1.25)
+    disp_tok, disp_ok, gates, combine_slot = route(logits, K, C)
+    assert disp_tok.shape == (E, C) and disp_ok.shape == (E, C)
+    assert np.asarray(disp_tok).min() >= 0
+    assert np.asarray(disp_tok).max() < T
+    g = np.asarray(gates)
+    np.testing.assert_allclose(g.sum(-1), 1.0, rtol=1e-4)
+    slots = np.asarray(combine_slot)
+    kept = slots[slots >= 0]
+    assert len(np.unique(kept)) == len(kept)          # bijective slots
+    assert (kept < E * C).all()
+    # count consistency: #kept slot ids == #ok dispatch entries
+    assert len(kept) == int(np.asarray(disp_ok).sum())
+
+
+@given(shape=st.sampled_from([(4,), (3, 5), (2, 3, 4)]),
+       seed=st.integers(0, 100))
+@settings(**SET)
+def test_checkpoint_roundtrip_arbitrary_pytrees(tmp_path_factory, shape,
+                                                seed):
+    from repro.train.checkpoint import CheckpointManager
+    from repro.parallel.params import ParamDecl
+    from jax.sharding import PartitionSpec as P
+    rng = np.random.default_rng(seed)
+    tmp = tmp_path_factory.mktemp(f"ck{seed}")
+    params = {"a": jnp.asarray(rng.standard_normal(shape), jnp.float32),
+              "nested": {"b": jnp.asarray(rng.integers(0, 5, shape),
+                                          jnp.int32)}}
+    decls = jax.tree.map(lambda x: ParamDecl(x.shape, P(),
+                                             dtype=x.dtype), params)
+    mgr = CheckpointManager(str(tmp))
+    mgr.save(1, params, {})
+    state = mgr.restore(1, decls, {}, None)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(S=st.sampled_from([8, 16, 32]),
+       H=st.sampled_from([2, 4]),
+       seed=st.integers(0, 500))
+@settings(**SET)
+def test_ssd_chunk_invariance_property(S, H, seed):
+    from repro.models.ssm import _ssd_chunked
+    rng = np.random.default_rng(seed)
+    B, hd, N = 2, 4, 8
+    x = jnp.asarray(rng.standard_normal((B, S, H, hd)) * 0.5, jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.standard_normal((B, S, H)),
+                                     jnp.float32))
+    A = -jnp.exp(jnp.asarray(rng.standard_normal(H) * 0.3, jnp.float32))
+    Bm = jnp.asarray(rng.standard_normal((B, S, N)) * 0.5, jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S, N)) * 0.5, jnp.float32)
+    y1, s1 = _ssd_chunked(x, dt, A, Bm, Cm, 4)
+    y2, s2 = _ssd_chunked(x, dt, A, Bm, Cm, S)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-3,
+                               atol=2e-3)
+
+
+@given(m=st.sampled_from([64, 1024, 65536]),
+       p=st.sampled_from([2, 16, 256]))
+@settings(**SET)
+def test_comm_model_monotone(m, p):
+    """Paper Eqn. 26 comm model: monotone in message size and ranks."""
+    from repro.core.energy import comm_time_us
+    for coll in ("all_gather", "reduce_scatter", "all_reduce", "broadcast"):
+        assert comm_time_us(coll, 2 * m, p) > comm_time_us(coll, m, p)
+        assert comm_time_us(coll, m, 2 * p) > comm_time_us(coll, m, p)

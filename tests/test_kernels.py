@@ -1,0 +1,98 @@
+"""Pallas kernel validation (interpret=True on CPU; TPU is the target):
+shape/dtype sweep against the pure-jnp oracle in kernels/ref.py."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.phantom_fused import phantom_fused_matmul
+from repro.kernels.ref import phantom_fused_ref
+from helpers import allclose, rand
+
+
+@pytest.mark.parametrize("M,K,N,PK", [
+    (128, 128, 128, 64),
+    (256, 128, 128, 128),
+    (128, 256, 384, 32),
+    (512, 128, 256, 256),
+    (128, 512, 128, 16),
+])
+def test_phantom_fused_shapes(M, K, N, PK):
+    x = rand(0, (M, K), scale=0.3)
+    L = rand(1, (K, N), scale=0.3)
+    g = rand(2, (M, PK), scale=0.3)
+    D = rand(3, (PK, N), scale=0.3)
+    out = phantom_fused_matmul(x, L, g, D, interpret=True)
+    ref = phantom_fused_ref(x, L, g, D)
+    allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_phantom_fused_dtypes(dtype):
+    M, K, N, PK = 128, 128, 128, 64
+    x = rand(4, (M, K), scale=0.3).astype(dtype)
+    L = rand(5, (K, N), scale=0.3).astype(dtype)
+    g = rand(6, (M, PK), scale=0.3).astype(dtype)
+    D = rand(7, (PK, N), scale=0.3).astype(dtype)
+    out = phantom_fused_matmul(x, L, g, D, interpret=True)
+    ref = phantom_fused_ref(x, L, g, D)
+    rtol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    allclose(out, ref, rtol=rtol, atol=rtol)
+    assert out.dtype == dtype
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(64, 64, 64), (128, 128, 128),
+                                      (32, 128, 64)])
+def test_phantom_fused_block_shapes(bm, bn, bk):
+    M, K, N, PK = 128, 128, 128, 32
+    x = rand(8, (M, K), scale=0.3)
+    L = rand(9, (K, N), scale=0.3)
+    g = rand(10, (M, PK), scale=0.3)
+    D = rand(11, (PK, N), scale=0.3)
+    out = phantom_fused_matmul(x, L, g, D, bm=bm, bn=bn, bk=bk,
+                               interpret=True)
+    ref = phantom_fused_ref(x, L, g, D)
+    allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_kernel_matches_phantom_layer_math():
+    """The kernel computes exactly the per-rank phantom forward: local
+    update + concatenated decompress (self-term already zeroed in D)."""
+    M, n_in_loc, n_out_loc, p, k = 128, 128, 128, 4, 32
+    x = rand(12, (M, n_in_loc), scale=0.3)
+    L = rand(13, (n_in_loc, n_out_loc), scale=0.3)
+    g_all = rand(14, (M, p * k), scale=0.3)
+    D = rand(15, (p * k, n_out_loc), scale=0.3)
+    out = phantom_fused_matmul(x, L, g_all, D, interpret=True)
+    z = x @ L + g_all @ D
+    allclose(out, z, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd,causal", [
+    (2, 128, 4, 4, 32, True),
+    (1, 256, 8, 2, 32, True),
+    (2, 128, 4, 1, 64, True),
+    (1, 128, 4, 4, 32, False),
+])
+def test_flash_attention_kernel(B, S, H, KV, hd, causal):
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ref import flash_attention_ref
+    q = rand(20, (B, S, H, hd), scale=0.5)
+    k = rand(21, (B, S, KV, hd), scale=0.5)
+    v = rand(22, (B, S, KV, hd), scale=0.5)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    allclose(out, ref, rtol=2e-3, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ref import flash_attention_ref
+    B, S, H, KV, hd = 1, 128, 4, 2, 32
+    q = rand(23, (B, S, H, hd), scale=0.5).astype(jnp.bfloat16)
+    k = rand(24, (B, S, KV, hd), scale=0.5).astype(jnp.bfloat16)
+    v = rand(25, (B, S, KV, hd), scale=0.5).astype(jnp.bfloat16)
+    out = flash_attention(q, k, v, interpret=True)
+    ref = flash_attention_ref(q, k, v)
+    allclose(out, ref, rtol=3e-2, atol=3e-2)
+    assert out.dtype == jnp.bfloat16
