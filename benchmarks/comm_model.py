@@ -30,6 +30,7 @@ def run():
     from jax.sharding import PartitionSpec as P
     from repro.launch.mesh import make_local_mesh
     from repro.core.energy import PAPER_COLLECTIVE_FITS
+    from repro.parallel.compat import shard_map
 
     mesh = make_local_mesh(1, 8)
 
@@ -44,7 +45,7 @@ def run():
             return jax.lax.psum_scatter(x, "model", scatter_dimension=0,
                                         tiled=True)
         f = {"all_gather": ag, "all_reduce": ar, "reduce_scatter": rs}[kind]
-        return jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("model"),
+        return jax.jit(shard_map(f, mesh=mesh, in_specs=P("model"),
                                      out_specs=(P(None) if kind ==
                                                 "all_gather" else
                                                 P("model")
@@ -74,6 +75,42 @@ def run():
     print("# paper Frontier fits (Table III) for the energy model:")
     for kind, (c1, c2) in PAPER_COLLECTIVE_FITS.items():
         emit(f"comm_paper_{kind}", 0.0, f"c1={c1};c2={c2}")
+
+    predict_table2(measured_fits={
+        kind: (coef[0], coef[1]) for kind, coef in results.items()})
+
+
+def predict_table2(measured_fits=None, p: int = 8, batch: int = 1024):
+    """Paper Table II predictions, summed from ProjectionStrategy
+    ``comm_events()`` instead of re-derived by hand: per layer, TP issues
+    an AG of (n/p)*batch floats, phantom an AG of k*batch — whatever the
+    instantiated strategies say they issue is what gets priced."""
+    from repro.configs.base import ProjectionSpec, get_config
+    from repro.core.energy import PAPER_COLLECTIVE_FITS, comm_time_us
+    from repro.parallel.strategies import make_strategy
+
+    print("# paper Table II comm schedule, summed from strategy "
+          "comm_events() (per layer, per iteration)")
+    for arch in ("paper-ffn-4k", "paper-ffn-16k", "paper-ffn-64k"):
+        cfg = get_config(arch)
+        n, k = cfg.ffn_width, cfg.phantom.k
+        tp_st = make_strategy(ProjectionSpec(kind="tensor_col"), n, n, p,
+                              bias=True)
+        pp_st = make_strategy(ProjectionSpec(kind="phantom", k=k), n, n, p,
+                              bias=True)
+        for label, st in (("tp", tp_st), ("pp", pp_st)):
+            events = st.comm_events(batch)
+            floats = sum(ev.m_floats for ev in events)
+            us_paper = sum(comm_time_us(ev.collective, ev.m_floats, p,
+                                        PAPER_COLLECTIVE_FITS)
+                           for ev in events)
+            extra = f"m_floats={floats:.0f};us_paper_fit={us_paper:.1f}"
+            if measured_fits:
+                us_meas = sum(comm_time_us(ev.collective, ev.m_floats, p,
+                                           measured_fits)
+                              for ev in events)
+                extra += f";us_measured_fit={us_meas:.1f}"
+            emit(f"table2_{label}_{arch}", us_paper, extra)
 
 
 if __name__ == "__main__":

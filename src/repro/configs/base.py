@@ -46,7 +46,13 @@ class SSMConfig:
 
 @dataclass(frozen=True)
 class PhantomConfig:
-    """The paper's technique — knobs for where/how it is applied."""
+    """The paper's technique — knobs for where/how it is applied.
+
+    DEPRECATED selection surface: ``apply_ffn``/``apply_attn_proj`` (and
+    ``ModelConfig.ffn_impl``) are legacy shims that expand to per-site
+    ``ProjectionSpec`` entries via ``ModelConfig.projection_spec()``.  New
+    code should set ``ModelConfig.projections`` directly.
+    """
     k: int = 64                     # ghost neurons per phantom layer
     apply_ffn: bool = True          # factorize the MLP projections
     apply_attn_proj: bool = False   # factorize QKV/O projections (beyond-paper)
@@ -55,6 +61,71 @@ class PhantomConfig:
     # faithful: per-source decompress GEMMs + custom_vjp AllGather (paper Alg. 1)
     # fused:    single concatenated decompress GEMM (TPU/MXU adaptation)
     # ring:     ppermute ring with overlapped partial decompress GEMMs
+
+
+# ---------------------------------------------------------------------------
+# projection strategy selection (the ProjectionStrategy API's config side)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ProjectionSpec:
+    """Selects and parameterizes one projection strategy at one site.
+
+    ``kind`` is a key into ``repro.parallel.strategies`` registry:
+    ``tensor_col`` | ``tensor_row`` | ``phantom`` | ``lowrank_distill`` —
+    or the pseudo-kind ``tensor`` which resolves to the site's natural
+    dense sharding (col for input-side projections, row for output-side).
+    The remaining fields only matter for the phantom-family kinds.
+    """
+    kind: str = "tensor"
+    k: int = 64                     # ghost width (phantom family)
+    variant: str = "fused"          # faithful | fused | ring
+    include_self_term: bool = False
+
+
+# every projection site the model families expose, with its natural dense
+# strategy (what `kind="tensor"` resolves to)
+PROJECTION_SITES = {
+    "ffn_layer": "tensor_col",      # paper square FFN (core/ffn.py)
+    "ffn_gate": "tensor_col",
+    "ffn_up": "tensor_col",
+    "ffn_down": "tensor_row",
+    "attn_q": "tensor_col",
+    "attn_k": "tensor_col",
+    "attn_v": "tensor_col",
+    "attn_o": "tensor_row",
+    "ssm_in": "tensor_col",
+    "ssm_out": "tensor_row",
+    "moe_experts": "tensor_col",
+}
+
+_FFN_SITES = ("ffn_gate", "ffn_up", "ffn_down")
+_PROJ_LEGACY_ATTN_SITES = ("attn_q", "attn_k", "attn_v", "attn_o",
+                           "ssm_in", "ssm_out")
+
+PHANTOM_KINDS = ("phantom", "lowrank_distill")
+
+
+@dataclass(frozen=True)
+class ProjectionMap:
+    """Per-site ProjectionSpec overrides.  ``default`` applies to any site
+    without an explicit entry; ``None`` everywhere falls back to the
+    legacy ``ffn_impl``/``PhantomConfig.apply_*`` shim."""
+    default: Optional[ProjectionSpec] = None
+    ffn_layer: Optional[ProjectionSpec] = None
+    ffn_gate: Optional[ProjectionSpec] = None
+    ffn_up: Optional[ProjectionSpec] = None
+    ffn_down: Optional[ProjectionSpec] = None
+    attn_q: Optional[ProjectionSpec] = None
+    attn_k: Optional[ProjectionSpec] = None
+    attn_v: Optional[ProjectionSpec] = None
+    attn_o: Optional[ProjectionSpec] = None
+    ssm_in: Optional[ProjectionSpec] = None
+    ssm_out: Optional[ProjectionSpec] = None
+    moe_experts: Optional[ProjectionSpec] = None
+
+    def get(self, site: str) -> Optional[ProjectionSpec]:
+        return getattr(self, site) or self.default
 
 
 # ---------------------------------------------------------------------------
@@ -99,8 +170,12 @@ class ModelConfig:
     ssm: Optional[SSMConfig] = None
 
     # --- parallelism / technique selection -------------------------------
+    # DEPRECATED: ffn_impl + phantom.apply_* are legacy shims; they expand
+    # into per-site ProjectionSpecs via projection_spec() below.
     ffn_impl: str = "dense"         # dense (Megatron TP baseline) | phantom
     phantom: PhantomConfig = field(default_factory=PhantomConfig)
+    # per-site strategy selection (wins over the legacy shim when set)
+    projections: ProjectionMap = field(default_factory=ProjectionMap)
     attn_shard: str = "auto"        # auto | head | ring
     # decode-time: model axis factors into (gcd(kv,p) kv-groups x seq chunks)
 
@@ -129,6 +204,46 @@ class ModelConfig:
     # paper-FFN-specific (family == "ffn")
     ffn_width: int = 0
     ffn_depth: int = 0
+
+    def projection_spec(self, site: str) -> ProjectionSpec:
+        """Resolve the ProjectionSpec governing one projection site.
+
+        Order: explicit per-site entry in ``projections`` > ``projections.
+        default`` > the legacy ``ffn_impl``/``PhantomConfig.apply_*`` shim
+        > the site's natural dense strategy.  The pseudo-kind ``tensor``
+        resolves to the site default (col/row).
+        """
+        if site not in PROJECTION_SITES:
+            raise KeyError(f"unknown projection site {site!r}; "
+                           f"known: {sorted(PROJECTION_SITES)}")
+        spec = self.projections.get(site)
+        if spec is None:
+            spec = self._legacy_projection_spec(site)
+        if spec.kind == "tensor":
+            spec = dataclasses.replace(spec, kind=PROJECTION_SITES[site])
+        return spec
+
+    def _legacy_projection_spec(self, site: str) -> ProjectionSpec:
+        """Deprecation shim: expand ffn_impl / PhantomConfig.apply_* flags
+        into the equivalent per-site spec."""
+        pp = self.phantom
+        ph = ProjectionSpec(kind="phantom", k=pp.k, variant=pp.variant,
+                            include_self_term=pp.include_self_term)
+        if site == "ffn_layer":
+            return ph if self.ffn_impl == "phantom" else ProjectionSpec()
+        if site in _FFN_SITES and pp.apply_ffn \
+                and self.ffn_impl != "dense_force":
+            return ph
+        if site in _PROJ_LEGACY_ATTN_SITES and pp.apply_attn_proj:
+            return ph
+        return ProjectionSpec()
+
+    def uses_phantom_sites(self, sites=None) -> bool:
+        """True if any (given) projection site resolves to a phantom-family
+        strategy — decides the residual-stream layout (fp)."""
+        sites = sites or tuple(PROJECTION_SITES)
+        return any(self.projection_spec(s).kind in PHANTOM_KINDS
+                   for s in sites)
 
     def resolved_head_dim(self) -> int:
         if self.head_dim:

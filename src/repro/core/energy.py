@@ -49,37 +49,62 @@ def comm_time_us(collective: str, m_floats: float, p: int,
 
 
 # --- per-iteration cost models (paper Eqns. 3-4, 24-25) -------------------
+#
+# These are now DERIVED from the ProjectionStrategy objects: a strategy's
+# flops()/comm_events() are the per-operator account of the very operators
+# the shard_map computation executes, so the Table II schedule (AG n/p-wide
+# for TP, AG k-wide for phantom) is summed rather than re-derived by hand.
+# tests/test_strategies.py pins the sums to the historical closed forms.
+
+TRAIN_PASS_FACTOR = 3.0   # fwd + bwd-input + bwd-weight GEMMs
+
+
+def costs_from_strategies(strategies, p: int, L: int, batch: int,
+                          peak_flops: float, fits=None,
+                          training: bool = True):
+    """(alpha_sec, beta_sec) per iteration for L layers, each executing
+    the given projection strategies once per pass.
+
+    alpha: per-rank flops summed over strategies (x3 for training: the
+    backward re-runs each GEMM twice — input grads + weight grads).
+    beta:  paper Eqn. 26 comm time summed over each strategy's fwd+bwd
+    collective events.
+    """
+    pass_factor = TRAIN_PASS_FACTOR if training else 1.0
+    flops_rank = sum(st.flops(batch) for st in strategies) * pass_factor * L
+    alpha = flops_rank / peak_flops
+    us = 0.0
+    for st in strategies:
+        for ev in st.comm_events(batch):
+            if not training and ev.phase == "bwd":
+                continue
+            us += comm_time_us(ev.collective, ev.m_floats, p, fits)
+    beta = us * L * 1e-6
+    return alpha, beta
+
 
 def tp_costs(n: int, p: int, L: int, batch: int, peak_flops: float,
              fits=None):
     """(alpha_sec, beta_sec) per iteration for TP training of an n-wide,
-    L-layer FFN.  alpha: 2*n^2*batch flops per layer per pass, x2 passes,
-    x ~1.5 for the weight-gradient GEMM -> use 6*n^2*batch per layer total
-    (fwd 2 + bwd-input 2 + bwd-weight 2).  Per-rank compute is total/p.
-    """
-    flops_total = 6.0 * n * n * batch * L
-    alpha = flops_total / p / peak_flops
-    per_layer_fwd = comm_time_us("all_gather", (n / p) * batch, p, fits)
-    per_layer_bwd = comm_time_us("reduce_scatter", (n / p) * batch, p, fits)
-    beta = (per_layer_fwd + per_layer_bwd) * L * 1e-6
-    return alpha, beta
+    L-layer FFN: sums the ``tensor_col`` strategy's per-operator account
+    (historically 6*n^2*batch/p flops + AG/RS of (n/p)*batch floats per
+    layer)."""
+    from repro.parallel.strategies import TensorColStrategy
+    st = TensorColStrategy(n, n, p, bias=True)
+    return costs_from_strategies([st], p, L, batch, peak_flops, fits)
 
 
 def pp_costs(n: int, p: int, L: int, k: int, batch: int, peak_flops: float,
              fits=None):
-    """(alpha_sec, beta_sec) per iteration for phantom-parallel training.
-
-    Per layer per rank: local (n/p)^2, compress k*n/p, decompress (p-1)*k*n/p
-    -> 2*( (n/p)^2 + k*n/p*p ) * batch flops fwd; x3 for fwd+bwd as above.
-    Ghost collectives carry k*batch floats.
+    """(alpha_sec, beta_sec) per iteration for phantom-parallel training:
+    sums the ``phantom`` strategy's account (historically 6*((n/p)^2 +
+    k*n)*batch flops per rank + AG/RS of k*batch ghost floats per layer).
     """
-    per_rank = (n / p) ** 2 + k * n  # ~ (n/p)^2 + (p)*k*(n/p)
-    flops_rank = 6.0 * per_rank * batch * L
-    alpha = flops_rank / peak_flops
-    per_layer_fwd = comm_time_us("all_gather", k * batch, p, fits)
-    per_layer_bwd = comm_time_us("reduce_scatter", k * batch, p, fits)
-    beta = (per_layer_fwd + per_layer_bwd) * L * 1e-6
-    return alpha, beta
+    from repro.configs.base import ProjectionSpec
+    from repro.parallel.strategies import make_strategy
+    st = make_strategy(ProjectionSpec(kind="phantom", k=k), n, n, p,
+                       bias=True)
+    return costs_from_strategies([st], p, L, batch, peak_flops, fits)
 
 
 def energy_per_iteration(alpha_s: float, beta_s: float, p: int,

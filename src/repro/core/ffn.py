@@ -26,34 +26,31 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core import tp as tpmod
-from repro.core.phantom import phantom_apply, phantom_decls, phantom_param_count
 from repro.parallel.axes import MeshAxes, resolve_spec
-from repro.parallel.params import ParamDecl, abstract, materialize, specs, stack
+from repro.parallel.params import abstract, materialize, specs, stack
+from repro.parallel.compat import shard_map
+from repro.parallel.strategies import site_strategy
 
 
 # ---------------------------------------------------------------------------
-# declarations
+# declarations (via the ProjectionStrategy API, site "ffn_layer")
 # ---------------------------------------------------------------------------
+
+def ffn_strategy(cfg: ModelConfig, tp: int):
+    """The one square n x n projection strategy each paper-FFN layer uses."""
+    n = cfg.ffn_width
+    return site_strategy(cfg, "ffn_layer", n, n, tp, bias=True)
+
 
 def ffn_decls(cfg: ModelConfig, axes: MeshAxes):
-    n, L = cfg.ffn_width, cfg.num_layers
-    if cfg.ffn_impl == "phantom":
-        layer = phantom_decls(n, n, cfg.phantom.k, axes.tp)
-    else:
-        layer = {
-            "w": ParamDecl((n, n), P(None, "tp")),
-            "b": ParamDecl((n,), P("tp"), init="zeros"),
-        }
+    L = cfg.num_layers
+    layer = ffn_strategy(cfg, axes.tp).decls()
     return {"layers": stack(layer, L)}
 
 
 def ffn_model_params(cfg: ModelConfig, p: int) -> int:
     """Model size (paper Table I): TP size is p-independent; PP shrinks."""
-    n, L = cfg.ffn_width, cfg.num_layers
-    if cfg.ffn_impl == "phantom":
-        return L * phantom_param_count(n, n, cfg.phantom.k, p)
-    return L * (n * n + n)
+    return cfg.num_layers * ffn_strategy(cfg, p).param_count()
 
 
 # ---------------------------------------------------------------------------
@@ -66,17 +63,11 @@ def _act(name: str):
 
 def ffn_apply(cfg: ModelConfig, axes: MeshAxes, params, x):
     act = _act(cfg.mlp)
+    st = ffn_strategy(cfg, axes.tp)
 
-    if cfg.ffn_impl == "phantom":
-        def body(carry, layer):
-            z = phantom_apply(cfg.phantom, layer, carry, axes)
-            return act(z), None
-    else:
-        def body(carry, layer):
-            x_full = tpmod.gather_features(carry, axes)       # AG(n/p*B)
-            z = jnp.einsum("bi,io->bo", x_full, layer["w"])
-            z = z + layer["b"]
-            return act(z), None
+    def body(carry, layer):
+        z = st.apply_shard(layer, carry, axes)
+        return act(z), None
 
     x, _ = lax.scan(body, x, params["layers"])
     return x
@@ -116,7 +107,7 @@ def make_ffn_train_step(cfg: ModelConfig, mesh, optimizer,
     ospecs = jax.tree.map(lambda s: resolve_spec(s, axes), specs(opt_decls))
     bspec = resolve_spec(P("dp", "tp"), axes)
 
-    sharded = jax.shard_map(
+    sharded = shard_map(
         step_fn, mesh=mesh,
         in_specs=(pspecs, ospecs, P(), bspec, bspec),
         out_specs=(pspecs, ospecs, P()),
@@ -131,7 +122,7 @@ def make_ffn_forward(cfg: ModelConfig, mesh):
     decls = ffn_decls(cfg, axes)
     pspecs = jax.tree.map(lambda s: resolve_spec(s, axes), specs(decls))
     bspec = resolve_spec(P("dp", "tp"), axes)
-    fwd = jax.shard_map(
+    fwd = shard_map(
         partial(ffn_apply, cfg, axes), mesh=mesh,
         in_specs=(pspecs, bspec), out_specs=bspec, check_vma=False)
     return jax.jit(fwd), decls

@@ -22,6 +22,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.parallel.compat import tpu_compiler_params
+
+_CompilerParams = tpu_compiler_params()
+
 NEG_INF = -1e30
 
 
@@ -109,7 +113,7 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
         out_specs=pl.BlockSpec((None, bq, Hg, hd),
                                lambda b, i: (b, i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B * KV, S, Hg, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(qg, kg, vg)

@@ -25,6 +25,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.parallel.compat import tpu_compiler_params
+
+_CompilerParams = tpu_compiler_params()
+
 
 def _kernel(x_ref, l_ref, g_ref, d_ref, o_ref, acc_ref, *, nk: int):
     @pl.when(pl.program_id(2) == 0)
@@ -72,7 +76,7 @@ def phantom_fused_matmul(x, L, g, D, *, bm: int = 128, bn: int = 128,
         out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, L, g, D)

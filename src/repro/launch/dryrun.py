@@ -41,8 +41,10 @@ def make_cfg(arch: str, impl: str, variant: str | None = None,
         cfg = cfg.replace(phantom=dataclasses.replace(cfg.phantom,
                                                       **nested))
     if impl == "dense":
+        from repro.configs.base import ProjectionMap
         cfg = cfg.replace(phantom=dataclasses.replace(
-            cfg.phantom, apply_ffn=False, apply_attn_proj=False))
+            cfg.phantom, apply_ffn=False, apply_attn_proj=False),
+            projections=ProjectionMap())
     elif variant:
         cfg = cfg.replace(phantom=dataclasses.replace(
             cfg.phantom, variant=variant))

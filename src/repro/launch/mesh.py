@@ -8,14 +8,24 @@ import; tests/benches use small local meshes.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 — explicit axis types
+    from jax.sharding import AxisType
+except ImportError:  # jax 0.4.x: make_mesh has no axis_types parameter
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_local_mesh(dp: int = 2, tp: int = 4):
@@ -26,5 +36,4 @@ def make_local_mesh(dp: int = 2, tp: int = 4):
         if dp * tp > n:
             tp = n
             dp = 1
-    return jax.make_mesh((dp, tp), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return _make_mesh((dp, tp), ("data", "model"))

@@ -48,8 +48,10 @@ def main():
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.impl == "dense":
+        from repro.configs.base import ProjectionMap
         cfg = cfg.replace(phantom=dataclasses.replace(
-            cfg.phantom, apply_ffn=False, apply_attn_proj=False))
+            cfg.phantom, apply_ffn=False, apply_attn_proj=False),
+            projections=ProjectionMap())
     mesh = (make_local_mesh(args.dp, args.tp) if args.smoke
             else make_production_mesh())
     axes = MeshAxes.from_mesh(mesh)

@@ -32,14 +32,18 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.phantom import phantom_apply, phantom_decls
+from repro.configs.base import PHANTOM_KINDS
 from repro.models import rope as ropemod
 from repro.models.layers import (from_partial, gather_fsdp, gather_on_use,
                                  seq_to_feature, to_full)
 from repro.parallel.axes import MeshAxes
 from repro.parallel.params import ParamDecl
+from repro.parallel.strategies import site_strategy
 
 NEG_INF = -1e30
+
+_ATTN_SITES = {"wq": "attn_q", "wk": "attn_k", "wv": "attn_v",
+               "wo": "attn_o"}
 
 
 def _kv_chunk(cfg, full: int, default: int) -> int:
@@ -56,11 +60,35 @@ def resolve_attn_mode(cfg, axes: MeshAxes) -> str:
     return "head" if cfg.num_heads % axes.tp == 0 else "ring"
 
 
-def uses_phantom_proj(cfg, axes: MeshAxes) -> bool:
-    H, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim()
-    return (cfg.phantom.apply_attn_proj
-            and resolve_attn_mode(cfg, axes) == "head"
-            and H % axes.tp == 0 and kv % axes.tp == 0)
+def attn_site_strategies(cfg, axes: MeshAxes, cross: bool = False):
+    """Per-site ProjectionStrategy for the four attention projections.
+
+    Phantom-family specs only take effect in head mode with divisible
+    head/feature counts (the factorization's layout constraints); any
+    site failing the guard silently falls back to its dense strategy —
+    the same all-or-nothing conditions the old ``uses_phantom_proj``
+    applied, now enforced per site.  Cross-attention K/V read encoder
+    memory (replicated, never feature-sharded) so they are always dense.
+    """
+    d, H, kv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim()
+    p = axes.tp
+    ok = (resolve_attn_mode(cfg, axes) == "head"
+          and H % p == 0 and kv % p == 0 and d % p == 0)
+    dims = {"wq": (d, H * hd), "wk": (d, kv * hd), "wv": (d, kv * hd),
+            "wo": (H * hd, d)}
+    sts = {}
+    for name, (ni, no) in dims.items():
+        bias = cfg.qkv_bias and name != "wo"
+        allow = ok and not (cross and name in ("wk", "wv"))
+        sts[name] = site_strategy(cfg, _ATTN_SITES[name], ni, no, p,
+                                  dp=axes.dp, bias=bias, fsdp=cfg.fsdp,
+                                  allow_phantom=allow)
+    return sts
+
+
+def _is_phantom(st) -> bool:
+    return st.kind in PHANTOM_KINDS
 
 
 # ---------------------------------------------------------------------------
@@ -75,44 +103,34 @@ def attn_decls(cfg, axes: MeshAxes, cross: bool = False):
     fs = "dp" if cfg.fsdp else None
     bias = cfg.qkv_bias
 
-    if uses_phantom_proj(cfg, axes):
-        k = cfg.phantom.k
-        return {
-            "wq": phantom_decls(d, H * hd, k, p, bias=bias,
-                                fsdp=cfg.fsdp, dp=axes.dp),
-            "wk": phantom_decls(d, kv * hd, k, p, bias=bias,
-                                fsdp=cfg.fsdp, dp=axes.dp),
-            "wv": phantom_decls(d, kv * hd, k, p, bias=bias,
-                                fsdp=cfg.fsdp, dp=axes.dp),
-            "wo": phantom_decls(H * hd, d, k, p, bias=False,
-                                fsdp=cfg.fsdp, dp=axes.dp),
-        }
-
     if mode == "ring":
-        # input-dim sharded, gathered on use (DESIGN.md §6)
+        # input-dim sharded, gathered on use (DESIGN.md §6); the strategy
+        # API does not govern ring projections
         dec = {
             "wq": {"w": ParamDecl((d, H * hd), P("tp", None))},
             "wk": {"w": ParamDecl((d, kv * hd), P("tp", None))},
             "wv": {"w": ParamDecl((d, kv * hd), P("tp", None))},
             "wo": {"w": ParamDecl((H * hd, d), P("tp", None))},
         }
+        if bias:
+            dec["wq"]["b"] = ParamDecl((H * hd,), P(), init="zeros")
+            dec["wk"]["b"] = ParamDecl((kv * hd,), P(), init="zeros")
+            dec["wv"]["b"] = ParamDecl((kv * hd,), P(), init="zeros")
+        return dec
+
+    sts = attn_site_strategies(cfg, axes, cross=cross)
+    kv_sharded = kv % p == 0
+    dec = {"wq": sts["wq"].decls(), "wo": sts["wo"].decls()}
+    if kv_sharded:
+        dec["wk"] = sts["wk"].decls()
+        dec["wv"] = sts["wv"].decls()
     else:
-        kv_sharded = kv % p == 0
-        kspec = P(fs, "tp") if kv_sharded else P()
-        dec = {
-            "wq": {"w": ParamDecl((d, H * hd), P(fs, "tp"))},
-            "wk": {"w": ParamDecl((d, kv * hd), kspec)},
-            "wv": {"w": ParamDecl((d, kv * hd), kspec)},
-            "wo": {"w": ParamDecl((H * hd, d), P("tp", fs))},
-        }
-    if bias:
-        kv_sharded = kv % p == 0
-        dec["wq"]["b"] = ParamDecl((H * hd,),
-                                   P() if mode == "ring" else P("tp"),
-                                   init="zeros")
-        bspec = P("tp") if (mode != "ring" and kv_sharded) else P()
-        dec["wk"]["b"] = ParamDecl((kv * hd,), bspec, init="zeros")
-        dec["wv"]["b"] = ParamDecl((kv * hd,), bspec, init="zeros")
+        # replicated (small) KV projection; each rank slices its GQA head
+        dec["wk"] = {"w": ParamDecl((d, kv * hd), P())}
+        dec["wv"] = {"w": ParamDecl((d, kv * hd), P())}
+        if bias:
+            dec["wk"]["b"] = ParamDecl((kv * hd,), P(), init="zeros")
+            dec["wv"]["b"] = ParamDecl((kv * hd,), P(), init="zeros")
     return dec
 
 
@@ -212,8 +230,14 @@ def _proj(params, x, nheads, hd, dtype, bias_key="b"):
     return y.reshape(*y.shape[:-1], nheads, hd)
 
 
-def _phantom_proj(pp, params, x, nh_local, hd, axes, dtype):
-    y = phantom_apply(pp, params, x, axes, compute_dtype=dtype)
+def _site_proj(st, params, x_full, x_shard, nh_local, hd, axes, dtype):
+    """One head-mode projection through its strategy: phantom consumes the
+    feature shard, tensor-col the gathered features; both emit the local
+    [..., nh_local, hd] head shard."""
+    if _is_phantom(st):
+        y = st.apply(params, x_shard, axes=axes, compute_dtype=dtype)
+    else:
+        y = st.apply(params, x_full, compute_dtype=dtype)
     return y.reshape(*y.shape[:-1], nh_local, hd)
 
 
@@ -246,25 +270,22 @@ def attention(cfg, layout: str, params, x, positions, axes: MeshAxes,
                            return_kv=return_kv)
 
 
-def _qkv_head_mode(cfg, params, x_full, positions, axes, decls, dtype,
-                   rope=True):
-    """Column-sharded QKV in head mode. Returns q [B,S,Hloc,hd],
+def _qkv_head_mode(cfg, params, x_full, x_shard, positions, axes, decls,
+                   dtype, sts, rope=True):
+    """Per-site QKV in head mode. Returns q [B,S,Hloc,hd],
     k/v [B,S,KVloc,hd] (KVloc = kv/p, or full kv if replicated)."""
     H, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim()
     p = axes.tp
-    if uses_phantom_proj(cfg, axes):
-        # x is the fp-layout feature shard (NOT gathered) for phantom
-        q = _phantom_proj(cfg.phantom, _g(params, decls, "wq", axes), x_full,
-                          H // p, hd, axes, dtype)
-        k = _phantom_proj(cfg.phantom, _g(params, decls, "wk", axes), x_full,
-                          kv // p, hd, axes, dtype)
-        v = _phantom_proj(cfg.phantom, _g(params, decls, "wv", axes), x_full,
-                          kv // p, hd, axes, dtype)
-    else:
-        q = _proj(_g(params, decls, "wq", axes), x_full, H // p, hd, dtype)
-        kvh = kv // p if kv % p == 0 else kv
-        k = _proj(_g(params, decls, "wk", axes), x_full, kvh, hd, dtype)
-        v = _proj(_g(params, decls, "wv", axes), x_full, kvh, hd, dtype)
+    q = _site_proj(sts["wq"], _g(params, decls, "wq", axes), x_full,
+                   x_shard, H // p, hd, axes, dtype)
+    if kv % p == 0:
+        k = _site_proj(sts["wk"], _g(params, decls, "wk", axes), x_full,
+                       x_shard, kv // p, hd, axes, dtype)
+        v = _site_proj(sts["wv"], _g(params, decls, "wv", axes), x_full,
+                       x_shard, kv // p, hd, axes, dtype)
+    else:  # replicated KV weights (strategy API not applicable)
+        k = _proj(_g(params, decls, "wk", axes), x_full, kv, hd, dtype)
+        v = _proj(_g(params, decls, "wv", axes), x_full, kv, hd, dtype)
     if rope and cfg.rope != "none":
         q = ropemod.rope_for(cfg, q, positions)
         k = ropemod.rope_for(cfg, k, positions)
@@ -276,25 +297,27 @@ def _attention_head(cfg, layout, params, x, positions, axes, decls, *,
     H, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim()
     p = axes.tp
     dtype = jnp.dtype(cfg.dtype)
-    phantom = uses_phantom_proj(cfg, axes)
+    sts = attn_site_strategies(cfg, axes, cross=memory is not None)
+    if memory is None:
+        x_users = [sts["wq"], sts["wk"], sts["wv"]]
+    else:
+        x_users = [sts["wq"]]                    # cross KV read `memory`
+    need_full = any(not _is_phantom(st) for st in x_users) or kv % p != 0
     j = lax.axis_index(axes.tp_name)
 
-    if phantom:
-        xq = x                                   # fp shard, no gather
-    else:
-        xq = to_full(x, layout, axes)            # [B, S, d]
+    # phantom sites consume the fp feature shard directly (no gather);
+    # tensor sites need the gathered features — compute only if used.
+    x_shard = x if layout == "fp" else None
+    xq = to_full(x, layout, axes) if need_full else None
 
     if memory is None:
-        q, k, v = _qkv_head_mode(cfg, params, xq, positions, axes, decls,
-                                 dtype)
+        q, k, v = _qkv_head_mode(cfg, params, xq, x_shard, positions, axes,
+                                 decls, dtype, sts)
         kv_positions = positions
     else:
         # cross-attention: q from x, kv from encoder memory (full [B,Se,d])
-        if phantom:
-            q = _phantom_proj(cfg.phantom, _g(params, decls, "wq", axes),
-                              xq, H // p, hd, axes, dtype)
-        else:
-            q = _proj(_g(params, decls, "wq", axes), xq, H // p, hd, dtype)
+        q = _site_proj(sts["wq"], _g(params, decls, "wq", axes), xq,
+                       x_shard, H // p, hd, axes, dtype)
         kvh = kv // p if kv % p == 0 else kv
         k = _proj(_g(params, decls, "wk", axes), memory, kvh, hd, dtype)
         v = _proj(_g(params, decls, "wv", axes), memory, kvh, hd, dtype)
@@ -325,13 +348,13 @@ def _attention_head(cfg, layout, params, x, positions, axes, decls, *,
     out = finalize_acc(acc, dtype)               # [B, S, Hloc, hd]
     out = out.reshape(B, S, -1)
 
-    if phantom:
-        z = phantom_apply(cfg.phantom, _g(params, decls, "wo", axes), out,
-                          axes, compute_dtype=dtype)
+    if _is_phantom(sts["wo"]):
+        z = sts["wo"].apply(_g(params, decls, "wo", axes), out, axes=axes,
+                            compute_dtype=dtype)
         res = z                                   # stays feature-sharded
     else:
-        wo = _g(params, decls, "wo", axes)["w"].astype(dtype)
-        z = jnp.einsum("bsn,nd->bsd", out, wo)    # partial over tp
+        z = sts["wo"].apply(_g(params, decls, "wo", axes), out,
+                            compute_dtype=dtype)  # partial over tp
         res = from_partial(z, layout, axes)
 
     new_kv = None
@@ -460,59 +483,51 @@ def _attention_decode(cfg, layout, params, x, axes, decls, *, cache, pos,
     p = axes.tp
     dtype = jnp.dtype(cfg.dtype)
     j = lax.axis_index(axes.tp_name)
-    phantom = uses_phantom_proj(cfg, axes)
+    mode = resolve_attn_mode(cfg, axes)
+    sts = attn_site_strategies(cfg, axes, cross=cross)
 
     x_full = to_full(x, layout, axes)             # [B, 1, d] tiny
+    x_shard = x if layout == "fp" else None
     B = x_full.shape[0]
 
     # --- project the new token; all ranks need FULL heads -> tiny gathers
-    if phantom:
-        xq = x
-        q = _phantom_proj(cfg.phantom, _g(params, decls, "wq", axes), xq,
-                          H // p, hd, axes, dtype)
+    if mode == "ring":
+        wq = gather_on_use(_g(params, decls, "wq", axes)["w"], axes)
+        q = jnp.einsum("btd,dn->btn", x_full.astype(dtype),
+                       wq.astype(dtype))
+        if "b" in params["wq"]:
+            q = q + params["wq"]["b"].astype(dtype)
+        q = q.reshape(B, 1, H, hd)
+        if not cross:
+            wk = gather_on_use(_g(params, decls, "wk", axes)["w"], axes)
+            wv = gather_on_use(_g(params, decls, "wv", axes)["w"], axes)
+            kn = jnp.einsum("btd,dn->btn", x_full.astype(dtype),
+                            wk.astype(dtype))
+            vn = jnp.einsum("btd,dn->btn", x_full.astype(dtype),
+                            wv.astype(dtype))
+            if "b" in params["wk"]:
+                kn = kn + params["wk"]["b"].astype(dtype)
+                vn = vn + params["wv"]["b"].astype(dtype)
+            kn = kn.reshape(B, 1, kv, hd)
+            vn = vn.reshape(B, 1, kv, hd)
+    else:
+        q = _site_proj(sts["wq"], _g(params, decls, "wq", axes,
+                                     cfg.fsdp_gather_quant), x_full,
+                       x_shard, H // p, hd, axes, dtype)
         q = lax.all_gather(q, axes.tp_name, axis=2, tiled=True)
         if not cross:
-            kn = _phantom_proj(cfg.phantom, _g(params, decls, "wk", axes),
-                               xq, kv // p, hd, axes, dtype)
-            vn = _phantom_proj(cfg.phantom, _g(params, decls, "wv", axes),
-                               xq, kv // p, hd, axes, dtype)
-            kn = lax.all_gather(kn, axes.tp_name, axis=2, tiled=True)
-            vn = lax.all_gather(vn, axes.tp_name, axis=2, tiled=True)
-    else:
-        mode = resolve_attn_mode(cfg, axes)
-        if mode == "ring":
-            wq = gather_on_use(_g(params, decls, "wq", axes)["w"], axes)
-            q = jnp.einsum("btd,dn->btn", x_full.astype(dtype),
-                           wq.astype(dtype))
-            if "b" in params["wq"]:
-                q = q + params["wq"]["b"].astype(dtype)
-            q = q.reshape(B, 1, H, hd)
-            if not cross:
-                wk = gather_on_use(_g(params, decls, "wk", axes)["w"], axes)
-                wv = gather_on_use(_g(params, decls, "wv", axes)["w"], axes)
-                kn = jnp.einsum("btd,dn->btn", x_full.astype(dtype),
-                                wk.astype(dtype))
-                vn = jnp.einsum("btd,dn->btn", x_full.astype(dtype),
-                                wv.astype(dtype))
-                if "b" in params["wk"]:
-                    kn = kn + params["wk"]["b"].astype(dtype)
-                    vn = vn + params["wv"]["b"].astype(dtype)
-                kn = kn.reshape(B, 1, kv, hd)
-                vn = vn.reshape(B, 1, kv, hd)
-        else:
-            q = _proj(_g(params, decls, "wq", axes,
-                         cfg.fsdp_gather_quant), x_full, H // p, hd,
-                      dtype)
-            q = lax.all_gather(q, axes.tp_name, axis=2, tiled=True)
-            if not cross:
-                kvh = kv // p if kv % p == 0 else kv
-                kn = _proj(_g(params, decls, "wk", axes), x_full, kvh, hd,
+            if kv % p == 0:
+                kn = _site_proj(sts["wk"], _g(params, decls, "wk", axes),
+                                x_full, x_shard, kv // p, hd, axes, dtype)
+                vn = _site_proj(sts["wv"], _g(params, decls, "wv", axes),
+                                x_full, x_shard, kv // p, hd, axes, dtype)
+                kn = lax.all_gather(kn, axes.tp_name, axis=2, tiled=True)
+                vn = lax.all_gather(vn, axes.tp_name, axis=2, tiled=True)
+            else:
+                kn = _proj(_g(params, decls, "wk", axes), x_full, kv, hd,
                            dtype)
-                vn = _proj(_g(params, decls, "wv", axes), x_full, kvh, hd,
+                vn = _proj(_g(params, decls, "wv", axes), x_full, kv, hd,
                            dtype)
-                if kv % p == 0:
-                    kn = lax.all_gather(kn, axes.tp_name, axis=2, tiled=True)
-                    vn = lax.all_gather(vn, axes.tp_name, axis=2, tiled=True)
 
     # rope on q and new kv at per-sequence positions `pos` [B]
     pos = jnp.asarray(pos, jnp.int32).reshape(B)
@@ -569,15 +584,14 @@ def _attention_decode(cfg, layout, params, x, axes, decls, *, cache, pos,
     out = out.reshape(B, 1, H * hd).astype(dtype)
 
     # --- output projection ------------------------------------------------
-    if phantom:
+    if mode != "ring" and _is_phantom(sts["wo"]):
         # out is replicated; phantom wo expects feature shard: slice ours
         sl = out.reshape(B, 1, p, (H * hd) // p)
         mine = jnp.take(sl, j, axis=2)
-        z = phantom_apply(cfg.phantom, _g(params, decls, "wo", axes), mine,
-                          axes, compute_dtype=dtype)
+        z = sts["wo"].apply(_g(params, decls, "wo", axes), mine, axes=axes,
+                            compute_dtype=dtype)
         res = z
     else:
-        mode = resolve_attn_mode(cfg, axes)
         wo = _g(params, decls, "wo", axes)["w"]
         if mode == "ring":
             # wo gathered: z is COMPLETE (not a partial sum) on every rank

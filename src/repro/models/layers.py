@@ -16,10 +16,11 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.configs.base import PHANTOM_KINDS
 from repro.core import tp as tpmod
-from repro.core.phantom import phantom_apply, phantom_decls
 from repro.parallel.axes import MeshAxes
 from repro.parallel.params import ParamDecl
+from repro.parallel.strategies import site_strategy
 
 
 # ---------------------------------------------------------------------------
@@ -27,9 +28,11 @@ from repro.parallel.params import ParamDecl
 # ---------------------------------------------------------------------------
 
 def residual_layout(cfg, kind: str) -> str:
-    """Which layout the residual stream uses for this config/step kind."""
-    phantom_used = cfg.phantom.apply_ffn or cfg.phantom.apply_attn_proj
-    if cfg.ffn_impl == "phantom" or phantom_used:
+    """Which layout the residual stream uses for this config/step kind.
+
+    Any projection site resolving to a phantom-family strategy keeps the
+    residual feature-sharded end-to-end (the paper's layout)."""
+    if cfg.uses_phantom_sites():
         return "fp"
     if kind == "decode":
         return "rep"
@@ -208,31 +211,22 @@ def gather_tree_fsdp(params, decls, axes: MeshAxes, quant: bool = False):
 # MLP (dense TP and phantom)
 # ---------------------------------------------------------------------------
 
+def mlp_strategies(cfg, axes: MeshAxes, d: int, ff: int):
+    """One ProjectionStrategy per MLP site (gate/up/down), per-site
+    selectable via cfg.projections (ffn_gate / ffn_up / ffn_down)."""
+    names = ("gate", "up", "down") if cfg.mlp == "swiglu" else ("up", "down")
+    out = {}
+    for name in names:
+        n_in, n_out = (ff, d) if name == "down" else (d, ff)
+        bias = name == "up" and cfg.mlp != "swiglu"
+        out[name] = site_strategy(cfg, f"ffn_{name}", n_in, n_out, axes.tp,
+                                  dp=axes.dp, bias=bias, fsdp=cfg.fsdp)
+    return out
+
+
 def mlp_decls(cfg, axes: MeshAxes, d: int, ff: int):
-    fs = cfg.fsdp
-    if cfg.phantom.apply_ffn and cfg.ffn_impl != "dense_force":
-        k = cfg.phantom.k
-        if cfg.mlp == "swiglu":
-            return {"gate": phantom_decls(d, ff, k, axes.tp, bias=False,
-                                          fsdp=fs, dp=axes.dp),
-                    "up": phantom_decls(d, ff, k, axes.tp, bias=False,
-                                        fsdp=fs, dp=axes.dp),
-                    "down": phantom_decls(ff, d, k, axes.tp, bias=False,
-                                          fsdp=fs, dp=axes.dp)}
-        return {"up": phantom_decls(d, ff, k, axes.tp, bias=True, fsdp=fs,
-                                    dp=axes.dp),
-                "down": phantom_decls(ff, d, k, axes.tp, bias=False,
-                                      fsdp=fs, dp=axes.dp)}
-    if cfg.mlp == "swiglu":
-        return {"gate": tpmod.col_linear_decls(d, ff, axes.tp, bias=False,
-                                               fsdp=fs),
-                "up": tpmod.col_linear_decls(d, ff, axes.tp, bias=False,
-                                             fsdp=fs),
-                "down": tpmod.row_linear_decls(ff, d, axes.tp, bias=False,
-                                               fsdp=fs)}
-    return {"up": tpmod.col_linear_decls(d, ff, axes.tp, bias=True, fsdp=fs),
-            "down": tpmod.row_linear_decls(ff, d, axes.tp, bias=False,
-                                           fsdp=fs)}
+    return {name: st.decls()
+            for name, st in mlp_strategies(cfg, axes, d, ff).items()}
 
 
 def _mlp_act(cfg):
@@ -243,38 +237,54 @@ def _mlp_act(cfg):
 def mlp_apply(cfg, layout: str, params, x, axes: MeshAxes, decls=None):
     """x: residual shard -> residual shard (same layout).
 
-    phantom: stays feature-sharded; communicates only k-wide ghosts.
-    dense:   gather -> col -> act -> row -> reduce-scatter (Megatron-SP).
+    all-phantom: stays feature-sharded; communicates only k-wide ghosts.
+    all-tensor:  gather -> col -> act -> row -> reduce-scatter
+                 (Megatron-SP; one gather shared by gate and up).
+    mixed:       per-site shard->shard composition in the fp layout.
     """
     act = _mlp_act(cfg)
     dt = jnp.dtype(cfg.dtype)
-    if cfg.phantom.apply_ffn:
-        pp = cfg.phantom
+    d_in = x.shape[-1] * (axes.tp if layout == "fp" else 1)
+    ff = cfg.d_ff
+    sts = mlp_strategies(cfg, axes, d_in, ff)
+    kinds = {st.kind for st in sts.values()}
+
+    def p_(name):
+        return _fs(params[name], decls, name, axes, cfg.fsdp_gather_quant)
+
+    if kinds <= {"phantom", "lowrank_distill"}:
         if cfg.mlp == "swiglu":
-            g = phantom_apply(pp, _fs(params["gate"], decls, "gate", axes, cfg.fsdp_gather_quant),
-                              x, axes, compute_dtype=dt)
-            u = phantom_apply(pp, _fs(params["up"], decls, "up", axes, cfg.fsdp_gather_quant),
-                              x, axes, compute_dtype=dt)
+            g = sts["gate"].apply(p_("gate"), x, axes=axes, compute_dtype=dt)
+            u = sts["up"].apply(p_("up"), x, axes=axes, compute_dtype=dt)
             h = act(g) * u
         else:
-            h = act(phantom_apply(pp, _fs(params["up"], decls, "up", axes, cfg.fsdp_gather_quant),
-                                  x, axes, compute_dtype=dt))
-        return phantom_apply(pp, _fs(params["down"], decls, "down", axes, cfg.fsdp_gather_quant),
-                             h, axes, compute_dtype=dt)
+            h = act(sts["up"].apply(p_("up"), x, axes=axes,
+                                    compute_dtype=dt))
+        return sts["down"].apply(p_("down"), h, axes=axes, compute_dtype=dt)
 
-    x_full = to_full(x, layout, axes)
+    if kinds <= {"tensor_col", "tensor_row"}:
+        x_full = to_full(x, layout, axes)
+        if cfg.mlp == "swiglu":
+            g = sts["gate"].apply(p_("gate"), x_full, compute_dtype=dt)
+            u = sts["up"].apply(p_("up"), x_full, compute_dtype=dt)
+            h = act(g) * u
+        else:
+            h = act(sts["up"].apply(p_("up"), x_full, compute_dtype=dt))
+        pd = p_("down")
+        z = sts["down"].apply(pd, h, compute_dtype=dt)
+        z = from_partial(z, layout, axes)
+        return sts["down"].add_bias(z, pd, axes, sharded=(layout == "fp"))
+
+    # mixed strategies: uniform feature-shard composition (fp layout only —
+    # residual_layout guarantees fp whenever any site is phantom-family)
+    assert layout == "fp", (layout, kinds)
     if cfg.mlp == "swiglu":
-        g = tpmod.col_linear_apply(_fs(params["gate"], decls, "gate", axes, cfg.fsdp_gather_quant),
-                                   x_full, dt)
-        u = tpmod.col_linear_apply(_fs(params["up"], decls, "up", axes, cfg.fsdp_gather_quant),
-                                   x_full, dt)
+        g = sts["gate"].apply_shard(p_("gate"), x, axes, compute_dtype=dt)
+        u = sts["up"].apply_shard(p_("up"), x, axes, compute_dtype=dt)
         h = act(g) * u
     else:
-        h = act(tpmod.col_linear_apply(_fs(params["up"], decls, "up", axes, cfg.fsdp_gather_quant),
-                                       x_full, dt))
-    z = tpmod.row_linear_apply(_fs(params["down"], decls, "down", axes, cfg.fsdp_gather_quant),
-                               h, dt)
-    return from_partial(z, layout, axes)
+        h = act(sts["up"].apply_shard(p_("up"), x, axes, compute_dtype=dt))
+    return sts["down"].apply_shard(p_("down"), h, axes, compute_dtype=dt)
 
 
 def _fs(params, decls, key, axes, quant: bool = False):

@@ -485,7 +485,8 @@ _DECLS_CACHE = {}
 
 
 def model_decls_cache(cfg, axes):
-    key = (cfg.name, cfg.ffn_impl, cfg.phantom, axes.tp, axes.dp, cfg.fsdp)
+    key = (cfg.name, cfg.ffn_impl, cfg.phantom, cfg.projections, axes.tp,
+           axes.dp, cfg.fsdp)
     if key not in _DECLS_CACHE:
         _DECLS_CACHE[key] = model_decls(cfg, axes)
     return _DECLS_CACHE[key]

@@ -23,21 +23,50 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.configs.base import PHANTOM_KINDS, PhantomConfig
 from repro.models.layers import (_mlp_act, from_partial, gather_fsdp,
                                  to_full)
 from repro.parallel.axes import MeshAxes
-from repro.parallel.params import ParamDecl
+from repro.parallel.params import ParamDecl, stack
 
 
 # ---------------------------------------------------------------------------
 # declarations
 # ---------------------------------------------------------------------------
 
+def moe_expert_spec(cfg, axes: MeshAxes):
+    """Resolved ProjectionSpec for the expert FFNs, or None for the dense
+    layout.  Phantom-factorized experts require the tensor partition
+    (each expert's d_ff sharded over the model axis), divisible dims, and
+    no FSDP (the batched phantom decls don't carry dp-sharded dims)."""
+    m = cfg.moe
+    spec = cfg.projection_spec("moe_experts")
+    if (spec.kind in PHANTOM_KINDS and m.partition == "tensor"
+            and cfg.d_model % axes.tp == 0
+            and m.d_ff_expert % axes.tp == 0 and not cfg.fsdp):
+        return spec
+    return None
+
+
 def moe_decls(cfg, axes: MeshAxes):
     m = cfg.moe
     d, E, ff = cfg.d_model, m.num_experts, m.d_ff_expert
     fs = "dp" if cfg.fsdp else None
     swiglu = cfg.mlp == "swiglu"
+    pspec = moe_expert_spec(cfg, axes)
+    if pspec is not None:
+        # per-expert phantom factorization (E-stacked phantom decls)
+        from repro.core.phantom import phantom_decls
+        mk = lambda ni, no: stack(
+            phantom_decls(ni, no, pspec.k, axes.tp, bias=False), E)
+        dec = {
+            "router": {"w": ParamDecl((d, E), P(), scale=d ** -0.5)},
+            "w_up": mk(d, ff),
+            "w_down": mk(ff, d),
+        }
+        if swiglu:
+            dec["w_gate"] = mk(d, ff)
+        return dec
     if m.partition == "expert":
         assert E % axes.tp == 0, (E, axes.tp)
         from repro.models.layers import residual_layout
@@ -208,9 +237,38 @@ def _moe_expert_partition(cfg, layout, params, x, axes, decls):
     return y.reshape(x.shape), _aux_loss(logits, E)
 
 
+def _expert_ffn_phantom(cfg, pspec, params, xin, axes, dtype):
+    """Phantom-factorized experts (tensor partition): xin [E, C, d] full
+    features -> feature-shard output [E, C, d/p].
+
+    Each expert's projections are phantom matmuls vmapped over the expert
+    dim; the ghost all-gathers batch across experts."""
+    from repro.core.phantom import phantom_apply
+    act = _mlp_act(cfg)
+    pp = PhantomConfig(k=pspec.k, variant=pspec.variant,
+                       include_self_term=pspec.include_self_term)
+    p = axes.tp
+    j = lax.axis_index(axes.tp_name)
+    dloc = xin.shape[-1] // p
+    xloc = lax.dynamic_slice_in_dim(xin, j * dloc, dloc, axis=2)
+
+    def pa(pe, xe):
+        return jax.vmap(
+            lambda pee, xee: phantom_apply(pp, pee, xee, axes,
+                                           compute_dtype=dtype))(pe, xe)
+
+    if cfg.mlp == "swiglu":
+        h = act(pa(params["w_gate"], xloc)) * pa(params["w_up"], xloc)
+    else:
+        h = act(pa(params["w_up"], xloc))
+    return pa(params["w_down"], h)                          # [E, C, d/p]
+
+
 def _moe_tensor_partition(cfg, layout, params, x, axes, decls):
     """sp layout: x [B, S/p, d].  Tokens gathered once (Megatron AG), every
-    expert's d_ff sharded; outputs reduce-scatter back."""
+    expert's d_ff sharded; outputs reduce-scatter back.  With phantom
+    experts (fp layout) the expert outputs come back feature-sharded and
+    ARE the residual shard — only k-wide ghosts cross the mesh."""
     m = cfg.moe
     dtype = jnp.dtype(cfg.dtype)
     E = m.num_experts
@@ -228,14 +286,23 @@ def _moe_tensor_partition(cfg, layout, params, x, axes, decls):
     xin = jnp.where(disp_ok.reshape(-1, 1), xin, 0)
     xin = xin.reshape(E, C, d).astype(dtype)
 
-    yout = _expert_ffn(cfg, params, decls, xin, axes, dtype)  # ff sharded
-    # yout is a PARTIAL sum over the sharded d_ff contraction dim:
-    yflat = yout.reshape(E * C, d)
+    pspec = moe_expert_spec(cfg, axes)
+    if pspec is not None:
+        yout = _expert_ffn_phantom(cfg, pspec, params, xin, axes, dtype)
+        d_out = d // axes.tp                                # feature shard
+    else:
+        yout = _expert_ffn(cfg, params, decls, xin, axes, dtype)
+        d_out = d                    # PARTIAL sum over the sharded d_ff dim
+    yflat = yout.reshape(E * C, d_out)
     ok = combine_slot >= 0
     slots = jnp.where(ok, combine_slot, 0)
-    picked = jnp.take(yflat, slots.reshape(-1), axis=0).reshape(T, m.top_k, d)
+    picked = jnp.take(yflat, slots.reshape(-1), axis=0) \
+        .reshape(T, m.top_k, d_out)
     w = jnp.where(ok, gates, 0.0)[..., None].astype(picked.dtype)
-    y = jnp.sum(picked * w, axis=1).reshape(B, S, d)
+    y = jnp.sum(picked * w, axis=1).reshape(B, S, d_out)
+    if pspec is not None:
+        assert layout == "fp", layout   # phantom keeps features sharded
+        return y, _aux_loss(logits, E)
     y = from_partial(y, layout, axes)                       # RS the partials
     return y, _aux_loss(logits, E)
 

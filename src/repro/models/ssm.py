@@ -21,11 +21,11 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.phantom import phantom_apply, phantom_decls
-from repro.core import tp as tpmod
+from repro.configs.base import PHANTOM_KINDS
 from repro.models.layers import from_partial, to_full
 from repro.parallel.axes import MeshAxes
 from repro.parallel.params import ParamDecl
+from repro.parallel.strategies import site_strategy
 
 
 def ssm_dims(cfg):
@@ -33,6 +33,21 @@ def ssm_dims(cfg):
     d_inner = s.expand * cfg.d_model
     H = d_inner // s.head_dim
     return d_inner, H, s.d_state, s.head_dim
+
+
+def ssm_site_strategies(cfg, axes: MeshAxes):
+    """Strategies for the in (z/x) and out projections.  Phantom only
+    applies when the sharded dims divide the model axis (the legacy
+    ``apply_attn_proj`` guard, now per site)."""
+    d = cfg.d_model
+    d_inner = cfg.ssm.expand * d
+    p = axes.tp
+    ok = d_inner % p == 0 and d % p == 0
+    mk = lambda site, ni, no: site_strategy(
+        cfg, site, ni, no, p, dp=axes.dp, bias=False, fsdp=cfg.fsdp,
+        allow_phantom=ok)
+    return {"in": mk("ssm_in", d, d_inner),
+            "out": mk("ssm_out", d_inner, d)}
 
 
 # ---------------------------------------------------------------------------
@@ -44,29 +59,16 @@ def ssm_decls(cfg, axes: MeshAxes):
     d_inner, H, N, hd = ssm_dims(cfg)
     p = axes.tp
     s = cfg.ssm
-    fs = "dp" if cfg.fsdp else None
-    phantom = cfg.phantom.apply_attn_proj and d_inner % p == 0
-
-    if phantom:
-        proj_in = lambda nout: phantom_decls(d, nout, cfg.phantom.k, p,
-                                             bias=False, fsdp=cfg.fsdp,
-                                             dp=axes.dp)
-        proj_out = phantom_decls(d_inner, d, cfg.phantom.k, p, bias=False,
-                                 fsdp=cfg.fsdp, dp=axes.dp)
-    else:
-        proj_in = lambda nout: tpmod.col_linear_decls(d, nout, p,
-                                                      bias=False, fsdp=cfg.fsdp)
-        proj_out = tpmod.row_linear_decls(d_inner, d, p, bias=False,
-                                          fsdp=cfg.fsdp)
+    sts = ssm_site_strategies(cfg, axes)
     assert H % p == 0, (H, p)
     return {
-        "wz": proj_in(d_inner),
-        "wx": proj_in(d_inner),
+        "wz": sts["in"].decls(),
+        "wx": sts["in"].decls(),
         "wbc": {"w": ParamDecl((d, 2 * s.ngroups * N), P(),
                                scale=d ** -0.5)},           # replicated
         "wdt": {"w": ParamDecl((d, H), P(None, "tp"), scale=d ** -0.5),
                 "b": ParamDecl((H,), P("tp"), init="zeros")},
-        "out": proj_out,
+        "out": sts["out"].decls(),
         "A_log": ParamDecl((H,), P("tp"), init="zeros"),
         "Dskip": ParamDecl((H,), P("tp"), init="ones"),
         "conv_w": ParamDecl((s.conv_width, d_inner), P(None, "tp"),
@@ -161,15 +163,13 @@ def _ssd_decode_step(state, x, dt, A, Bm, Cm):
 # full block apply
 # ---------------------------------------------------------------------------
 
-def _in_projs(cfg, params, xin, axes, dtype, phantom):
-    d_inner, H, N, hd = ssm_dims(cfg)
-    p = axes.tp
-    if phantom:
-        z = phantom_apply(cfg.phantom, params["wz"], xin, axes, dtype)
-        xs = phantom_apply(cfg.phantom, params["wx"], xin, axes, dtype)
+def _in_projs(cfg, params, xin, axes, dtype, st_in):
+    if st_in.kind in PHANTOM_KINDS:
+        z = st_in.apply(params["wz"], xin, axes=axes, compute_dtype=dtype)
+        xs = st_in.apply(params["wx"], xin, axes=axes, compute_dtype=dtype)
     else:
-        z = tpmod.col_linear_apply(params["wz"], xin, dtype)
-        xs = tpmod.col_linear_apply(params["wx"], xin, dtype)
+        z = st_in.apply(params["wz"], xin, compute_dtype=dtype)
+        xs = st_in.apply(params["wx"], xin, compute_dtype=dtype)
     return z, xs
 
 
@@ -180,7 +180,8 @@ def ssm_apply(cfg, layout: str, params, x, axes: MeshAxes, decls=None, *,
     p = axes.tp
     dtype = jnp.dtype(cfg.dtype)
     H_loc, dinner_loc = H // p, d_inner // p
-    phantom = cfg.phantom.apply_attn_proj and d_inner % p == 0
+    sts = ssm_site_strategies(cfg, axes)
+    phantom_in = sts["in"].kind in PHANTOM_KINDS
     s = cfg.ssm
 
     from repro.models.layers import gather_tree_fsdp
@@ -191,13 +192,13 @@ def ssm_apply(cfg, layout: str, params, x, axes: MeshAxes, decls=None, *,
         return _ssm_decode(cfg, layout, params, x, axes, cache=cache)
 
     # --- input projections -------------------------------------------------
-    if phantom:
+    if phantom_in:
         xin = x                                            # fp shard
         full_for_small = to_full(x, layout, axes)          # [B,S,d] for bc/dt
     else:
         xin = to_full(x, layout, axes)
         full_for_small = xin
-    z, xs = _in_projs(cfg, params, xin, axes, dtype, phantom)
+    z, xs = _in_projs(cfg, params, xin, axes, dtype, sts["in"])
     Bsz, S = full_for_small.shape[0], full_for_small.shape[1]
     xs = xs.reshape(Bsz, S, dinner_loc)
     z = z.reshape(Bsz, S, dinner_loc)
@@ -231,11 +232,11 @@ def ssm_apply(cfg, layout: str, params, x, axes: MeshAxes, decls=None, *,
     y = (y * lax.rsqrt(ms + cfg.norm_eps)
          * params["norm_scale"].astype(jnp.float32)).astype(dtype)
 
-    if phantom:
-        out = phantom_apply(cfg.phantom, params["out"], y, axes, dtype)
-        res = out
+    if sts["out"].kind in PHANTOM_KINDS:
+        res = sts["out"].apply(params["out"], y, axes=axes,
+                               compute_dtype=dtype)
     else:
-        zp = tpmod.row_linear_apply(params["out"], y, dtype)
+        zp = sts["out"].apply(params["out"], y, compute_dtype=dtype)
         res = from_partial(zp, layout, axes)
 
     new_cache = None
@@ -251,12 +252,13 @@ def _ssm_decode(cfg, layout, params, x, axes, *, cache):
     p = axes.tp
     dtype = jnp.dtype(cfg.dtype)
     H_loc, dinner_loc = H // p, d_inner // p
-    phantom = cfg.phantom.apply_attn_proj and d_inner % p == 0
+    sts = ssm_site_strategies(cfg, axes)
+    phantom_in = sts["in"].kind in PHANTOM_KINDS
     s = cfg.ssm
 
     x_full = to_full(x, layout, axes)                      # [B,1,d]
-    xin = x if phantom else x_full
-    z, xs = _in_projs(cfg, params, xin, axes, dtype, phantom)
+    xin = x if phantom_in else x_full
+    z, xs = _in_projs(cfg, params, xin, axes, dtype, sts["in"])
     Bsz = x_full.shape[0]
     xs = xs.reshape(Bsz, dinner_loc)
     z = z.reshape(Bsz, dinner_loc)
@@ -290,10 +292,11 @@ def _ssm_decode(cfg, layout, params, x, axes, *, cache):
          * params["norm_scale"].astype(jnp.float32)).astype(dtype)
     y = y[:, None, :]                                      # [B,1,din_loc]
 
-    if phantom:
-        res = phantom_apply(cfg.phantom, params["out"], y, axes, dtype)
+    if sts["out"].kind in PHANTOM_KINDS:
+        res = sts["out"].apply(params["out"], y, axes=axes,
+                               compute_dtype=dtype)
     else:
-        zp = tpmod.row_linear_apply(params["out"], y, dtype)
+        zp = sts["out"].apply(params["out"], y, compute_dtype=dtype)
         res = from_partial(zp, layout, axes)
     return res, {"conv": new_conv.astype(dtype),
                  "ssm": new_state.astype(cache["ssm"].dtype)}

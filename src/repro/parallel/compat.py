@@ -1,0 +1,30 @@
+"""Version-compat shims for the jax API surface this repo uses.
+
+The repo targets current jax (``jax.shard_map`` with ``check_vma``,
+``jax.sharding.AxisType``), but the container may ship jax 0.4.x where
+``shard_map`` still lives in ``jax.experimental.shard_map`` and the
+replication check is spelled ``check_rep``.  Route every shard_map call
+through here so the rest of the codebase stays on the modern spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+_NEW = hasattr(jax, "shard_map")
+if not _NEW:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+
+def tpu_compiler_params():
+    """pltpu.CompilerParams, or its jax 0.4.x name TPUCompilerParams."""
+    from jax.experimental.pallas import tpu as pltpu
+    return getattr(pltpu, "CompilerParams", None) \
+        or pltpu.TPUCompilerParams
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    if _NEW:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=check_vma)

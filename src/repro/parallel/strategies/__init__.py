@@ -1,0 +1,25 @@
+"""ProjectionStrategy API — swappable, cost-accounted sharded projections.
+
+Usage:
+    from repro.parallel.strategies import site_strategy
+    st = site_strategy(cfg, "ffn_up", d, ff, axes.tp, dp=axes.dp,
+                       bias=False, fsdp=cfg.fsdp)
+    decls = st.decls()                 # ParamDecl tree
+    y = st.apply(params, x, axes=axes) # sharded forward
+    st.flops(batch), st.comm_events(batch)  # Table II accounting
+"""
+from repro.parallel.strategies.base import (CommEvent, ProjectionStrategy,
+                                            available_strategies,
+                                            get_strategy_cls, make_strategy,
+                                            register, site_strategy)
+from repro.parallel.strategies.phantom import (LowrankDistillStrategy,
+                                               PhantomStrategy)
+from repro.parallel.strategies.tensor import (TensorColStrategy,
+                                              TensorRowStrategy)
+
+__all__ = [
+    "CommEvent", "ProjectionStrategy", "available_strategies",
+    "get_strategy_cls", "make_strategy", "register", "site_strategy",
+    "TensorColStrategy", "TensorRowStrategy", "PhantomStrategy",
+    "LowrankDistillStrategy",
+]

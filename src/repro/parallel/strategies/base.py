@@ -1,0 +1,140 @@
+"""ProjectionStrategy — one object per projection site that *computes* the
+sharded projection AND *predicts* its cost.
+
+The paper's central comparison (tensor-parallel vs phantom-parallel
+projections, Table II) used to be hard-coded ``if ffn_impl == "phantom"``
+branches at every call site, with the FLOP/bandwidth/energy model
+re-derived by hand in ``core/energy.py``.  A strategy instance unifies the
+two views: ``decls()``/``apply()`` drive the actual shard_map computation,
+while ``flops()``/``comm_events()``/``param_count()`` are the *same
+object's* per-operator cost predictions, so the Table II schedule falls
+out of the executed operators instead of a parallel hand-maintained model
+(the per-operator attribution PIE-P argues is required for trustworthy
+parallel-inference energy prediction).
+
+Layout contract
+---------------
+Activations inside ``shard_map`` are feature-sharded (``[..., n/p]``) or
+full (``[..., n]``).  Each strategy declares what it consumes/produces:
+
+  * ``in_layout``:  "full" (replicated features) | "shard"
+  * ``out_layout``: "shard" | "partial" (needs a reduction by the caller)
+
+``apply()`` is the native contract (what the fast paths compose);
+``apply_shard()`` is the uniform feature-shard -> feature-shard wrapper
+(gathers/reduces internally) that lets arbitrary strategies mix at
+adjacent sites.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Type
+
+from repro.configs.base import PHANTOM_KINDS, PROJECTION_SITES, ProjectionSpec
+
+
+@dataclass(frozen=True)
+class CommEvent:
+    """One collective issued by a strategy, in paper Eqn. 26 units."""
+    collective: str        # all_gather | reduce_scatter | all_reduce
+    m_floats: float        # per-rank message size, floats
+    phase: str = "fwd"     # fwd | bwd
+
+
+class ProjectionStrategy:
+    """Base class; concrete strategies register themselves by ``kind``."""
+
+    kind: str = "?"
+    in_layout: str = "full"
+    out_layout: str = "shard"
+
+    def __init__(self, n_in: int, n_out: int, tp: int, *, dp: int = 1,
+                 bias: bool = True, fsdp: bool = False,
+                 spec: Optional[ProjectionSpec] = None):
+        self.n_in, self.n_out, self.tp, self.dp = n_in, n_out, tp, dp
+        self.bias, self.fsdp = bias, fsdp
+        self.spec = spec or ProjectionSpec(kind=self.kind)
+
+    # --- compute side ----------------------------------------------------
+    def decls(self) -> Dict:
+        raise NotImplementedError
+
+    def apply(self, params, x, *, axes=None, compute_dtype=None):
+        """Native-layout forward (in_layout -> out_layout)."""
+        raise NotImplementedError
+
+    def apply_shard(self, params, x_shard, axes, compute_dtype=None):
+        """Uniform feature-shard [..., n_in/p] -> [..., n_out/p]."""
+        raise NotImplementedError
+
+    # --- accounting side -------------------------------------------------
+    def param_count(self) -> int:
+        raise NotImplementedError
+
+    def flops(self, batch: int) -> float:
+        """Per-rank FORWARD flops for `batch` rows (2*MACs).  Training
+        cost models multiply by 3 (fwd + bwd-input + bwd-weight)."""
+        raise NotImplementedError
+
+    def comm_events(self, batch: int) -> List[CommEvent]:
+        """Collectives this strategy issues per fwd+bwd pass."""
+        raise NotImplementedError
+
+    def dense_equivalent(self, params):
+        """GLOBAL (unsharded) params -> (W [n_in, n_out], b or None): the
+        dense matrix this strategy computes.  Ground truth for tests."""
+        raise NotImplementedError
+
+    def __repr__(self):
+        return (f"{type(self).__name__}({self.n_in}x{self.n_out}, "
+                f"tp={self.tp}, kind={self.kind})")
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[ProjectionStrategy]] = {}
+
+
+def register(kind: str) -> Callable[[type], type]:
+    def deco(cls):
+        cls.kind = kind
+        _REGISTRY[kind] = cls
+        return cls
+    return deco
+
+
+def available_strategies() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def get_strategy_cls(kind: str) -> Type[ProjectionStrategy]:
+    if kind not in _REGISTRY:
+        raise KeyError(f"unknown projection strategy {kind!r}; "
+                       f"registered: {available_strategies()}")
+    return _REGISTRY[kind]
+
+
+def make_strategy(spec: ProjectionSpec, n_in: int, n_out: int, tp: int, *,
+                  dp: int = 1, bias: bool = True,
+                  fsdp: bool = False) -> ProjectionStrategy:
+    """Instantiate the strategy a ProjectionSpec selects for one site."""
+    return get_strategy_cls(spec.kind)(n_in, n_out, tp, dp=dp, bias=bias,
+                                       fsdp=fsdp, spec=spec)
+
+
+def site_strategy(cfg, site: str, n_in: int, n_out: int, tp: int, *,
+                  dp: int = 1, bias: bool = True, fsdp: bool = False,
+                  allow_phantom: bool = True) -> ProjectionStrategy:
+    """Resolve cfg's spec for `site` and instantiate it.
+
+    ``allow_phantom=False`` forces the site's natural dense strategy —
+    call sites use it to guard divisibility/mode constraints the phantom
+    factorization needs (mirrors the old ``uses_phantom_proj`` guards).
+    """
+    spec = cfg.projection_spec(site)
+    if spec.kind in PHANTOM_KINDS and (
+            not allow_phantom or n_in % tp or n_out % tp):
+        spec = ProjectionSpec(kind=PROJECTION_SITES[site])
+    return make_strategy(spec, n_in, n_out, tp, dp=dp, bias=bias, fsdp=fsdp)

@@ -1,0 +1,100 @@
+"""Tensor-parallel (Megatron-style) projection strategies — the paper's
+baseline, wrapped in the ProjectionStrategy interface.
+
+Table II accounting (per layer, per pass):
+  column path: forward All-Gather of the n_in/p activation shard, backward
+  Reduce-Scatter (the gather's VJP) — message ~ n_in/p * batch floats.
+  row path:    forward Reduce-Scatter of the partial n_out sums, backward
+  All-Gather — message ~ n_out/p * batch floats.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import tp as tpmod
+from repro.parallel.strategies.base import (CommEvent, ProjectionStrategy,
+                                            register)
+
+
+@register("tensor_col")
+class TensorColStrategy(ProjectionStrategy):
+    """Column-parallel: W sharded on n_out; consumes full features."""
+
+    in_layout = "full"
+    out_layout = "shard"
+
+    def decls(self):
+        return tpmod.col_linear_decls(self.n_in, self.n_out, self.tp,
+                                      bias=self.bias, fsdp=self.fsdp)
+
+    def apply(self, params, x, *, axes=None, compute_dtype=None):
+        return tpmod.col_linear_apply(params, x, compute_dtype)
+
+    def apply_shard(self, params, x_shard, axes, compute_dtype=None):
+        x_full = tpmod.gather_features(x_shard, axes)
+        return tpmod.col_linear_apply(params, x_full, compute_dtype)
+
+    def param_count(self):
+        return self.n_in * self.n_out + (self.n_out if self.bias else 0)
+
+    def flops(self, batch):
+        return 2.0 * self.n_in * (self.n_out / self.tp) * batch
+
+    def comm_events(self, batch):
+        m = (self.n_in / self.tp) * batch
+        return [CommEvent("all_gather", m, "fwd"),
+                CommEvent("reduce_scatter", m, "bwd")]
+
+    def dense_equivalent(self, params):
+        return params["w"], params.get("b")
+
+
+@register("tensor_row")
+class TensorRowStrategy(ProjectionStrategy):
+    """Row-parallel: W sharded on n_in; emits partial sums."""
+
+    in_layout = "shard"
+    out_layout = "partial"
+
+    def decls(self):
+        return tpmod.row_linear_decls(self.n_in, self.n_out, self.tp,
+                                      bias=self.bias, fsdp=self.fsdp)
+
+    def apply(self, params, x, *, axes=None, compute_dtype=None):
+        """Partial sums over the sharded contraction dim.  The bias (if
+        declared) must NOT be folded in here — it would be multiplied by
+        p in the reduction; callers add it AFTER reducing, via
+        ``add_bias``.  ``apply_shard`` does both internally."""
+        return tpmod.row_linear_apply(params, x, compute_dtype)
+
+    def add_bias(self, z_reduced, params, axes=None, sharded=False):
+        """Add the replicated bias to the REDUCED output (full features,
+        or the local feature shard when ``sharded``)."""
+        if "b" not in params:
+            return z_reduced
+        b = params["b"]
+        if sharded:
+            j = lax.axis_index(axes.tp_name)
+            nloc = self.n_out // self.tp
+            b = lax.dynamic_slice_in_dim(b, j * nloc, nloc, 0)
+        return z_reduced + b.astype(z_reduced.dtype)
+
+    def apply_shard(self, params, x_shard, axes, compute_dtype=None):
+        z = tpmod.row_linear_apply(params, x_shard, compute_dtype)
+        z = tpmod.scatter_features(z, axes)
+        return self.add_bias(z, params, axes, sharded=True)
+
+    def param_count(self):
+        return self.n_in * self.n_out + (self.n_out if self.bias else 0)
+
+    def flops(self, batch):
+        return 2.0 * (self.n_in / self.tp) * self.n_out * batch
+
+    def comm_events(self, batch):
+        m = (self.n_out / self.tp) * batch
+        return [CommEvent("reduce_scatter", m, "fwd"),
+                CommEvent("all_gather", m, "bwd")]
+
+    def dense_equivalent(self, params):
+        return params["w"], params.get("b")

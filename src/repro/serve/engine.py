@@ -23,6 +23,7 @@ from repro.models.model import (forward_decode, forward_prefill,
                                 model_decls)
 from repro.parallel.axes import MeshAxes, resolve_spec
 from repro.parallel.params import specs
+from repro.parallel.compat import shard_map
 
 
 def make_serve_fns(cfg: ModelConfig, mesh, shape: ShapeConfig):
@@ -52,11 +53,11 @@ def make_serve_fns(cfg: ModelConfig, mesh, shape: ShapeConfig):
         return forward_decode(cfg, axes, params, cache, tokens, pos)
 
     logits_spec = P(tok_spec[0], None, None)
-    prefill_fn = jax.jit(jax.shard_map(
+    prefill_fn = jax.jit(shard_map(
         prefill, mesh=mesh,
         in_specs=(pspecs, bspecs), out_specs=(logits_spec, cspecs),
         check_vma=False))
-    decode_fn = jax.jit(jax.shard_map(
+    decode_fn = jax.jit(shard_map(
         decode, mesh=mesh,
         in_specs=(pspecs, cspecs, tok_spec, pos_spec),
         out_specs=(logits_spec, cspecs),

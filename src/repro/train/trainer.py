@@ -24,6 +24,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.models.model import AUX_LOSS_WEIGHT, forward_train, model_decls
 from repro.parallel.axes import MeshAxes, resolve_spec
+from repro.parallel.compat import shard_map
 from repro.parallel.grads import reduce_grads
 from repro.parallel.params import (ParamDecl, abstract, is_decl,
                                    materialize, specs)
@@ -116,7 +117,7 @@ def make_train_step(cfg: ModelConfig, mesh, optimizer, *,
     bspecs = jax.tree.map(lambda s: resolve_spec(s, axes), batch_spec,
                           is_leaf=lambda x: isinstance(x, P))
 
-    sharded = jax.shard_map(
+    sharded = shard_map(
         step_fn, mesh=mesh,
         in_specs=(pspecs, ospecs, P(), bspecs),
         out_specs=(pspecs, ospecs, P()),

@@ -8,10 +8,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.parallel.axes import MeshAxes, resolve_spec
 from repro.parallel.params import specs
+from repro.parallel.compat import shard_map
 
 
 def smap(fn, mesh, in_specs, out_specs):
-    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+    return jax.jit(shard_map(fn, mesh=mesh, in_specs=in_specs,
                                  out_specs=out_specs, check_vma=False))
 
 

@@ -11,6 +11,7 @@ from repro.core.ffn import (ffn_model_params, init_ffn, make_ffn_forward,
                             make_ffn_train_step)
 from repro.data.synthetic import TeacherDataset, gaussian_teacher
 from repro.optim import SGD
+from repro.parallel.compat import shard_map
 
 
 def _cfg(impl, n=64, L=2, k=4, variant="fused"):
@@ -127,7 +128,7 @@ def test_compressed_dp_training_converges(mesh24):
         p = jax.tree.map(lambda w, gw: w - 0.3 * gw, p, g)
         return p, q, e, jax.lax.psum(l, axes.all_names)
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         step, mesh=mesh24,
         in_specs=(pspecs, qspecs, especs, bspec, bspec),
         out_specs=(pspecs, qspecs, especs, P()), check_vma=False))

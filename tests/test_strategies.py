@@ -1,0 +1,345 @@
+"""ProjectionStrategy API: every registered strategy must compute exactly
+its own dense_equivalent() (forward AND gradients) on a (dp=2, tp=4)
+mesh; the legacy ffn_impl/PhantomConfig shims must expand to identical
+decls/params; and the Table II cost model must reproduce the historical
+hand-derived closed forms by summing strategy flops()/comm_events()."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, PhantomConfig, ProjectionMap,
+                                ProjectionSpec, get_config)
+from repro.core.energy import comm_time_us, pp_costs, tp_costs
+from repro.parallel.axes import MeshAxes
+from repro.parallel.params import materialize, param_count
+from repro.parallel.strategies import (available_strategies, make_strategy,
+                                       site_strategy)
+from helpers import allclose, rand, resolved_param_specs, smap
+
+KINDS = available_strategies()
+
+
+def _spec(kind, k=3):
+    return ProjectionSpec(kind=kind, k=k)
+
+
+def _mk(mesh, kind, n_in, n_out, bias=True, k=3):
+    axes = MeshAxes.from_mesh(mesh)
+    st = make_strategy(_spec(kind, k), n_in, n_out, axes.tp, dp=axes.dp,
+                       bias=bias)
+    return st, axes
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_contents():
+    assert {"tensor_col", "tensor_row", "phantom",
+            "lowrank_distill"} <= set(KINDS)
+    with pytest.raises(KeyError):
+        make_strategy(ProjectionSpec(kind="nope"), 8, 8, 2)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_param_count_matches_decls(mesh24, kind):
+    st, _ = _mk(mesh24, kind, 64, 32)
+    assert st.param_count() == param_count(st.decls())
+
+
+# ---------------------------------------------------------------------------
+# forward + gradient equivalence vs dense_equivalent()
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_forward_matches_dense_equivalent(mesh24, kind):
+    n_in, n_out, B = 32, 48, 8
+    st, axes = _mk(mesh24, kind, n_in, n_out)
+    params = materialize(st.decls(), seed=1)
+    x = rand(0, (B, n_in))
+    f = smap(lambda p, xx: st.apply_shard(p, xx, axes), mesh24,
+             (resolved_param_specs(st.decls(), mesh24),
+              P(("data",), "model")), P(("data",), "model"))
+    out = f(params, x)
+    W, b = st.dense_equivalent(params)
+    ref = x @ W + (0 if b is None else b)
+    allclose(out, ref, rtol=1e-4, atol=1e-5, msg=f"kind={kind}")
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_gradients_match_dense_equivalent(mesh24, kind):
+    n, B = 32, 4
+    st, axes = _mk(mesh24, kind, n, n, k=2)
+    decls = st.decls()
+    pspecs = resolved_param_specs(decls, mesh24)
+    params = materialize(decls, seed=3)
+    x = rand(2, (B, n))
+    y = rand(3, (B, n))
+
+    def sharded_loss(p, xx, yy):
+        out = st.apply_shard(p, xx, axes)
+        return jnp.sum((out - yy) ** 2)
+
+    def _reduce(g, d):
+        # dp-replicated grads psum over data; tp-replicated params (e.g.
+        # the row bias) hold disjoint per-rank contributions -> psum tp
+        g = jax.lax.psum(g, ("data",))
+        entries = [e for ent in d.spec
+                   for e in (ent if isinstance(ent, tuple) else (ent,))]
+        if "tp" not in entries:
+            g = jax.lax.psum(g, "model")
+        return g
+
+    from repro.parallel.params import is_decl
+    gfn = smap(lambda p, xx, yy: jax.tree.map(
+        _reduce, jax.grad(sharded_loss)(p, xx, yy), decls,
+        is_leaf=lambda v: is_decl(v)),
+        mesh24, (pspecs, P("data", "model"), P("data", "model")), pspecs)
+    g_sharded = gfn(params, x, y)
+
+    def dense_loss(p, xx, yy):
+        W, b = st.dense_equivalent(p)
+        out = xx @ W + (0 if b is None else b)
+        return jnp.sum((out - yy) ** 2)
+
+    g_dense = jax.grad(dense_loss)(params, x, y)
+    for key in g_dense:
+        allclose(g_sharded[key], g_dense[key], rtol=3e-3, atol=1e-4,
+                 msg=f"grad {key} kind={kind}")
+
+
+def test_lowrank_distill_init_reconstructs_teacher(mesh24):
+    """Full-rank k: init_from_dense must reproduce the teacher exactly;
+    truncated k monotonically improves with rank."""
+    n, p = 32, 4
+    axes = MeshAxes.from_mesh(mesh24)
+    W = np.asarray(rand(7, (n, n)))
+    st = make_strategy(ProjectionSpec(kind="lowrank_distill", k=n // p),
+                       n, n, axes.tp, bias=True)
+    params = st.init_from_dense(W)
+    W_hat, b = st.dense_equivalent(params)
+    allclose(W_hat, W, rtol=1e-4, atol=1e-5)
+    errs = [make_strategy(ProjectionSpec(kind="lowrank_distill", k=k),
+                          n, n, axes.tp).distill_error(W)
+            for k in (1, 2, 4, 8)]
+    assert all(a > b_ for a, b_ in zip(errs, errs[1:])), errs
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: legacy flags == explicit ProjectionSpecs
+# ---------------------------------------------------------------------------
+
+def test_ffn_impl_shim_decls_and_params_identical(mesh24):
+    from repro.core.ffn import ffn_decls
+    axes = MeshAxes.from_mesh(mesh24)
+    old = get_config("paper-ffn-4k", smoke=True)        # ffn_impl="phantom"
+    assert old.ffn_impl == "phantom"
+    new = old.replace(
+        ffn_impl="dense",
+        projections=ProjectionMap(ffn_layer=ProjectionSpec(
+            kind="phantom", k=old.phantom.k, variant=old.phantom.variant)))
+    d_old, d_new = ffn_decls(old, axes), ffn_decls(new, axes)
+    assert d_old == d_new
+    p_old = materialize(d_old, seed=0)
+    p_new = materialize(d_new, seed=0)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 p_old, p_new)
+    # and the dense baseline == explicit tensor_col
+    dense = old.replace(ffn_impl="dense")
+    explicit = old.replace(ffn_impl="dense", projections=ProjectionMap(
+        ffn_layer=ProjectionSpec(kind="tensor_col")))
+    assert ffn_decls(dense, axes) == ffn_decls(explicit, axes)
+
+
+def test_apply_flags_shim_mlp_and_attn_decls_identical(mesh24):
+    from repro.models.attention import attn_decls
+    from repro.models.layers import mlp_decls
+    axes = MeshAxes.from_mesh(mesh24)
+    base = dict(name="t", family="dense", num_layers=2, d_model=32,
+                num_heads=4, num_kv_heads=4, d_ff=64, vocab_size=128,
+                dtype="float32", mlp="swiglu")
+    ph = ProjectionSpec(kind="phantom", k=2)
+    old = ModelConfig(**base, phantom=PhantomConfig(
+        k=2, apply_ffn=True, apply_attn_proj=True))
+    new = ModelConfig(**base, phantom=PhantomConfig(
+        k=2, apply_ffn=False, apply_attn_proj=False),
+        projections=ProjectionMap(
+            ffn_gate=ph, ffn_up=ph, ffn_down=ph,
+            attn_q=ph, attn_k=ph, attn_v=ph, attn_o=ph))
+    assert mlp_decls(old, axes, 32, 64) == mlp_decls(new, axes, 32, 64)
+    assert attn_decls(old, axes) == attn_decls(new, axes)
+    # per-site override wins over the legacy flag
+    mixed = old.replace(projections=ProjectionMap(
+        ffn_down=ProjectionSpec(kind="tensor_row")))
+    d = mlp_decls(mixed, axes, 32, 64)
+    assert "w" in d["down"] and "L" in d["gate"]
+
+
+# ---------------------------------------------------------------------------
+# mixed per-site strategies compute the same function as their dense
+# equivalents composed
+# ---------------------------------------------------------------------------
+
+def test_mixed_mlp_matches_dense_composition(mesh24):
+    from repro.models.layers import mlp_apply, mlp_decls
+    axes = MeshAxes.from_mesh(mesh24)
+    d, ff, B, S = 32, 64, 2, 8
+    cfg = ModelConfig(
+        name="t", family="dense", num_layers=1, d_model=d, num_heads=4,
+        num_kv_heads=4, d_ff=ff, vocab_size=128, dtype="float32",
+        mlp="swiglu",
+        projections=ProjectionMap(
+            ffn_gate=ProjectionSpec(kind="phantom", k=2),
+            ffn_up=ProjectionSpec(kind="tensor"),      # site default (col)
+            ffn_down=ProjectionSpec(kind="lowrank_distill", k=2)))
+    decls = mlp_decls(cfg, axes, d, ff)
+    assert "L" in decls["gate"] and "w" in decls["up"] \
+        and "L" in decls["down"]
+    params = materialize(decls, seed=4)
+    x = rand(5, (B, S, d), scale=0.5)
+
+    fn = smap(lambda p, xx: mlp_apply(cfg, "fp", p, xx, axes), mesh24,
+              (resolved_param_specs(decls, mesh24), P("data", None, "model")),
+              P("data", None, "model"))
+    out = fn(params, x)
+
+    from repro.models.layers import mlp_strategies
+    sts = mlp_strategies(cfg, axes, d, ff)
+    Wg, _ = sts["gate"].dense_equivalent(params["gate"])
+    Wu, _ = sts["up"].dense_equivalent(params["up"])
+    Wd, _ = sts["down"].dense_equivalent(params["down"])
+    ref = (jax.nn.silu(x @ Wg) * (x @ Wu)) @ Wd
+    allclose(out, ref, rtol=3e-4, atol=3e-5)
+
+
+def test_moe_phantom_experts_match_dense_reference(mesh24):
+    """Phantom-factorized experts (tensor partition) compute the dense
+    MoE whose per-expert weights are each expert's dense_equivalent."""
+    from repro.models import moe as M
+    from test_moe import _cfg, _dense_moe_ref
+    axes = MeshAxes.from_mesh(mesh24)
+    cfg = _cfg(E=4, top_k=2, partition="tensor", layout="fp")
+    cfg = cfg.replace(projections=ProjectionMap(
+        moe_experts=ProjectionSpec(kind="phantom", k=2)))
+    decls = M.moe_decls(cfg, axes)
+    assert "L" in decls["w_up"], "phantom expert decls expected"
+    params = materialize(decls, 5)
+    B, S = 2, 16
+    x = rand(0, (B, S, cfg.d_model), scale=0.5)
+
+    def f(p, xx):
+        y, _aux = M.moe_apply(cfg, "fp", p, xx, axes)
+        return y
+
+    fn = smap(f, mesh24, (resolved_param_specs(decls, mesh24),
+                          P("data", None, "model")),
+              P("data", None, "model"))
+    out = fn(params, x)
+
+    # assemble dense per-expert weights from the phantom factors
+    st = make_strategy(ProjectionSpec(kind="phantom", k=2), cfg.d_model,
+                       cfg.moe.d_ff_expert, axes.tp, bias=False)
+    std = make_strategy(ProjectionSpec(kind="phantom", k=2),
+                        cfg.moe.d_ff_expert, cfg.d_model, axes.tp,
+                        bias=False)
+    E = cfg.moe.num_experts
+
+    def densify(stx, tree):
+        return jnp.stack([stx.dense_equivalent(
+            jax.tree.map(lambda a: a[e], tree))[0] for e in range(E)])
+
+    dense_params = {
+        "router": params["router"],
+        "w_gate": {"w": densify(st, params["w_gate"])},
+        "w_up": {"w": densify(st, params["w_up"])},
+        "w_down": {"w": densify(std, params["w_down"])},
+    }
+    ref = _dense_moe_ref(cfg, dense_params, x)
+    allclose(out, ref, rtol=3e-3, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# cost accounting: strategy sums == the historical hand-derived formulas
+# ---------------------------------------------------------------------------
+
+def _old_tp_costs(n, p, L, batch, peak, fits=None):
+    flops_total = 6.0 * n * n * batch * L
+    alpha = flops_total / p / peak
+    beta = (comm_time_us("all_gather", (n / p) * batch, p, fits)
+            + comm_time_us("reduce_scatter", (n / p) * batch, p, fits)) \
+        * L * 1e-6
+    return alpha, beta
+
+
+def _old_pp_costs(n, p, L, k, batch, peak, fits=None):
+    per_rank = (n / p) ** 2 + k * n
+    alpha = 6.0 * per_rank * batch * L / peak
+    beta = (comm_time_us("all_gather", k * batch, p, fits)
+            + comm_time_us("reduce_scatter", k * batch, p, fits)) \
+        * L * 1e-6
+    return alpha, beta
+
+
+def test_strategy_costs_match_hand_formulas_paper_ffn():
+    """Acceptance criterion: Table II predictions (AG n/p-wide for TP, AG
+    k-wide for phantom) summed from strategy comm_events()/flops() equal
+    the previous hand-derived formulas for the paper-FFN configs."""
+    peak = 197e12
+    for arch in ("paper-ffn-4k", "paper-ffn-16k", "paper-ffn-64k",
+                 "paper-ffn-131k", "paper-ffn-262k"):
+        cfg = get_config(arch)
+        n, L, k = cfg.ffn_width, cfg.num_layers, cfg.phantom.k
+        for p in (2, 8, 64, 256):
+            batch = 1024
+            a, b = tp_costs(n, p, L, batch, peak)
+            a_ref, b_ref = _old_tp_costs(n, p, L, batch, peak)
+            np.testing.assert_allclose(a, a_ref, rtol=1e-12)
+            np.testing.assert_allclose(b, b_ref, rtol=1e-12)
+            a, b = pp_costs(n, p, L, k, batch, peak)
+            a_ref, b_ref = _old_pp_costs(n, p, L, k, batch, peak)
+            np.testing.assert_allclose(a, a_ref, rtol=1e-12)
+            np.testing.assert_allclose(b, b_ref, rtol=1e-12)
+
+
+def test_comm_events_are_table2_schedule():
+    """TP: AG of (n/p)*batch floats fwd; phantom: AG of k*batch fwd —
+    straight from the strategy objects."""
+    n, p, k, batch = 4096, 16, 8, 64
+    tp_st = make_strategy(ProjectionSpec(kind="tensor_col"), n, n, p)
+    pp_st = make_strategy(ProjectionSpec(kind="phantom", k=k), n, n, p)
+    (ag, rs) = tp_st.comm_events(batch)
+    assert (ag.collective, ag.phase, ag.m_floats) == \
+        ("all_gather", "fwd", (n / p) * batch)
+    assert (rs.collective, rs.phase) == ("reduce_scatter", "bwd")
+    (ag, rs) = pp_st.comm_events(batch)
+    assert (ag.collective, ag.phase, ag.m_floats) == \
+        ("all_gather", "fwd", k * batch)
+    assert rs.m_floats == k * batch
+
+
+def test_phantom_flops_below_tensor_in_paper_regime():
+    """Paper Eqn. 8 via the strategy API: phantom wins per-rank compute
+    exactly when k < (n/p)(1 - 1/p)."""
+    n, p = 4096, 16
+    k_max = (n / p) * (1 - 1 / p)
+    tp_st = make_strategy(ProjectionSpec(kind="tensor_col"), n, n, p,
+                          bias=False)
+    lo = make_strategy(ProjectionSpec(kind="phantom", k=int(k_max) - 1),
+                       n, n, p, bias=False)
+    hi = make_strategy(ProjectionSpec(kind="phantom", k=int(k_max) + 2),
+                       n, n, p, bias=False)
+    assert lo.flops(1) < tp_st.flops(1) < hi.flops(1)
+
+
+def test_site_strategy_guard_falls_back_to_dense():
+    """Indivisible dims force the site's natural dense strategy."""
+    cfg = ModelConfig(
+        name="t", family="dense", num_layers=1, d_model=30, num_heads=3,
+        num_kv_heads=3, d_ff=60, vocab_size=128,
+        phantom=PhantomConfig(k=2, apply_ffn=True))
+    st = site_strategy(cfg, "ffn_up", 30, 60, 4)   # 30 % 4 != 0
+    assert st.kind == "tensor_col"
+    st = site_strategy(cfg, "ffn_down", 60, 30, 4)
+    assert st.kind == "tensor_row"
