@@ -69,12 +69,22 @@ def run():
         coef, rmse = _fit(np.array(ms, float),
                           np.full(len(ms), 8.0), np.array(ts))
         results[kind] = coef
+        paper = PAPER_COLLECTIVE_FITS.get(kind)
         emit(f"comm_fit_{kind}", 0.0,
              f"c1={coef[0]:.3g};c2={coef[1]:.3g};c3={coef[2]:.3g};"
-             f"rmse_log2={rmse:.2f}")
+             f"rmse_log2={rmse:.2f}",
+             kind="collective", impl=kind, p=8,
+             measured={"c1_us": float(coef[0]), "c2_us_per_float":
+                       float(coef[1]), "c3_us": float(coef[2]),
+                       "rmse_log2": rmse},
+             predicted=({"c1_us": paper[0], "c2_us_per_float": paper[1],
+                         "source": "paper Table III (Frontier)"}
+                        if paper else None))
     print("# paper Frontier fits (Table III) for the energy model:")
     for kind, (c1, c2) in PAPER_COLLECTIVE_FITS.items():
-        emit(f"comm_paper_{kind}", 0.0, f"c1={c1};c2={c2}")
+        emit(f"comm_paper_{kind}", 0.0, f"c1={c1};c2={c2}",
+             kind="analytic", impl=kind,
+             predicted={"c1_us": c1, "c2_us_per_float": c2})
 
     predict_table2(measured_fits={
         kind: (coef[0], coef[1]) for kind, coef in results.items()})
@@ -105,12 +115,19 @@ def predict_table2(measured_fits=None, p: int = 8, batch: int = 1024):
                                         PAPER_COLLECTIVE_FITS)
                            for ev in events)
             extra = f"m_floats={floats:.0f};us_paper_fit={us_paper:.1f}"
+            predicted = {"collective_m_floats": floats,
+                         "comm_us": us_paper}
+            measured = None
             if measured_fits:
                 us_meas = sum(comm_time_us(ev.collective, ev.m_floats, p,
                                            measured_fits)
                               for ev in events)
                 extra += f";us_measured_fit={us_meas:.1f}"
-            emit(f"table2_{label}_{arch}", us_paper, extra)
+                measured = {"comm_us_local_fit": us_meas}
+            emit(f"table2_{label}_{arch}", us_paper, extra,
+                 kind="analytic", arch=arch, impl=st.kind, p=p,
+                 measured=measured, predicted=predicted,
+                 extra={"batch": batch})
 
 
 if __name__ == "__main__":

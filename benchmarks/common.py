@@ -1,5 +1,11 @@
 """Shared benchmark utilities.  Import AFTER benchmarks.run has set the
-device-count flag (or standalone: sets 8 itself)."""
+device-count flag (or standalone: sets 8 itself).
+
+Every ``emit()`` both prints the legacy ``name,us,derived`` CSV line and
+records a ``LedgerEntry`` into the process-wide ledger, so all suites
+report through the telemetry subsystem (docs/benchmarks.md);
+``benchmarks/run.py`` writes the aggregate ``BENCH_report.json``.
+"""
 from __future__ import annotations
 
 import os
@@ -8,23 +14,57 @@ if "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
                                + os.environ.get("XLA_FLAGS", ""))
 
-import time
+from repro.telemetry import Ledger, LedgerEntry
+from repro.telemetry import measure as _measure
 
-import jax
-import numpy as np
+_LEDGER = None
+_SUITE = "adhoc"
+
+
+def get_ledger() -> Ledger:
+    global _LEDGER
+    if _LEDGER is None:
+        _LEDGER = Ledger(run="benchmarks")
+    return _LEDGER
+
+
+def set_ledger(ledger: Ledger):
+    global _LEDGER
+    _LEDGER = ledger
+
+
+def set_suite(name: str):
+    """Tag subsequent emit() entries with the running suite's name."""
+    global _SUITE
+    _SUITE = name
 
 
 def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     """Median wall time per call in microseconds (blocks on ready)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append((time.perf_counter() - t0) * 1e6)
-    return float(np.median(ts))
+    return _measure(fn, *args, warmup=warmup, iters=iters)
 
 
-def emit(name: str, us: float, derived: str = ""):
+def emit(name: str, us: float, derived: str = "", *, kind: str = "bench",
+         arch: str = "", impl: str = "", p: int = 0, measured=None,
+         predicted=None, extra=None) -> LedgerEntry:
+    """Print the legacy CSV line AND record a ledger entry.
+
+    Callers with a real measured/predicted pair pass both dicts (the
+    ledger computes the ratio columns); bare calls still land in the
+    report as CSV-equivalent rows.
+    """
     print(f"{name},{us:.1f},{derived}")
+    ex = dict(extra or {})
+    if derived:
+        ex["derived"] = derived
+    m = dict(measured or {})
+    # for bare legacy emits the CSV us column is a wall measurement; rows
+    # that pass an explicit measured dict (or are analytic — the us then
+    # prints a model value) must not have it stamped in
+    if us and measured is None and kind not in ("analytic", "derived",
+                                                "skip"):
+        m.setdefault("wall_us_median", us)
+    return get_ledger().record(LedgerEntry(
+        name=name, suite=_SUITE, kind=kind, arch=arch, impl=impl, p=p,
+        measured=m or None, predicted=dict(predicted) if predicted
+        else None, extra=ex))

@@ -1,10 +1,12 @@
 """Paper Fig. 5a: per-epoch communication cost, TP vs PP.
 
-Two views: (1) the paper's sizes (n=65,536, L=6, k=64) through the fitted
-Eqn. 26 model with Table III Frontier constants — the analytic
-reproduction; (2) collective wire bytes parsed from actually-lowered HLO
-of both pipelines on the local mesh — proof the implementation emits the
-Table II schedule (AG/RS of n/p*batch for TP vs k*batch for PP).
+Two views, both recorded as ledger entries: (1) the paper's sizes
+(n=65,536, L=6, k=64) through the fitted Eqn. 26 model with Table III
+Frontier constants — the analytic reproduction (predicted-only rows);
+(2) collective wire bytes parsed from the actually-lowered HLO of both
+pipelines on the local mesh, joined against the strategy-predicted wire
+bytes — proof the implementation emits the Table II schedule (AG/RS of
+n/p*batch for TP vs k*batch for PP) with a measured/predicted ratio.
 """
 from __future__ import annotations
 
@@ -12,14 +14,11 @@ from benchmarks.common import emit
 
 
 def run():
-    import jax
-    import jax.numpy as jnp
     from repro.configs.base import ModelConfig, PhantomConfig
     from repro.core.energy import comm_time_us
-    from repro.core.ffn import make_ffn_train_step, abstract_ffn
-    from repro.launch.hlo_analysis import collective_bytes
     from repro.launch.mesh import make_local_mesh
-    from repro.optim import SGD
+    from repro.parallel.axes import MeshAxes
+    from repro.telemetry import measure_ffn_step
 
     # --- analytic at paper scale (Fig 5a: n=65536, L=6, k=64) ----------
     n, L, k, batch = 65_536, 6, 64, 64
@@ -28,32 +27,36 @@ def run():
                      + comm_time_us("reduce_scatter", (n / p) * batch, p))
         pp_us = L * (comm_time_us("all_gather", k * batch, p)
                      + comm_time_us("reduce_scatter", k * batch, p))
-        emit(f"fig5a_comm_tp_p{p}", tp_us, f"n={n};L={L}")
+        emit(f"fig5a_comm_tp_p{p}", tp_us, f"n={n};L={L}",
+             kind="analytic", impl="tensor_col", p=p,
+             predicted={"comm_us": tp_us},
+             extra={"n": n, "L": L, "batch": batch})
         emit(f"fig5a_comm_pp_p{p}", pp_us,
-             f"k={k};ratio={pp_us/tp_us:.4f}")
+             f"k={k};ratio={pp_us/tp_us:.4f}",
+             kind="analytic", impl="phantom", p=p,
+             predicted={"comm_us": pp_us},
+             extra={"n": n, "L": L, "k": k, "pp_over_tp": pp_us / tp_us})
 
-    # --- measured wire bytes from lowered HLO ---------------------------
+    # --- measured wire bytes from lowered HLO vs strategy prediction ----
     mesh = make_local_mesh(1, 8)
+    p8 = MeshAxes.from_mesh(mesh).tp
     n_s, L_s, k_s, batch_s = 1024, 2, 8, 32
-    for impl in ("dense", "phantom"):
-        cfg = ModelConfig(name="b", family="ffn", num_layers=L_s,
-                          d_model=n_s, ffn_width=n_s, ffn_depth=L_s,
-                          ffn_impl=impl, mlp="relu",
+    for impl, strat in (("dense", "tensor_col"), ("phantom", "phantom")):
+        cfg = ModelConfig(name=f"fig5a-{impl}", family="ffn",
+                          num_layers=L_s, d_model=n_s, ffn_width=n_s,
+                          ffn_depth=L_s, ffn_impl=impl, mlp="relu",
                           phantom=PhantomConfig(k=k_s))
-        opt = SGD(0.1)
-        step, decls, opt_decls = make_ffn_train_step(cfg, mesh, opt,
-                                                     batch_s)
-        params, opt_state = abstract_ffn(cfg, mesh, opt)
-        x = jax.ShapeDtypeStruct((batch_s, n_s), jnp.float32)
-        compiled = step.lower(params, opt_state,
-                              jax.ShapeDtypeStruct((), jnp.int32),
-                              x, x).compile()
-        wire, breakdown = collective_bytes(compiled.as_text(),
-                                           default_group=8)
-        per_op = ";".join(f"{k_}={int(v['wire_bytes'])}B"
-                          for k_, v in sorted(breakdown.items()))
+        measured, predicted = measure_ffn_step(cfg, mesh, batch_s)
+        wire = measured["collective_wire_bytes_per_device"]
+        ratio = wire / predicted["collective_wire_bytes_per_device"]
+        per_op = ";".join(
+            f"{op}={int(rec['wire_bytes'])}B"
+            for op, rec in sorted(measured["collectives"].items()))
         emit(f"fig5a_hlo_wire_{impl}", 0.0,
-             f"total={int(wire)}B;{per_op}")
+             f"total={int(wire)}B;ratio={ratio:.4f};{per_op}",
+             kind="train", arch=cfg.name, impl=strat, p=p8,
+             measured=measured, predicted=predicted,
+             extra={"n": n_s, "L": L_s, "k": k_s, "batch": batch_s})
 
 
 if __name__ == "__main__":

@@ -3,7 +3,10 @@
 Paper shape: two-layer FFNs (n=4096 / 16384) over increasing GPU counts;
 here: reduced widths on the 8-virtual-device CPU mesh (same code path the
 dry-run proves at 512 devices).  PP should beat TP per epoch and the gap
-should grow with n — the paper's qualitative claim.
+should grow with n — the paper's qualitative claim.  Each row lands in
+the ledger with its measured wall time plus the strategy-predicted
+per-step account (flops/comm; wall time is not ratioed — CPU wall
+against TPU-roofline seconds would be meaningless).
 """
 from __future__ import annotations
 
@@ -13,21 +16,24 @@ from benchmarks.common import emit, timeit
 
 
 def run():
-    import jax
     from repro.configs.base import ModelConfig, PhantomConfig
     from repro.core.ffn import init_ffn, make_ffn_train_step
     from repro.data.synthetic import TeacherDataset
     from repro.launch.mesh import make_local_mesh
     from repro.optim import SGD
+    from repro.parallel.axes import MeshAxes
+    from repro.telemetry import ffn_step_prediction
 
     mesh = make_local_mesh(1, 8)
+    p = MeshAxes.from_mesh(mesh).tp
     batch = 32
     for n, k in ((1024, 3), (2048, 4), (4096, 4)):
         times = {}
-        for impl in ("dense", "phantom"):
-            cfg = ModelConfig(name="b", family="ffn", num_layers=2,
-                              d_model=n, ffn_width=n, ffn_depth=2,
-                              ffn_impl=impl, mlp="relu",
+        for impl, strat in (("dense", "tensor_col"),
+                            ("phantom", "phantom")):
+            cfg = ModelConfig(name=f"fig5bc-{impl}", family="ffn",
+                              num_layers=2, d_model=n, ffn_width=n,
+                              ffn_depth=2, ffn_impl=impl, mlp="relu",
                               phantom=PhantomConfig(k=k))
             opt = SGD(0.05)
             step, decls, _ = make_ffn_train_step(cfg, mesh, opt, batch)
@@ -35,14 +41,21 @@ def run():
             ds = TeacherDataset(n, batch)
             x, y = ds(0)
 
-            def once(p, o, xx, yy):
-                return step(p, o, jnp.int32(0), xx, yy)
+            def once(p_, o, xx, yy):
+                return step(p_, o, jnp.int32(0), xx, yy)
 
             us = timeit(once, params, opt_state, x, y, warmup=2, iters=5)
             times[impl] = us
-            emit(f"fig5bc_{impl}_n{n}", us, f"k={k};p=8")
+            emit(f"fig5bc_{impl}_n{n}", us, f"k={k};p={p}",
+                 kind="train", arch=cfg.name, impl=strat, p=p,
+                 measured={"wall_us_median": us},
+                 predicted=ffn_step_prediction(cfg, p, batch),
+                 extra={"n": n, "k": k, "batch": batch})
         emit(f"fig5bc_speedup_n{n}", 0.0,
-             f"pp_over_tp={times['dense']/times['phantom']:.2f}x")
+             f"pp_over_tp={times['dense']/times['phantom']:.2f}x",
+             kind="derived", p=p,
+             extra={"pp_over_tp": times["dense"] / times["phantom"],
+                    "n": n})
 
 
 if __name__ == "__main__":

@@ -5,7 +5,8 @@ Per-epoch time = max(compute term, memory term) + comm term, with compute
 from the paper's operation counts, memory from parameter+activation
 traffic, comm from the Eqn. 26 model.  Also reports the per-rank memory
 footprints that explain the paper's observation that TP at n=262,144
-cannot run on 32 GPUs while PP can.
+cannot run on 32 GPUs while PP can.  Predicted-only ledger rows (nothing
+at this scale runs in the container — that is the point of the model).
 """
 from __future__ import annotations
 
@@ -13,8 +14,7 @@ from benchmarks.common import emit
 
 
 def run():
-    from repro.core.energy import (TPU_HBM_BW, TPU_PEAK_FLOPS, pp_costs,
-                                   tp_costs, comm_time_us)
+    from repro.core.energy import TPU_PEAK_FLOPS, pp_costs, tp_costs
 
     batch = 64
     L = 2
@@ -31,10 +31,20 @@ def run():
             t_pp = (a_p + b_p) * 1e6
             emit(f"fig6_tp_n{n}_p{p}", t_tp,
                  f"mem={tp_bytes/2**30:.1f}GiB"
-                 + (";OOM@64GiB" if tp_bytes > 64 * 2 ** 30 else ""))
+                 + (";OOM@64GiB" if tp_bytes > 64 * 2 ** 30 else ""),
+                 kind="analytic", impl="tensor_col", p=p,
+                 predicted={"alpha_s": a_t, "beta_s": b_t,
+                            "step_us": t_tp, "mem_bytes": tp_bytes},
+                 extra={"n": n, "L": L, "batch": batch,
+                        "oom_64gib": tp_bytes > 64 * 2 ** 30})
             emit(f"fig6_pp_n{n}_p{p}", t_pp,
                  f"mem={pp_bytes/2**30:.2f}GiB;"
-                 f"speedup={t_tp/t_pp:.2f}x")
+                 f"speedup={t_tp/t_pp:.2f}x",
+                 kind="analytic", impl="phantom", p=p,
+                 predicted={"alpha_s": a_p, "beta_s": b_p,
+                            "step_us": t_pp, "mem_bytes": pp_bytes},
+                 extra={"n": n, "L": L, "k": k,
+                        "speedup_vs_tp": t_tp / t_pp})
 
 
 if __name__ == "__main__":

@@ -27,16 +27,34 @@ def run(dirname="experiments/dryrun"):
     for rec in recs:
         if rec.get("skipped"):
             emit(f"roofline_{rec['arch']}_{rec['shape']}_"
-                 f"{rec.get('impl','-')}", 0.0, f"SKIP:{rec['skipped']}")
+                 f"{rec.get('impl','-')}", 0.0, f"SKIP:{rec['skipped']}",
+                 kind="skip", arch=rec.get("arch", ""),
+                 impl=rec.get("impl", ""),
+                 extra={"skipped": rec["skipped"]})
             continue
         r = rec["roofline"]
+        shape_kind = ("train" if "train" in rec["shape"] else
+                      "prefill" if "prefill" in rec["shape"] else "decode")
         emit(f"roofline_{rec['arch']}_{rec['shape']}_{rec['impl']}"
              f"_{'mp' if rec['mesh'].get('pod') else 'sp'}",
              r["step_s"] * 1e6,
              f"dom={r['dominant']};frac={r['fraction']:.3f};"
              f"comp={r['compute_s']:.4g}s;mem={r['memory_s']:.4g}s;"
              f"coll={r['collective_s']:.4g}s;"
-             f"useful={rec['useful_flops_ratio']:.2f}")
+             f"useful={rec['useful_flops_ratio']:.2f}",
+             kind=shape_kind, arch=rec["arch"], impl=rec["impl"],
+             p=rec["mesh"].get("model", 0),
+             measured={
+                 "flops_per_device": rec["flops_per_device"],
+                 "hbm_bytes_per_device": rec["hbm_bytes_per_device"],
+                 "collective_wire_bytes_per_device":
+                     rec["collective_wire_bytes_per_device"]},
+             predicted={
+                 "flops_per_device": rec["model_flops_per_device"],
+                 "model": "6*N_active*tokens (train) / 2 (infer)"},
+             extra={"shape": rec["shape"], "roofline": r,
+                    "useful_flops_ratio": rec["useful_flops_ratio"],
+                    "cost_method": rec.get("cost_method", "raw")})
 
 
 if __name__ == "__main__":

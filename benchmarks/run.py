@@ -1,12 +1,18 @@
 """Benchmark harness — one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV lines.
+Prints ``name,us_per_call,derived`` CSV lines AND records every row into
+the measured-vs-predicted energy ledger; after the suites finish it
+writes ``BENCH_report.json`` (aggregate) and ``BENCH_ledger.jsonl``
+(per-entry stream) at the repo root.  Exits non-zero if any suite fails.
 
   comm_model     paper Table III (collective comm-model fit)
+  train_smoke    metered TP-vs-phantom FFN step (measured/predicted join)
   fig5_comm      paper Fig. 5a  (TP vs PP communication / epoch)
   fig5_exec      paper Fig. 5b/c (TP vs PP execution time / epoch)
   fig6_large     paper Fig. 6   (large-n projection + memory footprints)
   table1_energy  paper Table I / Fig. 7 (fixed-loss energy comparison)
   roofline       §Roofline reader over experiments/dryrun/*.json
+
+Usage: ``python -m benchmarks.run [suite ...]`` (no args = all suites).
 """
 import os
 
@@ -19,31 +25,67 @@ import sys
 import time
 import traceback
 
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+REPORT_PATH = os.path.join(ROOT, "BENCH_report.json")
+JSONL_PATH = os.path.join(ROOT, "BENCH_ledger.jsonl")
 
-def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    from benchmarks import (comm_model, fig5_comm, fig5_exec, fig6_large,
-                            roofline, table1_energy)
+
+def main(argv=None) -> int:
+    names = list(sys.argv[1:] if argv is None else argv)
+    from benchmarks import (comm_model, common, fig5_comm, fig5_exec,
+                            fig6_large, roofline, table1_energy,
+                            train_smoke)
     suites = {
         "comm_model": comm_model.run,
+        "train_smoke": train_smoke.run,
         "fig5_comm": fig5_comm.run,
         "fig5_exec": fig5_exec.run,
         "fig6_large": fig6_large.run,
         "table1_energy": table1_energy.run,
         "roofline": roofline.run,
     }
+    unknown = [n for n in names if n not in suites]
+    if unknown:
+        print(f"unknown suite(s) {unknown}; known: {sorted(suites)}",
+              file=sys.stderr)
+        return 2
+
+    import jax
+    from repro.telemetry import Ledger
+    ledger = Ledger(run="benchmarks.run", jsonl_path=JSONL_PATH,
+                    meta={"argv": names or ["all"],
+                          "devices": len(jax.devices()),
+                          "backend": jax.default_backend(),
+                          "jax": jax.__version__})
+    common.set_ledger(ledger)
+
+    failed = []
     for name, fn in suites.items():
-        if only and name != only:
+        if names and name not in names:
             continue
+        common.set_suite(name)
         print(f"# === {name} ===", flush=True)
         t0 = time.time()
         try:
             fn()
-        except Exception:
+            ledger.suite_ok(name, round(time.time() - t0, 1))
+        except Exception as exc:
             traceback.print_exc()
-            print(f"{name}_FAILED,0.0,")
+            ledger.suite_failed(name, f"{type(exc).__name__}: {exc}",
+                                round(time.time() - t0, 1))
+            failed.append(name)
+            print(f"{name}_FAILED,0.0,{type(exc).__name__}")
         print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
+
+    ledger.write_report(REPORT_PATH)
+    print(f"# wrote {REPORT_PATH} ({len(ledger)} entries, "
+          f"{len(ledger.joined())} measured-vs-predicted joins) "
+          f"and {JSONL_PATH}", flush=True)
+    if failed:
+        print(f"# FAILED suites: {', '.join(failed)}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -61,11 +61,18 @@ def run():
 
     size_tp = ffn_model_params(tp_cfg, 8)
     emit("table1_tp_iters", 0.0,
-         f"iters={nu_tp};params={size_tp};loss<={target}")
+         f"iters={nu_tp};params={size_tp};loss<={target}",
+         kind="train", arch=tp_cfg.name, impl="tensor_col", p=8,
+         measured={"iterations": nu_tp, "param_count": size_tp},
+         extra={"n": n, "L": L, "target_loss": target})
     for k, nu_pp, size_pp in rows:
         emit(f"table1_pp_k{k}_iters", 0.0,
              f"iters={nu_pp};params={size_pp};"
-             f"size_ratio={size_pp/size_tp:.3f}")
+             f"size_ratio={size_pp/size_tp:.3f}",
+             kind="train", arch=f"pp-k{k}", impl="phantom", p=8,
+             measured={"iterations": nu_pp, "param_count": size_pp},
+             extra={"n": n, "L": L, "k": k, "target_loss": target,
+                    "size_ratio_vs_tp": size_pp / size_tp})
 
     # paper-scale energy model (n=16384, L=2, Table I geometry)
     n_p, L_p, batch_p = 16_384, 2, 64
@@ -82,7 +89,14 @@ def run():
                               FRONTIER_A_W, FRONTIER_B_W)
         emit(f"table1_energy_p{p}", 0.0,
              f"E_tp={E_tp:.0f}J;E_pp={E_pp:.0f}J;"
-             f"saving={(1-E_pp/E_tp)*100:.0f}%")
+             f"saving={(1-E_pp/E_tp)*100:.0f}%",
+             kind="analytic", p=p,
+             predicted={"energy_j_tp": E_tp, "energy_j_pp": E_pp,
+                        "saving_fraction": 1 - E_pp / E_tp,
+                        "alpha_s_tp": a_t, "beta_s_tp": b_t,
+                        "alpha_s_pp": a_p, "beta_s_pp": b_p},
+             extra={"n": n_p, "L": L_p, "k": k,
+                    "iters_ratio_measured": nu_ratio})
 
 
 if __name__ == "__main__":

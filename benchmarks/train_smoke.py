@@ -1,0 +1,47 @@
+"""Metered TP-vs-phantom FFN train step — the ledger's core join.
+
+For each implementation this compiles the FFN probe step (layers
+unrolled, input grads kept: telemetry/probe.py documents why both matter
+for exact accounting), reads MEASURED per-device flops / HBM bytes /
+collective wire bytes from the lowered HLO, runs a few metered
+executions for wall time, and joins against the PREDICTED account summed
+from the same ``ProjectionStrategy`` objects.  The flops/wire ratio
+columns in ``BENCH_report.json`` come from here; tests/test_telemetry.py
+pins them within tolerance.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+
+
+def run(steps: int = 5):
+    from repro.configs.base import ModelConfig, PhantomConfig
+    from repro.launch.mesh import make_local_mesh
+    from repro.parallel.axes import MeshAxes
+    from repro.telemetry import measure_ffn_step
+
+    mesh = make_local_mesh(1, 8)
+    p = MeshAxes.from_mesh(mesh).tp
+    n, L, batch, k = 512, 2, 32, 8
+    for impl, strat in (("dense", "tensor_col"), ("phantom", "phantom")):
+        cfg = ModelConfig(name=f"ffn{n}-{impl}", family="ffn",
+                          num_layers=L, d_model=n, ffn_width=n,
+                          ffn_depth=L, ffn_impl=impl, mlp="relu",
+                          phantom=PhantomConfig(k=k))
+        measured, predicted = measure_ffn_step(cfg, mesh, batch,
+                                               steps=steps)
+        rf = (measured["flops_per_device"]
+              / predicted["flops_per_device"])
+        rw = (measured["collective_wire_bytes_per_device"]
+              / predicted["collective_wire_bytes_per_device"])
+        emit(f"train_smoke_{strat}", measured.get("wall_us_median", 0.0),
+             f"n={n};L={L};k={k};flops_ratio={rf:.3f};"
+             f"wire_ratio={rw:.4f}",
+             kind="train", arch=cfg.name, impl=strat, p=p,
+             measured=measured, predicted=predicted,
+             extra={"n": n, "L": L, "k": k, "batch": batch,
+                    "steps": steps})
+
+
+if __name__ == "__main__":
+    run()

@@ -1,11 +1,14 @@
-"""Build the §Dry-run and §Roofline markdown tables in EXPERIMENTS.md
-from experiments/dryrun/*.json."""
+"""Build the §Dry-run, §Roofline and §Energy-ledger markdown tables in
+EXPERIMENTS.md from experiments/dryrun/*.json and the repo-root
+BENCH_report.json (written by ``python -m benchmarks.run``)."""
 import glob
 import json
 import os
 import sys
 
 DIR = os.path.join(os.path.dirname(__file__), "dryrun")
+LEDGER_PATH = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_report.json")
 
 
 def load():
@@ -89,6 +92,63 @@ def roofline_table(recs):
     return "\n".join(lines)
 
 
+def load_ledger(path=LEDGER_PATH):
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        rec = json.load(f)
+    # literal (not imported from repro.telemetry: these scripts run
+    # without PYTHONPATH=src) — keep in sync with telemetry/ledger.py
+    if rec.get("schema") != "bench-ledger/v1":
+        raise ValueError(f"{path}: unknown ledger schema "
+                         f"{rec.get('schema')!r}")
+    return rec
+
+
+def _fmt_ratio(r):
+    return f"{r:.3f}" if isinstance(r, (int, float)) else "-"
+
+
+def ledger_table(report):
+    """The measured-vs-predicted joins from BENCH_report.json: the rows
+    that falsify (or confirm) the analytic energy model."""
+    if report is None:
+        return ("*(no BENCH_report.json — run `python -m benchmarks.run` "
+                "to generate the energy ledger)*")
+    lines = [
+        "| entry | suite | impl | p | measured GFLOP/dev | "
+        "flops M/P | wire KB/dev | wire M/P | wall us |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for e in report.get("entries", []):
+        ratios = e.get("ratios") or {}
+        if not ratios:
+            continue
+        m = e.get("measured") or {}
+        fl = m.get("flops_per_device")
+        wb = m.get("collective_wire_bytes_per_device")
+        wall = m.get("wall_us_median")
+        cells = [
+            e["name"], e.get("suite", ""), e.get("impl", ""),
+            str(e.get("p", "")),
+            f"{fl/1e9:.3f}" if fl is not None else "-",
+            _fmt_ratio(ratios.get("flops_per_device")),
+            f"{wb/1e3:.1f}" if wb is not None else "-",
+            _fmt_ratio(ratios.get("collective_wire_bytes_per_device")),
+            f"{wall:.0f}" if wall is not None else "-",
+        ]
+        lines.append("| " + " | ".join(cells) + " |")
+    lines.append("")
+    suites = report.get("suites", {})
+    status = "; ".join(f"{k}: {v['status']}" for k, v in sorted(
+        suites.items())) or "no suite status recorded"
+    lines.append(f"Suites — {status}.  M/P = measured/predicted; "
+                 "measured = compiled-HLO account of the executed step, "
+                 "predicted = ProjectionStrategy sums priced by the "
+                 "paper's model (docs/energy_model.md).")
+    return "\n".join(lines)
+
+
 if __name__ == "__main__":
     recs = load()
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
@@ -100,3 +160,6 @@ if __name__ == "__main__":
     if which in ("all", "roofline"):
         print("\n### roofline\n")
         print(roofline_table(recs))
+    if which in ("all", "ledger"):
+        print("\n### energy ledger (measured vs predicted)\n")
+        print(ledger_table(load_ledger()))

@@ -39,6 +39,22 @@ TPU_A_W = 200.0                  # busy
 TPU_B_W = 60.0                   # idle/stalled-on-network
 
 
+def tpu_collective_fits(hop_latency_us: float = 1.0) -> dict:
+    """TPU v5e analogues of the paper's Table III (c1, c2) constants,
+    derived from the ICI ring roofline rather than fitted: c2 is the wire
+    time per float (4 bytes over the per-axis ICI links; doubled for
+    all-reduce's RS+AG phases), c1 the per-log2(p)-hop latency.  Pass the
+    result as ``fits=`` to ``comm_time_us`` to price the Eqn. 26 model on
+    the TPU analogue instead of Frontier."""
+    c2 = 4.0 / (TPU_ICI_BW * TPU_ICI_LINKS) * 1e6    # us per float
+    return {
+        "broadcast":      (hop_latency_us, c2),
+        "all_gather":     (hop_latency_us, c2),
+        "reduce_scatter": (hop_latency_us, c2),
+        "all_reduce":     (hop_latency_us, 2.0 * c2),
+    }
+
+
 def comm_time_us(collective: str, m_floats: float, p: int,
                  fits=None) -> float:
     """Paper Eqn. 26 with Table III constants (returns microseconds)."""

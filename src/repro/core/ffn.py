@@ -69,7 +69,10 @@ def ffn_apply(cfg: ModelConfig, axes: MeshAxes, params, x):
         z = st.apply_shard(layer, carry, axes)
         return act(z), None
 
-    x, _ = lax.scan(body, x, params["layers"])
+    # scan_layers=False unrolls the layer loop (telemetry/dry-run cost
+    # accounting: XLA's cost analysis counts a scan body once)
+    unroll = 1 if cfg.scan_layers else max(cfg.num_layers, 1)
+    x, _ = lax.scan(body, x, params["layers"], unroll=unroll)
     return x
 
 

@@ -127,23 +127,15 @@ def build_and_compile(arch: str, shape_name: str, multi_pod: bool,
 
 def analyze(cfg, mesh, compiled, timings, shape_name: str, impl: str):
     from repro.core.energy import roofline_terms
-    from repro.launch.hlo_analysis import collective_bytes
     from repro.models.model import count_params
+    from repro.telemetry import analyze_compiled
 
-    ca = compiled.cost_analysis() or {}
-    flops = float(ca.get("flops", 0.0))
-    hbm_bytes = float(ca.get("bytes accessed", 0.0))
-    ma = compiled.memory_analysis()
-    mem = {
-        "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
-        "output_bytes": getattr(ma, "output_size_in_bytes", None),
-        "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
-        "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
-        "code_bytes": getattr(ma, "generated_code_size_in_bytes", None),
-    }
-    hlo = compiled.as_text()
     tp = mesh.shape["model"]
-    wire, breakdown = collective_bytes(hlo, default_group=tp)
+    costs = analyze_compiled(compiled, default_group=tp)
+    flops = costs.flops
+    hbm_bytes = costs.hbm_bytes
+    wire, breakdown = costs.collective_wire_bytes, costs.collectives
+    mem = costs.memory
     rt = roofline_terms(flops, hbm_bytes, wire)
 
     from repro.configs.base import SHAPES
@@ -181,12 +173,9 @@ def analyze(cfg, mesh, compiled, timings, shape_name: str, impl: str):
 
 
 def _cell_costs(compiled, tp):
-    from repro.launch.hlo_analysis import collective_bytes
-    ca = compiled.cost_analysis() or {}
-    wire, breakdown = collective_bytes(compiled.as_text(),
-                                       default_group=tp)
-    return (float(ca.get("flops", 0.0)),
-            float(ca.get("bytes accessed", 0.0)), wire, breakdown)
+    from repro.telemetry import analyze_compiled
+    c = analyze_compiled(compiled, default_group=tp)
+    return (c.flops, c.hbm_bytes, c.collective_wire_bytes, c.collectives)
 
 
 def parse_sets(pairs):

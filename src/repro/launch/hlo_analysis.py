@@ -92,3 +92,20 @@ def collective_bytes(hlo_text: str, default_group: int = 16):
 
 def count_op(hlo_text: str, opname: str) -> int:
     return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
+
+
+# paper Eqn. 26 speaks in per-rank message sizes m (floats, 4 bytes);
+# convert each HLO op's RESULT bytes back to that unit:
+#   all-gather   result = m*g  ->  m = result/(4g)
+#   others       result = m    ->  m = result/4
+# (bf16 messages count as half a float — the unit is 4-byte floats, which
+# is what the Table III fits and the energy model price.)
+def collective_m_floats(breakdown: dict, group: int) -> float:
+    """Total per-rank message floats across a ``collective_bytes``
+    breakdown, in the paper's Eqn. 26 units."""
+    g = max(group, 1)
+    total = 0.0
+    for op, rec in breakdown.items():
+        rb = rec["result_bytes"]
+        total += rb / 4.0 / g if op == "all-gather" else rb / 4.0
+    return total

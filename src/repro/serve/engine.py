@@ -24,6 +24,7 @@ from repro.models.model import (forward_decode, forward_prefill,
 from repro.parallel.axes import MeshAxes, resolve_spec
 from repro.parallel.params import specs
 from repro.parallel.compat import shard_map
+from repro.telemetry import LedgerEntry, StepMeter
 
 
 def make_serve_fns(cfg: ModelConfig, mesh, shape: ShapeConfig):
@@ -88,10 +89,14 @@ class ServeEngine:
     """
 
     def __init__(self, cfg: ModelConfig, mesh, params, *, slots: int = 8,
-                 max_len: int = 256):
+                 max_len: int = 256, ledger=None):
         self.cfg, self.mesh, self.params = cfg, mesh, params
         self.slots = slots
         self.max_len = max_len
+        self.ledger = ledger
+        self.prefill_meter = StepMeter(f"prefill_{cfg.name}", warmup=1)
+        self.decode_meter = StepMeter(f"decode_{cfg.name}", warmup=1)
+        self._ledger_window = 0
         shape = ShapeConfig("serve", max_len, slots, "decode")
         self.prefill_fn, self.decode_fn, self.cache_sds, self.cspecs = \
             make_serve_fns(cfg, mesh, shape)
@@ -141,7 +146,8 @@ class ServeEngine:
             toks[i, :len(req.prompt)] = req.prompt
         batch = {"tokens": jnp.asarray(toks)}
         batch = _add_modality_stubs(self.cfg, batch, self.slots, S)
-        logits, fresh_full = self.prefill_fn(self.params, batch)
+        logits, fresh_full = self.prefill_meter.call(
+            self.prefill_fn, self.params, batch)
         # prefill used seq S; splice into the max_len cache rows
         fresh = jax.tree.map(
             lambda f, c: _pad_cache_seq(f, c), fresh_full, self.cache)
@@ -155,9 +161,9 @@ class ServeEngine:
         self.cache = self._merge(self.cache, fresh, jnp.asarray(mask))
 
     def step(self):
-        logits, self.cache = self.decode_fn(
-            self.params, self.cache, jnp.asarray(self.last_tok),
-            jnp.asarray(self.pos))
+        logits, self.cache = self.decode_meter.call(
+            self.decode_fn, self.params, self.cache,
+            jnp.asarray(self.last_tok), jnp.asarray(self.pos))
         logits = np.asarray(logits)
         for i, req in enumerate(self.active):
             if req is None:
@@ -179,7 +185,40 @@ class ServeEngine:
         while any(r is not None for r in self.active) and steps < max_steps:
             self.step()
             steps += 1
+        if self.ledger is not None:
+            self.record_to(self.ledger)
         return requests
+
+    # --- telemetry -------------------------------------------------------
+
+    def telemetry(self) -> dict:
+        """Wall-time summaries for the prefill and decode meters."""
+        return {"prefill": self.prefill_meter.summary(),
+                "decode": self.decode_meter.summary()}
+
+    def record_to(self, ledger, predicted=None):
+        """Flush one serving entry per metered step kind to a Ledger.
+
+        The meters are reset afterwards, so repeated ``run()`` calls
+        record disjoint windows rather than overlapping cumulative
+        summaries (the ``window`` counter in ``extra`` orders them)."""
+        axes = MeshAxes.from_mesh(self.mesh)
+        impl = ("phantom" if self.cfg.uses_phantom_sites() else "dense")
+        out = []
+        for kind, meter in (("prefill", self.prefill_meter),
+                            ("decode", self.decode_meter)):
+            if not meter.calls:
+                continue
+            out.append(ledger.record(LedgerEntry(
+                name=f"serve_{kind}_{self.cfg.name}", suite="serve",
+                kind=kind, arch=self.cfg.name, impl=impl, p=axes.tp,
+                measured=meter.summary(),
+                predicted=predicted.get(kind) if predicted else None,
+                extra={"slots": self.slots, "max_len": self.max_len,
+                       "window": self._ledger_window})))
+            meter.reset(warm=True)
+        self._ledger_window += 1
+        return out
 
 
 def _pad_cache_seq(fresh, target):

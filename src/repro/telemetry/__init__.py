@@ -1,0 +1,32 @@
+"""Telemetry: the measured-vs-predicted energy ledger.
+
+Three pieces, one join:
+
+  * ``StepMeter`` / ``measure``      — wall time of executed steps
+  * ``analyze_compiled``             — flops / HBM bytes / collective
+    wire bytes read from the lowered HLO of the step that ran
+  * ``strategy_prediction`` et al.   — the analytic account summed from
+    the same ``ProjectionStrategy`` objects, priced by the paper's
+    energy model (docs/energy_model.md)
+
+``Ledger`` records entries joining the views and writes the repo-root
+``BENCH_report.json`` (plus a JSONL stream) that every reporting path —
+trainer, serving engine, dry-run, benchmark suites — goes through.
+"""
+from repro.telemetry.compiled import (CompiledCosts, HLO_TO_PAPER,
+                                      analyze_compiled, analyze_lowerable)
+from repro.telemetry.ledger import (SCHEMA, Ledger, LedgerEntry,
+                                    load_report)
+from repro.telemetry.meter import StepMeter, measure
+from repro.telemetry.predict import (event_wire_bytes, events_for,
+                                     ffn_step_prediction,
+                                     strategy_prediction)
+from repro.telemetry.probe import make_ffn_probe_step, measure_ffn_step
+
+__all__ = [
+    "CompiledCosts", "HLO_TO_PAPER", "analyze_compiled",
+    "analyze_lowerable", "SCHEMA", "Ledger", "LedgerEntry", "load_report",
+    "StepMeter", "measure", "event_wire_bytes", "events_for",
+    "ffn_step_prediction", "strategy_prediction", "make_ffn_probe_step",
+    "measure_ffn_step",
+]

@@ -1,0 +1,153 @@
+"""The measured-vs-predicted energy ledger.
+
+One ``LedgerEntry`` per metered step or benchmark row, holding up to
+three views of the same computation:
+
+  * ``measured``  — wall time from a ``StepMeter`` and/or compiled-HLO
+    costs from ``analyze_compiled`` (what actually ran / was lowered)
+  * ``predicted`` — the analytic account from ``strategy_prediction``
+    (the same ``ProjectionStrategy`` objects that executed, priced by
+    the paper's Eqn. 26 comm model and E = ν·p·(A·α + B·β))
+  * ``ratios``    — measured/predicted for every key present in both,
+    computed at serialization time.  A ratio near 1.0 means the analytic
+    energy model is accounting for the operators the compiler actually
+    emitted; a drift is a model bug or an unmodeled operator.
+
+``Ledger`` collects entries (optionally streaming each to a JSONL file
+as it is recorded) and writes the aggregate ``BENCH_report.json`` that
+`benchmarks/run.py` drops at the repo root — the single reporting path
+for the trainer, the serving engine, the dry-run and every benchmark
+suite.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+SCHEMA = "bench-ledger/v1"
+
+# measured keys ratioed against same-named predicted keys
+_RATIO_KEYS = (
+    "flops_per_device",
+    "hbm_bytes_per_device",
+    "collective_wire_bytes_per_device",
+    "collective_m_floats",
+    "energy_j_per_iter",
+    "iterations",
+)
+
+
+@dataclass
+class LedgerEntry:
+    name: str                          # unique row id, e.g. fig5a_hlo_wire
+    suite: str = ""                    # producing subsystem/suite
+    kind: str = "step"                 # train|prefill|decode|collective|
+                                       # analytic|step
+    arch: str = ""                     # model/config name
+    impl: str = ""                     # tensor_col|phantom|dense|...
+    p: int = 0                         # parallel width (model axis)
+    measured: Optional[dict] = None
+    predicted: Optional[dict] = None
+    extra: dict = field(default_factory=dict)
+
+    def ratios(self) -> dict:
+        """measured/predicted for the curated ``_RATIO_KEYS`` present in
+        both dicts — only keys where the two sides measure the SAME
+        quantity on the same hardware (e.g. the comm_model suite's
+        CPU-fitted c1/c2 are deliberately not ratioed against the
+        paper's Frontier constants)."""
+        if not self.measured or not self.predicted:
+            return {}
+        out = {}
+        for key in _RATIO_KEYS:
+            m, pr = self.measured.get(key), self.predicted.get(key)
+            if isinstance(m, (int, float)) and isinstance(pr, (int, float)) \
+                    and pr:
+                out[key] = m / pr
+        return out
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["ratios"] = self.ratios()
+        return {k: v for k, v in d.items() if v not in (None, {}, "")}
+
+
+class Ledger:
+    """Collects LedgerEntry rows; one instance per process/run."""
+
+    def __init__(self, run: str = "", jsonl_path: Optional[str] = None,
+                 meta: Optional[dict] = None):
+        self.run = run
+        self.meta = dict(meta or {})
+        self.entries: List[LedgerEntry] = []
+        self.suite_status: dict = {}       # suite -> ok|failed: <error>
+        self._jsonl_path = jsonl_path
+        if jsonl_path:
+            os.makedirs(os.path.dirname(os.path.abspath(jsonl_path)),
+                        exist_ok=True)
+            # truncate: one JSONL stream per run
+            open(jsonl_path, "w").close()
+
+    # --- recording -------------------------------------------------------
+    def record(self, entry: LedgerEntry) -> LedgerEntry:
+        self.entries.append(entry)
+        if self._jsonl_path:
+            with open(self._jsonl_path, "a") as f:
+                f.write(json.dumps(entry.as_dict()) + "\n")
+        return entry
+
+    def entry(self, name: str, **kw) -> LedgerEntry:
+        return self.record(LedgerEntry(name=name, **kw))
+
+    def suite_ok(self, suite: str, seconds: float = 0.0):
+        self.suite_status[suite] = {"status": "ok", "seconds": seconds}
+
+    def suite_failed(self, suite: str, error: str, seconds: float = 0.0):
+        self.suite_status[suite] = {"status": "failed", "error": error,
+                                    "seconds": seconds}
+
+    # --- reporting -------------------------------------------------------
+    def joined(self) -> List[LedgerEntry]:
+        """Entries whose measured and predicted accounts share at least
+        one ratio-able key — the rows that falsify (or confirm) the
+        energy model."""
+        return [e for e in self.entries if e.ratios()]
+
+    def report(self) -> dict:
+        entries = [e.as_dict() for e in self.entries]
+        n_joined = len(self.joined())
+        return {
+            "schema": SCHEMA,
+            "run": self.run,
+            "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                          time.gmtime()),
+            "meta": self.meta,
+            "suites": self.suite_status,
+            "counts": {"entries": len(entries), "joined": n_joined},
+            "entries": entries,
+        }
+
+    def write_report(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.report(), f, indent=1)
+        return path
+
+    def __len__(self):
+        return len(self.entries)
+
+    def __repr__(self):
+        return (f"Ledger(run={self.run!r}, entries={len(self.entries)}, "
+                f"joined={len(self.joined())})")
+
+
+def load_report(path: str) -> dict:
+    with open(path) as f:
+        rec = json.load(f)
+    if rec.get("schema") != SCHEMA:
+        raise ValueError(f"{path}: unknown ledger schema "
+                         f"{rec.get('schema')!r} (want {SCHEMA})")
+    return rec

@@ -1,0 +1,122 @@
+"""Wall-clock metering for jitted step functions.
+
+``StepMeter`` wraps a compiled train/prefill/decode step and records the
+wall time of every call (blocking on the result, so async dispatch cannot
+hide the device work).  The first ``warmup`` calls — compilation plus
+cache warm-up — are timed but excluded from the summary statistics, which
+is what the measured-vs-predicted ledger joins against.
+
+``measure(fn, *args)`` is the one-shot variant used by the benchmark
+suites (median of ``iters`` timed calls after ``warmup`` untimed ones).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+
+class StepMeter:
+    """Records per-call wall time for one step function.
+
+    Use either as a wrapper (``meter.wrap(fn)`` / ``meter(fn, *args)``)
+    or as a context-free stopwatch (``with meter.measure(): ...``).
+    """
+
+    def __init__(self, name: str, warmup: int = 1):
+        self.name = name
+        self.warmup = warmup
+        self.times_us: list[float] = []
+
+    # --- recording -------------------------------------------------------
+    def call(self, fn: Callable, *args, **kwargs):
+        """Call ``fn``, block until its outputs are ready, record."""
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        out = jax.block_until_ready(out)
+        self.times_us.append((time.perf_counter() - t0) * 1e6)
+        return out
+
+    def wrap(self, fn: Callable) -> Callable:
+        """Returns ``fn`` with every call metered."""
+        def wrapped(*args, **kwargs):
+            return self.call(fn, *args, **kwargs)
+        wrapped.__name__ = getattr(fn, "__name__", self.name)
+        return wrapped
+
+    def record_us(self, us: float):
+        """Record an externally-timed call (e.g. a loop that must not
+        block every step: time the whole chunk, record the mean)."""
+        self.times_us.append(float(us))
+
+    # --- statistics ------------------------------------------------------
+    @property
+    def calls(self) -> int:
+        return len(self.times_us)
+
+    @property
+    def steady(self) -> list[float]:
+        """Post-warmup samples.  Empty until more than ``warmup`` calls
+        have been recorded — a lone first call is compile+execute and
+        must not be reported as steady wall time."""
+        return self.times_us[self.warmup:]
+
+    def mean_us(self) -> float:
+        s = self.steady
+        return float(np.mean(s)) if s else 0.0
+
+    def median_us(self) -> float:
+        s = self.steady
+        return float(np.median(s)) if s else 0.0
+
+    def total_s(self) -> float:
+        return float(np.sum(self.times_us)) * 1e-6
+
+    def summary(self) -> dict:
+        """The ledger's ``measured`` wall-time fields."""
+        s = self.steady
+        out = {"name": self.name, "calls": self.calls,
+               "warmup": min(self.warmup, self.calls),
+               "total_s": self.total_s()}
+        if s:
+            out.update({
+                "wall_us_mean": float(np.mean(s)),
+                "wall_us_median": float(np.median(s)),
+                "wall_us_min": float(np.min(s)),
+                "wall_us_max": float(np.max(s)),
+            })
+        return out
+
+    def reset(self, warm: bool = False):
+        """Drop recorded samples.  ``warm=True`` also zeroes the warmup
+        count: the wrapped function stays compiled across a ledger-window
+        flush, so the next window's first call is already steady."""
+        self.times_us = []
+        if warm:
+            self.warmup = 0
+
+    def __repr__(self):
+        return (f"StepMeter({self.name!r}, calls={self.calls}, "
+                f"median={self.median_us():.1f}us)")
+
+
+def measure(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+            meter: Optional[StepMeter] = None) -> float:
+    """Median wall time per call in microseconds (blocks on ready).
+
+    The historical ``benchmarks.common.timeit`` contract; optionally
+    records every timed call into ``meter`` as well.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        us = (time.perf_counter() - t0) * 1e6
+        ts.append(us)
+        if meter is not None:
+            meter.record_us(us)
+    return float(np.median(ts))

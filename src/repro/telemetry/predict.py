@@ -1,0 +1,112 @@
+"""Predicted per-step costs, summed from the very ``ProjectionStrategy``
+objects that execute.
+
+This is the *predicted* half of the ledger.  Everything here is a thin
+sum over ``strategy.flops()`` / ``strategy.comm_events()`` — the same
+per-operator account ``core/energy.py`` prices (paper Eqns. 1-2, 24-26)
+— plus the ring-model conversion of a ``CommEvent`` to wire bytes, which
+is deliberately the SAME formula ``launch/hlo_analysis.py`` applies to
+measured HLO collectives, so measured/predicted ratios compare like with
+like:
+
+  all_gather      m·(p-1)·itemsize   (gathered result = m·p, ring wire
+                                      = result·(p-1)/p)
+  reduce_scatter  m·(p-1)·itemsize   (result = m, ring wire = result·(p-1))
+  all_reduce      2·m·(p-1)/p·itemsize
+
+with ``m`` the per-rank message in floats (the ``CommEvent`` unit).
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Optional, Sequence
+
+from repro.core.energy import (FRONTIER_A_W, FRONTIER_B_W, TPU_PEAK_FLOPS,
+                               comm_time_us, costs_from_strategies,
+                               energy_per_iteration)
+from repro.parallel.strategies.base import CommEvent
+
+FLOAT_BYTES = 4.0
+
+
+def event_wire_bytes(ev: CommEvent, p: int,
+                     itemsize: float = FLOAT_BYTES) -> float:
+    """Per-device ring wire bytes for one strategy collective — the
+    prediction the HLO parser's measured wire bytes are compared to."""
+    if p <= 1:
+        return 0.0
+    m = ev.m_floats * itemsize
+    if ev.collective == "all_gather":
+        return m * (p - 1)
+    if ev.collective == "reduce_scatter":
+        return m * (p - 1)
+    if ev.collective == "all_reduce":
+        return 2.0 * m * (p - 1) / p
+    if ev.collective == "all_to_all":
+        return m * (p - 1) / p
+    return m                                  # collective_permute: one hop
+
+
+def events_for(strategies: Sequence, batch: int,
+               training: bool = True) -> List[CommEvent]:
+    """All collectives the strategies issue per pass; inference drops the
+    backward-phase events (no gradient collectives at serving time)."""
+    out = []
+    for st in strategies:
+        for ev in st.comm_events(batch):
+            if not training and ev.phase == "bwd":
+                continue
+            out.append(ev)
+    return out
+
+
+def strategy_prediction(strategies: Sequence, p: int, L: int, batch: int,
+                        *, training: bool = True,
+                        peak_flops: float = TPU_PEAK_FLOPS,
+                        fits=None, A: float = FRONTIER_A_W,
+                        B: float = FRONTIER_B_W,
+                        itemsize: float = FLOAT_BYTES) -> dict:
+    """The ledger's ``predicted`` block for a step executing each of
+    ``strategies`` once per layer, ``L`` layers.
+
+    Keys are aligned with ``CompiledCosts.measured_fields()`` so the
+    ledger can ratio them directly; the energy projection applies the
+    paper's E = p·(A·α + B·β) per iteration.
+    """
+    alpha_s, beta_s = costs_from_strategies(
+        strategies, p, L, batch, peak_flops, fits, training=training)
+    events = events_for(strategies, batch, training)
+    wire = sum(event_wire_bytes(ev, p, itemsize) for ev in events) * L
+    m_floats = sum(ev.m_floats for ev in events) * L
+    comm_us = sum(comm_time_us(ev.collective, ev.m_floats, p, fits)
+                  for ev in events) * L
+    return {
+        "flops_per_device": alpha_s * peak_flops,
+        "collective_wire_bytes_per_device": wire,
+        "collective_m_floats": m_floats,
+        "comm_us": comm_us,
+        "alpha_s": alpha_s,
+        "beta_s": beta_s,
+        "energy_j_per_iter": energy_per_iteration(alpha_s, beta_s, p,
+                                                  A, B),
+        "training": training,
+        "model": "E = nu*p*(A*alpha + B*beta)",
+        "A_w": A, "B_w": B,
+        "peak_flops": peak_flops,
+    }
+
+
+def ffn_step_prediction(cfg, p: int, global_batch: int, *,
+                        training: bool = True,
+                        peak_flops: float = TPU_PEAK_FLOPS,
+                        fits=None, A: float = FRONTIER_A_W,
+                        B: float = FRONTIER_B_W) -> dict:
+    """Prediction for one paper-FFN step (the strategy ``cfg`` selects at
+    the ``ffn_layer`` site, applied once per layer)."""
+    from repro.core.ffn import ffn_strategy
+    st = ffn_strategy(cfg, p)
+    pred = strategy_prediction([st], p, cfg.num_layers, global_batch,
+                               training=training, peak_flops=peak_flops,
+                               fits=fits, A=A, B=B)
+    pred["strategy"] = st.kind
+    pred["param_count"] = st.param_count() * cfg.num_layers
+    return pred

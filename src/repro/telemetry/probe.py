@@ -1,0 +1,99 @@
+"""Measured-vs-predicted probe for the paper-FFN step.
+
+``make_ffn_probe_step`` builds a pure fwd+bwd step (loss + grads w.r.t.
+params AND inputs, no optimizer) for the strategy ``cfg`` selects, as one
+``shard_map`` over the mesh — the same operator schedule as
+``core/ffn.make_ffn_train_step`` with two deliberate differences that
+make the per-operator account exact:
+
+  * layers are compiled UNROLLED (``cfg.scan_layers=False`` is forced):
+    XLA's cost analysis counts a scan body once, so totals from a
+    scanned compile are per-layer-scale, not per-step;
+  * input gradients are requested too: the analytic Table II schedule
+    charges every layer an AG fwd + RS bwd, but the first layer's
+    backward collective (and its input-grad GEMM) is dead code when the
+    input is a constant — differentiating w.r.t. the input keeps the
+    schedule complete so measured/predicted ratios pin to ~1.
+
+``measure_ffn_step`` compiles the probe, extracts measured HLO costs,
+optionally executes a few metered steps, and returns the (measured,
+predicted) pair the ledger joins.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.axes import MeshAxes, resolve_spec
+from repro.parallel.compat import shard_map
+from repro.parallel.params import abstract, materialize, specs
+from repro.telemetry.compiled import analyze_compiled
+from repro.telemetry.meter import StepMeter
+from repro.telemetry.predict import ffn_step_prediction
+
+
+def make_ffn_probe_step(cfg, mesh, global_batch: int):
+    """Returns (jit probe_fn(params, x, y) -> (loss, grads), decls)."""
+    from repro.core.ffn import ffn_apply, ffn_decls
+    cfg = cfg.replace(scan_layers=False)
+    axes = MeshAxes.from_mesh(mesh)
+    decls = ffn_decls(cfg, axes)
+    n = cfg.ffn_width
+
+    def probe(params, x, y):
+        def loss_fn(p_, x_):
+            out = ffn_apply(cfg, axes, p_, x_)
+            return jnp.sum(jnp.square(out - y)) / (global_batch * n)
+
+        loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1))(params, x)
+        return lax.psum(loss, axes.all_names), grads
+
+    pspecs = jax.tree.map(lambda s: resolve_spec(s, axes), specs(decls))
+    bspec = resolve_spec(P("dp", "tp"), axes)
+    fn = shard_map(probe, mesh=mesh, in_specs=(pspecs, bspec, bspec),
+                   out_specs=(P(), (pspecs, bspec)), check_vma=False)
+    return jax.jit(fn), decls
+
+
+def measure_ffn_step(cfg, mesh, global_batch: int, *, steps: int = 0,
+                     seed: int = 0,
+                     meter: Optional[StepMeter] = None
+                     ) -> Tuple[dict, dict]:
+    """Compile + analyze the FFN probe; run ``steps`` metered executions.
+
+    Returns ``(measured, predicted)`` dicts ready for a LedgerEntry:
+    measured carries the compiled-HLO flops / HBM / collective wire bytes
+    (and wall stats when ``steps > 0``); predicted is
+    ``ffn_step_prediction`` summed from the same strategy objects.
+    """
+    axes = MeshAxes.from_mesh(mesh)
+    p = axes.tp
+    fn, decls = make_ffn_probe_step(cfg, mesh, global_batch)
+    n = cfg.ffn_width
+    x_sds = jax.ShapeDtypeStruct((global_batch, n), jnp.float32)
+    compiled = fn.lower(abstract(decls), x_sds, x_sds).compile()
+    costs = analyze_compiled(compiled, default_group=p)
+    measured = costs.measured_fields()
+    measured["collectives"] = {
+        op: {"count": rec["count"], "wire_bytes": rec["wire_bytes"]}
+        for op, rec in costs.collectives.items()}
+
+    if steps > 0:
+        meter = meter or StepMeter(f"ffn_probe_{cfg.name}", warmup=1)
+        params = materialize(decls, seed)
+        key = jax.random.PRNGKey(seed + 1)
+        kx, ky = jax.random.split(key)
+        x = jax.random.normal(kx, (global_batch, n), jnp.float32)
+        y = jax.random.normal(ky, (global_batch, n), jnp.float32)
+        for _ in range(steps + meter.warmup):
+            meter.call(compiled, params, x, y)
+        for k, v in meter.summary().items():
+            if k != "name":
+                measured[k] = v
+
+    predicted = ffn_step_prediction(cfg, p, global_batch, training=True)
+    return measured, predicted

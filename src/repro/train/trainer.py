@@ -6,12 +6,13 @@ grad clipping, optimizer update — as ONE ``shard_map`` over the mesh with
 explicit collectives (DESIGN.md §6), jit-compiled with donated state.
 
 The ``Trainer`` adds the production loop around it: data pipeline,
-checkpointing (async, elastic), fault tolerance hooks, throughput/loss
-logging.
+checkpointing (async, elastic), fault tolerance hooks, and telemetry — a
+``StepMeter`` wraps every executed step so wall time feeds the
+measured-vs-predicted energy ledger (docs/energy_model.md) alongside
+loss/throughput logging.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from functools import partial
 from typing import Callable, Optional
@@ -28,6 +29,7 @@ from repro.parallel.compat import shard_map
 from repro.parallel.grads import reduce_grads
 from repro.parallel.params import (ParamDecl, abstract, is_decl,
                                    materialize, specs)
+from repro.telemetry import LedgerEntry, StepMeter, analyze_compiled
 
 
 def _global_norm(grads, decls, axes: MeshAxes):
@@ -156,13 +158,17 @@ class Trainer:
                  microbatches: int = 1, grad_clip: float = 1.0,
                  batch_spec=None, checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 100, keep_checkpoints: int = 3,
-                 log_every: int = 10, log_fn: Callable = print):
+                 log_every: int = 10, log_fn: Callable = print,
+                 meter: Optional[StepMeter] = None, ledger=None):
         self.cfg, self.mesh, self.optimizer = cfg, mesh, optimizer
         self.dataset = dataset
         self.log_every, self.log_fn = log_every, log_fn
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = checkpoint_every
         self.keep_checkpoints = keep_checkpoints
+        self.meter = meter or StepMeter(f"train_{cfg.name}", warmup=1)
+        self.ledger = ledger
+        self._ledger_window = 0
         self.step_fn, self.decls, self.opt_decls = make_train_step(
             cfg, mesh, optimizer, microbatches=microbatches,
             grad_clip=grad_clip, batch_spec=batch_spec)
@@ -188,24 +194,55 @@ class Trainer:
     def run(self, state: TrainState, num_steps: int) -> TrainState:
         params, opt_state = state.params, state.opt_state
         step = state.step
-        t0 = time.time()
         losses = []
         while step < num_steps:
             batch = self.dataset(step)
-            params, opt_state, metrics = self.step_fn(
-                params, opt_state, jnp.int32(step), batch)
+            params, opt_state, metrics = self.meter.call(
+                self.step_fn, params, opt_state, jnp.int32(step), batch)
             step += 1
             losses.append(metrics)
             if step % self.log_every == 0:
                 m = jax.tree.map(lambda *xs: float(sum(map(float, xs)))
                                  / len(xs), *losses)
-                dt = (time.time() - t0) / self.log_every
+                recent = self.meter.times_us[-self.log_every:]
+                dt_ms = sum(recent) / len(recent) / 1e3
                 self.log_fn(f"[trainer] step {step} loss {m['loss']:.4f} "
-                            f"gnorm {m['grad_norm']:.3f} {dt*1e3:.0f} ms/it")
-                losses, t0 = [], time.time()
+                            f"gnorm {m['grad_norm']:.3f} {dt_ms:.0f} ms/it")
+                losses = []
             if (self._ckpt is not None
                     and step % self.checkpoint_every == 0):
                 self._ckpt.save_async(step, params, opt_state)
         if self._ckpt is not None:
             self._ckpt.wait()
+        if self.ledger is not None:
+            self.record_to(self.ledger)
         return TrainState(params, opt_state, step)
+
+    # --- telemetry -------------------------------------------------------
+
+    def measure_compiled(self, state: TrainState, batch):
+        """Measured per-device costs (flops / HBM / collective wire
+        bytes) of the lowered train step, for the energy ledger."""
+        axes = MeshAxes.from_mesh(self.mesh)
+        compiled = self.step_fn.lower(
+            state.params, state.opt_state, jnp.int32(state.step),
+            batch).compile()
+        return analyze_compiled(compiled, default_group=axes.tp)
+
+    def record_to(self, ledger, predicted=None, name=None,
+                  measured_extra=None) -> "LedgerEntry":
+        """Flush this trainer's metered steps to a Ledger.  Resets the
+        meter so repeated ``run()`` calls record disjoint windows."""
+        axes = MeshAxes.from_mesh(self.mesh)
+        measured = self.meter.summary()
+        if measured_extra:
+            measured.update(measured_extra)
+        impl = ("phantom" if self.cfg.uses_phantom_sites() else "dense")
+        entry = ledger.record(LedgerEntry(
+            name=name or f"train_{self.cfg.name}", suite="trainer",
+            kind="train", arch=self.cfg.name, impl=impl, p=axes.tp,
+            measured=measured, predicted=predicted,
+            extra={"window": self._ledger_window}))
+        self.meter.reset(warm=True)
+        self._ledger_window += 1
+        return entry
