@@ -1,0 +1,69 @@
+"""Planner smoke: a full calibrated planning pass on the 8-way mesh.
+
+Runs the energy-aware configuration planner end-to-end — calibration
+from whatever ``BENCH_ledger.jsonl`` rows earlier suites produced in
+this process' ledger (paper defaults otherwise), enumeration, pilot
+training runs, iso-loss scoring, Pareto frontier — and writes
+``PLAN_report.json`` at the repo root.  The frontier rows and every
+pilot run stream through the shared benchmarks ``Ledger`` so they land
+in ``BENCH_report.json`` next to the measurements that calibrated them.
+
+Raises (failing the suite, and the CI plan-smoke job) if the frontier
+comes back empty or the matched-loss comparison finds no phantom plan
+on a smaller mesh undercutting the full-mesh tensor baseline.
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import emit, get_ledger
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+PLAN_PATH = os.path.join(ROOT, "PLAN_report.json")
+
+
+def run(devices: int = 8):
+    import repro.launch.plan as plan_cli
+
+    args = plan_cli.build_parser().parse_args([
+        "--devices", str(devices), "--target-loss", "0.25",
+        "--width", "512", "--batch", "64", "--ks", "4,8,16",
+        "--pilot-steps", "120", "--pilot-tp", "4", "--out", PLAN_PATH,
+    ])
+    # calibrate from THIS run's in-process rows (comm_model/train_smoke
+    # when run together) — benchmarks.run truncates the JSONL stream at
+    # startup, so reading the file back here would see only our own
+    # partial write
+    ledger = get_ledger()
+    rows = [e.as_dict() for e in ledger.entries]
+    report = plan_cli.plan(args, ledger=ledger, calib_rows=rows)
+
+    frontier = report["frontier"]
+    if not frontier:
+        raise RuntimeError("planner produced an EMPTY Pareto frontier")
+    comp = report.get("comparison") or {}
+    best = report["winner"]
+    emit("plan_smoke_frontier", 0.0,
+         f"plans={len(frontier)};winner={best['plan']['name']};"
+         f"winner_devices={best['plan']['devices']};"
+         f"calibration={report['calibration']['source']}",
+         kind="analytic", impl=best["plan"]["strategy"],
+         p=best["plan"]["tp"],
+         predicted={"energy_j_total": best["energy_j_total"],
+                    "step_time_s": best["step_time_s"]},
+         extra={"frontier_size": len(frontier),
+                "calibration_source": report["calibration"]["source"]})
+    emit("plan_smoke_verdict", 0.0,
+         f"phantom_dominates={comp.get('phantom_dominates')};"
+         f"saving={comp.get('energy_saving_vs_best_tensor', 0)*100:.0f}%",
+         kind="analytic",
+         extra={"comparison": {k: v for k, v in comp.items()
+                               if not isinstance(v, dict)}})
+    if not comp.get("phantom_dominates"):
+        raise RuntimeError(
+            "no phantom plan on a smaller mesh undercut the full-mesh "
+            f"tensor baseline at matched loss: {comp}")
+
+
+if __name__ == "__main__":
+    run()

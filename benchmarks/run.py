@@ -4,15 +4,8 @@ the measured-vs-predicted energy ledger; after the suites finish it
 writes ``BENCH_report.json`` (aggregate) and ``BENCH_ledger.jsonl``
 (per-entry stream) at the repo root.  Exits non-zero if any suite fails.
 
-  comm_model     paper Table III (collective comm-model fit)
-  train_smoke    metered TP-vs-phantom FFN step (measured/predicted join)
-  fig5_comm      paper Fig. 5a  (TP vs PP communication / epoch)
-  fig5_exec      paper Fig. 5b/c (TP vs PP execution time / epoch)
-  fig6_large     paper Fig. 6   (large-n projection + memory footprints)
-  table1_energy  paper Table I / Fig. 7 (fixed-loss energy comparison)
-  roofline       §Roofline reader over experiments/dryrun/*.json
-
-Usage: ``python -m benchmarks.run [suite ...]`` (no args = all suites).
+Usage: ``python -m benchmarks.run [suite ...]`` (no args = all suites);
+``python -m benchmarks.run --list`` prints the suites and exits.
 """
 import os
 
@@ -29,21 +22,48 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 REPORT_PATH = os.path.join(ROOT, "BENCH_report.json")
 JSONL_PATH = os.path.join(ROOT, "BENCH_ledger.jsonl")
 
+# suite name -> one-line description, in run order (kept static so
+# ``--list`` answers without importing jax or any suite module)
+SUITES = {
+    "comm_model": "paper Table III: fit the c1/c2 collective comm model "
+                  "on this host's mesh",
+    "train_smoke": "metered TP-vs-phantom FFN step "
+                   "(measured/predicted ledger join)",
+    "plan_smoke": "energy-aware planner end-to-end: calibrate, search, "
+                  "iso-loss frontier -> PLAN_report.json",
+    "fig5_comm": "paper Fig. 5a: TP vs PP communication per epoch",
+    "fig5_exec": "paper Fig. 5b/c: TP vs PP execution time per epoch",
+    "fig6_large": "paper Fig. 6: large-n projection + memory footprints",
+    "table1_energy": "paper Table I / Fig. 7: fixed-loss energy "
+                     "comparison",
+    "roofline": "§Roofline reader over experiments/dryrun/*.json",
+}
+
+
+def list_suites() -> int:
+    for name, desc in SUITES.items():
+        print(f"{name:<14} {desc}")
+    return 0
+
 
 def main(argv=None) -> int:
     names = list(sys.argv[1:] if argv is None else argv)
+    if "--list" in names or "-l" in names:
+        return list_suites()
     from benchmarks import (comm_model, common, fig5_comm, fig5_exec,
-                            fig6_large, roofline, table1_energy,
-                            train_smoke)
+                            fig6_large, plan_smoke, roofline,
+                            table1_energy, train_smoke)
     suites = {
         "comm_model": comm_model.run,
         "train_smoke": train_smoke.run,
+        "plan_smoke": plan_smoke.run,
         "fig5_comm": fig5_comm.run,
         "fig5_exec": fig5_exec.run,
         "fig6_large": fig6_large.run,
         "table1_energy": table1_energy.run,
         "roofline": roofline.run,
     }
+    assert set(suites) == set(SUITES), "SUITES descriptions out of sync"
     unknown = [n for n in names if n not in suites]
     if unknown:
         print(f"unknown suite(s) {unknown}; known: {sorted(suites)}",

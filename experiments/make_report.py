@@ -1,6 +1,7 @@
-"""Build the §Dry-run, §Roofline and §Energy-ledger markdown tables in
-EXPERIMENTS.md from experiments/dryrun/*.json and the repo-root
-BENCH_report.json (written by ``python -m benchmarks.run``)."""
+"""Build the §Dry-run, §Roofline, §Energy-ledger and §Planner markdown
+tables in EXPERIMENTS.md from experiments/dryrun/*.json and the
+repo-root BENCH_report.json / PLAN_report.json (written by
+``python -m benchmarks.run`` and ``python -m repro.launch.plan``)."""
 import glob
 import json
 import os
@@ -9,6 +10,8 @@ import sys
 DIR = os.path.join(os.path.dirname(__file__), "dryrun")
 LEDGER_PATH = os.path.join(os.path.dirname(__file__), "..",
                            "BENCH_report.json")
+PLAN_PATH = os.path.join(os.path.dirname(__file__), "..",
+                         "PLAN_report.json")
 
 
 def load():
@@ -149,6 +152,61 @@ def ledger_table(report):
     return "\n".join(lines)
 
 
+def load_plan(path=PLAN_PATH):
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        rec = json.load(f)
+    # literal (not imported from repro.planner: these scripts run
+    # without PYTHONPATH=src) — keep in sync with planner/report.py
+    if rec.get("schema") != "plan-report/v1":
+        raise ValueError(f"{path}: unknown plan schema "
+                         f"{rec.get('schema')!r}")
+    return rec
+
+
+def plan_table(report):
+    """The planner's Pareto frontier + matched-loss verdict — the
+    paper's final claim, decided by the calibrated model."""
+    if report is None:
+        return ("*(no PLAN_report.json — run `python -m "
+                "repro.launch.plan` or `python -m benchmarks.run "
+                "plan_smoke` to generate the configuration frontier)*")
+    lines = [
+        "| frontier plan | strategy | mesh (dp×tp) | width | k | "
+        "ν | energy J | step s | pred. loss |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for s in report.get("frontier", []):
+        p = s["plan"]
+        loss = s.get("predicted_loss")
+        lines.append(
+            f"| {p['name']} | {p['strategy']} | "
+            f"{p['dp']}×{p['tp']} ({p['devices']} dev) | {p['width']} | "
+            f"{p.get('k', 0) or '-'} | {s['iterations']:.0f} | "
+            f"{s['energy_j_total']:.3g} | {s['step_time_s']:.3g} | "
+            f"{loss if loss is None else format(loss, '.4f')} |")
+    lines.append("")
+    cal = report.get("calibration", {})
+    lines.append(f"Calibration: {cal.get('source', '?')} "
+                 f"(α scales {cal.get('alpha_scale')}, "
+                 f"β scales {cal.get('beta_scale')}).")
+    comp = report.get("comparison") or {}
+    if comp.get("best_phantom_smaller"):
+        bp, bt = comp["best_phantom_smaller"], comp["best_tensor_full"]
+        verdict = "DOMINATES" if comp.get("phantom_dominates") \
+            else "does not dominate"
+        lines.append(
+            f"Matched-loss verdict: phantom on the smaller mesh "
+            f"{verdict} — {bp['plan']} ({bp['devices']} devices, "
+            f"{bp['energy_j']:.3g} J) vs best full-mesh tensor "
+            f"{bt['plan']} ({bt['devices']} devices, "
+            f"{bt['energy_j']:.3g} J), a "
+            f"{comp.get('energy_saving_vs_best_tensor', 0)*100:.0f}% "
+            f"calibrated energy saving (docs/planner.md).")
+    return "\n".join(lines)
+
+
 if __name__ == "__main__":
     recs = load()
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
@@ -163,3 +221,6 @@ if __name__ == "__main__":
     if which in ("all", "ledger"):
         print("\n### energy ledger (measured vs predicted)\n")
         print(ledger_table(load_ledger()))
+    if which in ("all", "plan"):
+        print("\n### configuration planner (iso-loss frontier)\n")
+        print(plan_table(load_plan()))

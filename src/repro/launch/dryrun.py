@@ -120,7 +120,13 @@ def build_and_compile(arch: str, shape_name: str, multi_pod: bool,
     t_lower = time.time() - t0
 
     t1 = time.time()
-    compiled = lowered.compile()
+    # compile through the shared telemetry cache: a module lowered to
+    # identical HLO (cost-fix g=1/g=2 reruns, planner HBM-fit checks)
+    # is compiled once per process; ``analyze`` parses it through the
+    # matching analysis cache.  Only the compile is timed here — a ~0
+    # compile_s means this process genuinely didn't recompile.
+    from repro.telemetry import compile_lowered
+    compiled = compile_lowered(lowered)
     t_compile = time.time() - t1
     return cfg, mesh, compiled, {"lower_s": t_lower, "compile_s": t_compile}
 
@@ -268,9 +274,10 @@ def run_cell(arch, shape, multi_pod, impl, variant=None, out_path=None,
     cfg, mesh, compiled, timings = build_and_compile(
         arch, shape, multi_pod, impl, variant)
     rec = analyze(cfg, mesh, compiled, timings, shape, impl)
-    ma = compiled.memory_analysis()
     print(compiled.memory_analysis())
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):     # older jax: one dict per device
+        ca = ca[0] if ca else {}
     print({k: v for k, v in sorted(ca.items())
            if k in ("flops", "bytes accessed")})
     print(json.dumps(rec["roofline"], indent=None))

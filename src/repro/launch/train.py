@@ -2,15 +2,77 @@
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-14b \
       --smoke --steps 50
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-14b \
+      --plan auto          # apply the planner's winning configuration
 
 Full (non-smoke) configs target the production TPU mesh; on this CPU
 container they are exercised through the dry-run
 (``python -m repro.launch.dryrun``), so --smoke is the default here.
 On a real multi-host TPU deployment this same entry point is launched
 once per host after ``jax.distributed.initialize()`` (see README).
+
+``--plan auto`` reads ``PLAN_report.json`` (running a quick calibrated
+no-pilot planning pass over the --dp × --tp device budget if the report
+doesn't exist yet) and applies the winning plan: its ``ProjectionSpec``
+becomes the config's default projection for every site, and the mesh
+becomes the winner's (dp, tp).  ``--plan <path>`` applies a specific
+report.  See docs/planner.md.
 """
 import argparse
 import os
+
+
+def _apply_plan(args, cfg):
+    """Resolve --plan (auto | path) to a winner and apply it."""
+    import repro.launch.plan as plan_cli
+    from repro.configs.base import (PHANTOM_KINDS, ProjectionMap,
+                                    ProjectionSpec)
+    from repro.planner import load_plan_report
+
+    path = plan_cli.DEFAULT_OUT if args.plan == "auto" else args.plan
+    if os.path.exists(path):
+        report = load_plan_report(path)
+        print(f"[plan] loaded {path}")
+    elif args.plan == "auto":
+        pargs = plan_cli.build_parser().parse_args(
+            ["--devices", str(args.dp * args.tp), "--no-pilots",
+             "--out", path])
+        report = plan_cli.plan(pargs)
+        print(f"[plan] no report found — ran a no-pilot planning pass")
+    else:
+        raise FileNotFoundError(f"--plan {args.plan}: no such report")
+    winner = report.get("winner")
+    if not winner:
+        raise ValueError(f"{path}: empty frontier, no winning plan")
+    p = winner["plan"]
+    budget = args.dp * args.tp
+    if p["devices"] > budget:
+        # the XLA host device count was already pinned from --dp/--tp;
+        # silently clamping the winner's mesh would train a different
+        # configuration than the one we just announced
+        raise ValueError(
+            f"winning plan {p['name']} needs {p['devices']} devices but "
+            f"--dp {args.dp} x --tp {args.tp} only provisioned {budget}; "
+            f"re-run with --dp/--tp covering the plan's mesh "
+            f"({p['dp']}x{p['tp']})")
+    spec = p.get("projection_spec", {})
+    kind = spec.get("kind", p.get("strategy", "tensor"))
+    if kind in PHANTOM_KINDS:
+        default = ProjectionSpec(kind=kind, k=int(spec.get("k", 64)),
+                                 variant=spec.get("variant", "fused"))
+        applied = f"{kind} k={default.k}"
+    else:
+        # any tensor-family winner means "dense TP": the planner scored
+        # one square FFN site, while an architecture mixes input-side
+        # (column) and output-side (row) projections — the ``tensor``
+        # pseudo-kind resolves each site to its natural dense sharding,
+        # which is what the winner's strategy family prescribes
+        default = ProjectionSpec(kind="tensor")
+        applied = f"{kind} -> site-natural dense sharding"
+    cfg = cfg.replace(projections=ProjectionMap(default=default))
+    print(f"[plan] applying winner {p['name']}: projections default="
+          f"{applied}, mesh {p['dp']}x{p['tp']}")
+    return cfg, p["dp"], p["tp"]
 
 
 def main():
@@ -27,6 +89,10 @@ def main():
     ap.add_argument("--tp", type=int, default=4)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--plan", default=None,
+                    help="'auto' or a PLAN_report.json path: apply the "
+                         "energy planner's winning configuration "
+                         "(projections + mesh)")
     args = ap.parse_args()
 
     if "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
@@ -47,7 +113,9 @@ def main():
     from repro.train.trainer import Trainer
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    if args.impl == "dense":
+    if args.plan:
+        cfg, args.dp, args.tp = _apply_plan(args, cfg)
+    elif args.impl == "dense":
         from repro.configs.base import ProjectionMap
         cfg = cfg.replace(phantom=dataclasses.replace(
             cfg.phantom, apply_ffn=False, apply_attn_proj=False),

@@ -1,0 +1,42 @@
+"""The energy-aware configuration planner.
+
+A decision-making layer on top of the measurement layer: calibrate the
+analytic energy model from the ledger (``calibration``), enumerate mesh
+× strategy × ghost-width candidates (``space``), filter for resource
+feasibility (``constraints``), price everything with the calibrated
+E = ν·p·(A·α + B·β) (``score``), normalize to a target loss with pilot
+runs (``isoloss``) and report the Pareto frontier + winning plan
+(``report``).  CLI: ``python -m repro.launch.plan``; docs:
+``docs/planner.md``.
+"""
+from repro.planner.calibration import (Calibration, calibrate_from_ledger,
+                                       calibrate_from_rows,
+                                       least_squares_scale,
+                                       paper_default_calibration)
+from repro.planner.constraints import (Constraints, Rejection,
+                                       compiled_hbm_bytes, filter_feasible,
+                                       hbm_bytes_estimate)
+from repro.planner.isoloss import (IsoLossResult, LossCurve, apply_iso_loss,
+                                   fit_loss_curve, matched_loss_comparison,
+                                   run_pilots)
+from repro.planner.report import (PLAN_SCHEMA, build_report,
+                                  load_plan_report, pick_winner,
+                                  plan_summary_lines, record_frontier,
+                                  write_plan_report)
+from repro.planner.score import (ScoredPlan, apply_throughput_floor,
+                                 pareto_frontier, score_plan, score_plans)
+from repro.planner.space import PlanCandidate, enumerate_plans, mesh_shapes
+
+__all__ = [
+    "Calibration", "calibrate_from_ledger", "calibrate_from_rows",
+    "least_squares_scale", "paper_default_calibration",
+    "Constraints", "Rejection", "compiled_hbm_bytes", "filter_feasible",
+    "hbm_bytes_estimate",
+    "IsoLossResult", "LossCurve", "apply_iso_loss", "fit_loss_curve",
+    "matched_loss_comparison", "run_pilots",
+    "PLAN_SCHEMA", "build_report", "load_plan_report", "pick_winner",
+    "plan_summary_lines", "record_frontier", "write_plan_report",
+    "ScoredPlan", "apply_throughput_floor", "pareto_frontier",
+    "score_plan", "score_plans",
+    "PlanCandidate", "enumerate_plans", "mesh_shapes",
+]

@@ -1,0 +1,114 @@
+"""Resource feasibility for candidate plans.
+
+Two tiers, by cost:
+
+  * ``hbm_bytes_estimate`` — analytic napkin math (params + AdamW
+    moments + grads + saved activations), cheap enough to filter the
+    whole enumeration;
+  * ``compiled_hbm_bytes`` — the ground truth for the survivors: lower
+    the candidate's real probe step and read
+    ``memory_analysis()`` through the shared cached
+    ``telemetry.analyze_lowered`` entry point (the same cache the
+    dry-run uses, so a module analyzed once is never re-lowered).
+
+Throughput constraints price the candidate's step time with the
+calibrated Eqn. 26 model — on a TPU target pass
+``fits=tpu_collective_fits()`` through the calibration.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from repro.planner.space import PlanCandidate
+
+FLOAT_BYTES = 4.0
+# TPU v5e HBM per chip; the CLI overrides for other targets.
+DEFAULT_HBM_BYTES = 16 * 2 ** 30
+# AdamW: params + m + v + grads, all fp32 in this repo's decls
+_OPT_STATE_COPIES = 4.0
+
+
+@dataclass
+class Constraints:
+    max_devices: int
+    hbm_bytes_per_device: float = DEFAULT_HBM_BYTES
+    min_throughput_rows_s: float = 0.0     # global rows/second floor
+
+    def as_dict(self) -> dict:
+        return {"max_devices": self.max_devices,
+                "hbm_bytes_per_device": self.hbm_bytes_per_device,
+                "min_throughput_rows_s": self.min_throughput_rows_s}
+
+
+def hbm_bytes_estimate(plan: PlanCandidate) -> float:
+    """Analytic per-device bytes for the training step.
+
+    params/tp · 4 copies (AdamW) + saved activations for the backward
+    (one [rows_local, n/tp] tensor per layer plus the x/y batch).  This
+    is deliberately a slight over-estimate — the filter must not pass a
+    plan the compiled check would reject."""
+    from repro.parallel.strategies import make_strategy
+    st = make_strategy(plan.spec(), plan.width, plan.width, plan.tp)
+    params_local = plan.depth * st.param_count() / plan.tp
+    state = params_local * _OPT_STATE_COPIES * FLOAT_BYTES
+    rows_local = plan.batch / (plan.dp * plan.microbatches)
+    feat_local = plan.width / plan.tp
+    acts = rows_local * feat_local * (plan.depth + 2) * FLOAT_BYTES
+    return state + acts
+
+
+def compiled_hbm_bytes(plan: PlanCandidate, mesh) -> Optional[float]:
+    """Per-device buffer bytes of the lowered probe step (argument +
+    temp), via the shared analysis cache.  Returns None when the
+    compiler reports no memory analysis (some backends)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.parallel.params import abstract
+    from repro.telemetry import analyze_lowered
+    from repro.telemetry.probe import make_ffn_probe_step
+
+    cfg = plan.model_config()
+    fn, decls = make_ffn_probe_step(cfg, mesh, plan.batch)
+    x_sds = jax.ShapeDtypeStruct((plan.batch, plan.width), jnp.float32)
+    lowered = fn.lower(abstract(decls), x_sds, x_sds)
+    costs = analyze_lowered(lowered, default_group=plan.tp)
+    mem = costs.memory or {}
+    parts = [mem.get("argument_bytes"), mem.get("temp_bytes")]
+    if all(v is None for v in parts):
+        return None
+    return float(sum(v or 0 for v in parts))
+
+
+@dataclass
+class Rejection:
+    plan: PlanCandidate
+    reason: str
+
+    def as_dict(self) -> dict:
+        return {"plan": self.plan.name, "reason": self.reason}
+
+
+def filter_feasible(plans: List[PlanCandidate], constraints: Constraints
+                    ) -> Tuple[List[PlanCandidate], List[Rejection]]:
+    """Device-count and analytic-HBM filtering with recorded reasons.
+    (Throughput needs a scored step time — ``planner.score`` applies
+    ``min_throughput_rows_s`` after pricing.)"""
+    kept: List[PlanCandidate] = []
+    rejected: List[Rejection] = []
+    for plan in plans:
+        if plan.devices > constraints.max_devices:
+            rejected.append(Rejection(
+                plan, f"devices {plan.devices} > "
+                      f"{constraints.max_devices} available"))
+            continue
+        est = hbm_bytes_estimate(plan)
+        if est > constraints.hbm_bytes_per_device:
+            rejected.append(Rejection(
+                plan, f"HBM estimate {est/2**30:.2f} GiB > "
+                      f"{constraints.hbm_bytes_per_device/2**30:.2f} "
+                      f"GiB budget"))
+            continue
+        kept.append(plan)
+    return kept, rejected

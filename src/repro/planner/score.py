@@ -1,0 +1,161 @@
+"""Scoring candidate plans with the calibrated energy model, and the
+Pareto frontier over (predicted energy, predicted step time, quality).
+
+The objective is exactly the paper's E = ν·p·(A·α + B·β), with three
+calibration hooks from ``planner.calibration``:
+
+  * α is scaled by the strategy's fitted ``alpha_scale`` (flops-model
+    drift), β by ``beta_scale`` (wire-byte drift);
+  * β's collective times are priced with the calibrated (c1, c2)
+    Eqn. 26 constants — the comm_model suite's measured fits when a
+    ledger exists, the paper's Table III otherwise;
+  * ν is ``iterations · nu_scale[kind]`` — or the pilot-measured
+    iterations-to-target when the iso-loss pass supplies one.
+
+Microbatching is modeled faithfully: gradient accumulation leaves total
+GEMM work unchanged but repeats each layer collective once per
+microbatch at 1/mb the message size, so the c1·log2(p) latency term
+multiplies by mb — the planner can therefore see when accumulation
+stops being free.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.energy import FRONTIER_A_W, FRONTIER_B_W, TPU_PEAK_FLOPS
+from repro.planner.calibration import Calibration
+from repro.planner.space import PlanCandidate
+
+
+@dataclass
+class ScoredPlan:
+    plan: PlanCandidate
+    alpha_s: float                 # calibrated compute seconds / iter
+    beta_s: float                  # calibrated comm seconds / iter
+    step_time_s: float
+    energy_j_per_iter: float
+    iterations: float              # ν to the target loss
+    energy_j_total: float
+    throughput_rows_s: float
+    param_count: int               # model size (the capacity proxy)
+    predicted_loss: Optional[float] = None
+    quality: Optional[float] = None   # lower is better (loss proxy)
+    notes: dict = field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        d = {"plan": self.plan.as_dict(),
+             "alpha_s": self.alpha_s, "beta_s": self.beta_s,
+             "step_time_s": self.step_time_s,
+             "energy_j_per_iter": self.energy_j_per_iter,
+             "iterations": self.iterations,
+             "energy_j_total": self.energy_j_total,
+             "throughput_rows_s": self.throughput_rows_s,
+             "param_count": self.param_count}
+        if self.predicted_loss is not None:
+            d["predicted_loss"] = self.predicted_loss
+        if self.quality is not None:
+            d["quality"] = self.quality
+        if self.notes:
+            d["notes"] = self.notes
+        return d
+
+
+def score_plan(plan: PlanCandidate, calib: Calibration, *,
+               iterations: float = 1.0,
+               peak_flops: float = TPU_PEAK_FLOPS,
+               A: float = FRONTIER_A_W, B: float = FRONTIER_B_W,
+               training: bool = True,
+               apply_nu_scale: bool = True) -> ScoredPlan:
+    """Price one candidate with the calibrated model.
+
+    ``apply_nu_scale=False`` when ``iterations`` is already a MEASURED
+    iterations-to-target (the iso-loss pilots) — the calibration's
+    fitted ν scale corrects *predicted* iteration counts and must not
+    be applied on top of a measurement."""
+    from repro.core.energy import comm_time_us, costs_from_strategies
+    from repro.parallel.strategies import make_strategy
+
+    st = make_strategy(plan.spec(), plan.width, plan.width, plan.tp,
+                       dp=plan.dp)
+    s_a, s_b, s_nu = calib.scales_for(plan.strategy)
+    rows_per_pass = plan.batch / (plan.dp * plan.microbatches)
+    alpha, beta = costs_from_strategies(
+        [st], plan.tp, plan.depth, rows_per_pass, peak_flops,
+        fits=calib.collective_fits, training=training)
+    alpha = alpha * plan.microbatches * s_a
+    beta = beta * plan.microbatches * s_b
+    if training and plan.dp > 1:
+        # data-parallel gradient synchronization: the step all-reduces
+        # each layer's local (tp-sharded) parameter grads over the dp
+        # group once per step — NOT per microbatch (accumulation syncs
+        # after the last pass).  Without this term a pure-DP plan would
+        # falsely price as communication-free.
+        m_grads = st.param_count() / plan.tp
+        us = comm_time_us("all_reduce", m_grads, plan.dp,
+                          calib.collective_fits)
+        beta += us * plan.depth * 1e-6 * s_b
+    step_s = alpha + beta
+    e_iter = plan.devices * (A * alpha + B * beta)
+    nu = iterations * (s_nu if apply_nu_scale else 1.0)
+    return ScoredPlan(
+        plan=plan, alpha_s=alpha, beta_s=beta, step_time_s=step_s,
+        energy_j_per_iter=e_iter, iterations=nu,
+        energy_j_total=nu * e_iter,
+        throughput_rows_s=(plan.batch / step_s) if step_s else 0.0,
+        param_count=plan.depth * st.param_count(),
+        notes={"alpha_scale": s_a, "beta_scale": s_b, "nu_scale": s_nu,
+               "A_w": A, "B_w": B, "peak_flops": peak_flops})
+
+
+def score_plans(plans: Sequence[PlanCandidate], calib: Calibration,
+                **kw) -> List[ScoredPlan]:
+    return [score_plan(p, calib, **kw) for p in plans]
+
+
+def apply_throughput_floor(scored: Sequence[ScoredPlan],
+                           min_rows_s: float):
+    """Split scored plans on the throughput constraint."""
+    if min_rows_s <= 0:
+        return list(scored), []
+    kept, rejected = [], []
+    for s in scored:
+        if s.throughput_rows_s >= min_rows_s:
+            kept.append(s)
+        else:
+            rejected.append((s, f"throughput {s.throughput_rows_s:.1f} "
+                                f"rows/s < {min_rows_s:.1f} floor"))
+    return kept, rejected
+
+
+def pareto_frontier(scored: Sequence[ScoredPlan],
+                    keys: Sequence[str] = ("energy_j_total",
+                                           "step_time_s")
+                    ) -> List[ScoredPlan]:
+    """Non-dominated set, minimizing every key; sorted by the first.
+
+    With the iso-loss pass normalizing every plan to the same predicted
+    loss, the default 2-D frontier (energy, step time) is the paper's
+    trade-off curve: sorted by energy it is monotone — step time
+    non-increasing — by construction of dominance."""
+    def vec(s: ScoredPlan):
+        return tuple(getattr(s, k) for k in keys)
+
+    def dominates(a, b):
+        return all(x <= y for x, y in zip(a, b)) and a != b
+
+    front = []
+    for s in scored:
+        v = vec(s)
+        if any(dominates(vec(o), v) for o in scored if o is not s):
+            continue
+        front.append(s)
+    # drop exact duplicates in objective space (keep first)
+    seen: Dict[tuple, bool] = {}
+    uniq = []
+    for s in sorted(front, key=vec):
+        if vec(s) in seen:
+            continue
+        seen[vec(s)] = True
+        uniq.append(s)
+    return uniq

@@ -1,0 +1,148 @@
+"""The planner's search space: mesh shape × per-site strategy × phantom
+(ghost) width × microbatch/scan settings.
+
+A ``PlanCandidate`` is one fully-specified configuration the paper's
+final claim quantifies over — notably it may use FEWER devices than are
+available (``devices <= max devices``): the claim is exactly that a
+phantom plan on a *smaller* mesh can match a tensor-parallel plan on the
+full mesh at lower energy.  ``model_config()`` turns a candidate into
+the ``ModelConfig`` the trainer/benchmarks consume, with the strategy
+selection expressed through ``ModelConfig.projections`` (the
+ProjectionStrategy API's config side — no legacy ``ffn_impl`` shims).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from repro.configs.base import (PHANTOM_KINDS, PROJECTION_SITES,
+                                ModelConfig, ProjectionMap, ProjectionSpec)
+
+
+@dataclass(frozen=True)
+class PlanCandidate:
+    """One point of the search space (paper-FFN subject by default)."""
+
+    dp: int                        # data-parallel ways
+    tp: int                        # model-parallel ways (the paper's p)
+    strategy: str                  # projection kind at `site`
+    width: int                     # model width n
+    depth: int                     # layers L
+    batch: int                     # global batch rows per step
+    k: int = 0                     # ghost width (phantom family only)
+    site: str = "ffn_layer"        # projection site the strategy binds to
+    microbatches: int = 1
+    scan_layers: bool = True
+    variant: str = "fused"
+
+    @property
+    def devices(self) -> int:
+        return self.dp * self.tp
+
+    @property
+    def name(self) -> str:
+        tag = f"{self.strategy}_n{self.width}_mesh{self.dp}x{self.tp}"
+        if self.strategy in PHANTOM_KINDS:
+            tag += f"_k{self.k}"
+        if self.microbatches > 1:
+            tag += f"_mb{self.microbatches}"
+        return tag
+
+    def spec(self) -> ProjectionSpec:
+        if self.strategy in PHANTOM_KINDS:
+            return ProjectionSpec(kind=self.strategy, k=self.k,
+                                  variant=self.variant)
+        return ProjectionSpec(kind=self.strategy)
+
+    def model_config(self) -> ModelConfig:
+        return ModelConfig(
+            name=self.name, family="ffn", num_layers=self.depth,
+            d_model=self.width, ffn_width=self.width, ffn_depth=self.depth,
+            mlp="relu", microbatches=self.microbatches,
+            scan_layers=self.scan_layers,
+            projections=ProjectionMap(**{self.site: self.spec()}))
+
+    def with_width(self, width: int) -> "PlanCandidate":
+        return replace(self, width=width)
+
+    def as_dict(self) -> dict:
+        return {
+            "name": self.name, "dp": self.dp, "tp": self.tp,
+            "devices": self.devices, "strategy": self.strategy,
+            "site": self.site, "width": self.width, "depth": self.depth,
+            "batch": self.batch, "k": self.k,
+            "microbatches": self.microbatches,
+            "scan_layers": self.scan_layers,
+            "projection_spec": {"kind": self.spec().kind,
+                                "k": self.spec().k,
+                                "variant": self.spec().variant},
+        }
+
+
+def mesh_shapes(max_devices: int,
+                device_counts: Optional[Iterable[int]] = None
+                ) -> List[Tuple[int, int]]:
+    """All (dp, tp) factorizations of every candidate device count.
+
+    Device counts default to the divisors of ``max_devices`` — the
+    sub-meshes a torus slice actually offers — so an 8-device budget
+    searches 1, 2, 4 and 8 chips."""
+    if device_counts is None:
+        device_counts = [d for d in range(1, max_devices + 1)
+                         if max_devices % d == 0]
+    shapes = []
+    for d in device_counts:
+        for tp in range(1, d + 1):
+            if d % tp == 0:
+                shapes.append((d // tp, tp))
+    return shapes
+
+
+def enumerate_plans(max_devices: int, *, width: int, depth: int,
+                    batch: int,
+                    strategies: Sequence[str] = ("tensor_col", "phantom"),
+                    ks: Sequence[int] = (4, 8, 16),
+                    microbatch_options: Sequence[int] = (1,),
+                    site: str = "ffn_layer",
+                    device_counts: Optional[Iterable[int]] = None,
+                    allow_submesh_tensor: bool = False
+                    ) -> List[PlanCandidate]:
+    """Enumerate the structurally-valid candidates.
+
+    Validity here is *model-class* validity (divisibility, the phantom
+    ghost-width regime k < n/p); resource feasibility (HBM fit, minimum
+    throughput) is `planner.constraints`' job so rejections can be
+    reported with reasons.
+
+    Tensor-family plans use the FULL device budget (dp fills whatever
+    the model axis doesn't): they are the baseline the paper compares
+    against, and idling paid-for devices under the baseline would make
+    every comparison trivially winnable.  Phantom-family plans may
+    downsize — "fewer GPUs at the same loss" is the claim under test.
+    ``allow_submesh_tensor=True`` opens the baseline family up too."""
+    if site not in PROJECTION_SITES:
+        raise KeyError(f"unknown projection site {site!r}")
+    plans: List[PlanCandidate] = []
+    for dp, tp in mesh_shapes(max_devices, device_counts):
+        if width % max(tp, 1) or batch % max(dp, 1):
+            continue
+        for strat in strategies:
+            phantom = strat in PHANTOM_KINDS
+            if phantom and (tp < 2 or width % tp):
+                continue        # the phantom class needs >= 2 ranks
+            if not phantom and not allow_submesh_tensor \
+                    and dp * tp != max_devices:
+                continue
+            for mb in microbatch_options:
+                if batch % (dp * mb):
+                    continue
+                for k in (ks if phantom else (0,)):
+                    # paper Eqn. 8 operating regime: ghosts narrower
+                    # than the activation shard they replace
+                    if phantom and k >= width // tp:
+                        continue
+                    plans.append(PlanCandidate(
+                        dp=dp, tp=tp, strategy=strat, width=width,
+                        depth=depth, batch=batch, k=k, site=site,
+                        microbatches=mb))
+    return plans

@@ -97,6 +97,7 @@ class ServeEngine:
         self.prefill_meter = StepMeter(f"prefill_{cfg.name}", warmup=1)
         self.decode_meter = StepMeter(f"decode_{cfg.name}", warmup=1)
         self._ledger_window = 0
+        self._closed = False
         shape = ShapeConfig("serve", max_len, slots, "decode")
         self.prefill_fn, self.decode_fn, self.cache_sds, self.cspecs = \
             make_serve_fns(cfg, mesh, shape)
@@ -188,6 +189,29 @@ class ServeEngine:
         if self.ledger is not None:
             self.record_to(self.ledger)
         return requests
+
+    # --- shutdown --------------------------------------------------------
+
+    def close(self):
+        """Flush the telemetry window and mark the engine closed.
+
+        Short serving sessions (a few ``step()`` calls, no ``run()``)
+        otherwise drop their tail records: the meters only reach the
+        ledger when ``run()`` completes.  Idempotent — a window already
+        flushed by ``run()`` has empty meters and records nothing."""
+        if self._closed:
+            return
+        self._closed = True
+        if self.ledger is not None and (self.prefill_meter.calls
+                                        or self.decode_meter.calls):
+            self.record_to(self.ledger)
+
+    def __enter__(self) -> "ServeEngine":
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.close()
+        return False
 
     # --- telemetry -------------------------------------------------------
 

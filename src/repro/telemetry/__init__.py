@@ -14,7 +14,10 @@ Three pieces, one join:
 trainer, serving engine, dry-run, benchmark suites — goes through.
 """
 from repro.telemetry.compiled import (CompiledCosts, HLO_TO_PAPER,
-                                      analyze_compiled, analyze_lowerable)
+                                      analyze_compiled, analyze_lowerable,
+                                      analyze_lowered,
+                                      clear_analysis_cache,
+                                      compile_lowered)
 from repro.telemetry.ledger import (SCHEMA, Ledger, LedgerEntry,
                                     load_report)
 from repro.telemetry.meter import StepMeter, measure
@@ -25,7 +28,8 @@ from repro.telemetry.probe import make_ffn_probe_step, measure_ffn_step
 
 __all__ = [
     "CompiledCosts", "HLO_TO_PAPER", "analyze_compiled",
-    "analyze_lowerable", "SCHEMA", "Ledger", "LedgerEntry", "load_report",
+    "analyze_lowerable", "analyze_lowered", "clear_analysis_cache",
+    "compile_lowered", "SCHEMA", "Ledger", "LedgerEntry", "load_report",
     "StepMeter", "measure", "event_wire_bytes", "events_for",
     "ffn_step_prediction", "strategy_prediction", "make_ffn_probe_step",
     "measure_ffn_step",

@@ -84,15 +84,46 @@ def _memory_dict(compiled) -> dict:
     }
 
 
+# One analysis per lowered module: every analysis call site (dry-run
+# cells, planner HBM-fit checks, probes) funnels through these caches so
+# a module is compiled and parsed at most once per process.  Keys hash
+# the HLO text — the canonical identity of a lowered/compiled module —
+# plus the collective group size the parse assumes.  Analysis results
+# are small dicts; compiled executables pin device programs, so that
+# cache is a bounded LRU (a long benchmark run compiling dozens of
+# distinct modules must not retain them all).
+_ANALYSIS_CACHE: dict = {}     # (hlo_hash, group) -> CompiledCosts
+_COMPILE_CACHE: "OrderedDict" = None   # lowered_hlo_hash -> executable
+_COMPILE_CACHE_MAX = 8
+
+
+def _compile_cache():
+    global _COMPILE_CACHE
+    if _COMPILE_CACHE is None:
+        from collections import OrderedDict
+        _COMPILE_CACHE = OrderedDict()
+    return _COMPILE_CACHE
+
+
+def clear_analysis_cache():
+    _ANALYSIS_CACHE.clear()
+    _compile_cache().clear()
+
+
 def analyze_compiled(compiled, default_group: int = 1) -> CompiledCosts:
     """Extract measured per-device costs from a ``lowered.compile()``
     result.  ``default_group`` is the collective group size assumed when
     an HLO op carries no ``replica_groups`` (normally the model-axis
-    size)."""
+    size).  Results are memoized on the optimized-HLO text, so repeated
+    analysis of the same executable (dry-run + cost-fix + planner) pays
+    for the parse once."""
+    text = compiled.as_text()
+    key = (hash(text), default_group)
+    if key in _ANALYSIS_CACHE:
+        return _ANALYSIS_CACHE[key]
     ca = _cost_dict(compiled)
-    wire, breakdown = collective_bytes(compiled.as_text(),
-                                       default_group=default_group)
-    return CompiledCosts(
+    wire, breakdown = collective_bytes(text, default_group=default_group)
+    costs = CompiledCosts(
         flops=float(ca.get("flops", 0.0)),
         hbm_bytes=float(ca.get("bytes accessed", 0.0)),
         collective_wire_bytes=float(wire),
@@ -100,6 +131,36 @@ def analyze_compiled(compiled, default_group: int = 1) -> CompiledCosts:
         collectives=breakdown,
         memory=_memory_dict(compiled),
     )
+    _ANALYSIS_CACHE[key] = costs
+    return costs
+
+
+def compile_lowered(lowered):
+    """LRU-cached ``lowered.compile()`` keyed on the lowered HLO text —
+    call sites that re-lower an identical module (the planner checking
+    HBM fit for a plan the dry-run already compiled, cost-fix reruns)
+    skip the compile entirely."""
+    cache = _compile_cache()
+    lkey = hash(lowered.as_text())
+    compiled = cache.get(lkey)
+    if compiled is None:
+        compiled = lowered.compile()
+        cache[lkey] = compiled
+        while len(cache) > _COMPILE_CACHE_MAX:
+            cache.popitem(last=False)
+    else:
+        cache.move_to_end(lkey)
+    return compiled
+
+
+def analyze_lowered(lowered, default_group: int = 1,
+                    keep_compiled: bool = False):
+    """Compile (cached) + analyze a ``fn.lower(...)`` result."""
+    compiled = compile_lowered(lowered)
+    costs = analyze_compiled(compiled, default_group=default_group)
+    if keep_compiled:
+        return costs, compiled
+    return costs
 
 
 def analyze_lowerable(fn, *args, default_group: int = 1,
@@ -107,8 +168,5 @@ def analyze_lowerable(fn, *args, default_group: int = 1,
     """Lower + compile ``fn(*args)`` (ShapeDtypeStructs are fine) and
     analyze it.  Returns ``CompiledCosts`` or, with ``keep_compiled``,
     ``(CompiledCosts, compiled)`` so callers can also execute it."""
-    compiled = fn.lower(*args).compile()
-    costs = analyze_compiled(compiled, default_group=default_group)
-    if keep_compiled:
-        return costs, compiled
-    return costs
+    return analyze_lowered(fn.lower(*args), default_group=default_group,
+                           keep_compiled=keep_compiled)

@@ -246,3 +246,88 @@ class Trainer:
         self.meter.reset(warm=True)
         self._ledger_window += 1
         return entry
+
+
+# ---------------------------------------------------------------------------
+# pilot runs (the planner's iso-loss measurements)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PilotResult:
+    """One small training run the planner fits loss curves from."""
+    name: str
+    strategy: str                  # projection kind at the planned site
+    width: int
+    tp: int
+    k: int
+    steps_run: int
+    final_loss: float
+    losses: list                   # per-step loss trajectory
+    target_loss: Optional[float] = None
+    iters_to_target: Optional[int] = None   # None = censored (never hit)
+    wall_us_median: float = 0.0
+
+    def as_dict(self) -> dict:
+        return {"name": self.name, "strategy": self.strategy,
+                "width": self.width, "tp": self.tp, "k": self.k,
+                "steps_run": self.steps_run, "final_loss": self.final_loss,
+                "target_loss": self.target_loss,
+                "iters_to_target": self.iters_to_target,
+                "wall_us_median": self.wall_us_median}
+
+
+def pilot_ffn_run(cfg: ModelConfig, mesh, *, steps: int, batch: int,
+                  target_loss: Optional[float] = None, lr: float = 3e-3,
+                  seed: int = 0, ledger=None,
+                  stop_at_target: bool = False) -> PilotResult:
+    """Train a small paper-FFN on the Gaussian-teacher dataset and
+    record the loss trajectory — the planner's quality measurement.
+
+    Runs ``steps`` iterations, recording the FIRST step at which
+    ``target_loss`` is reached (the measured ν the iso-loss frontier
+    prices plans with) while continuing to the full budget so the final
+    loss is comparable across pilots (``stop_at_target=True`` restores
+    the cheap early-exit when only ν is wanted).  Every executed step
+    is metered and the run lands in ``ledger`` (suite ``planner``) so
+    pilot costs are auditable in the same report as everything else."""
+    from repro.core.ffn import ffn_strategy, init_ffn, make_ffn_train_step
+    from repro.data.synthetic import TeacherDataset
+    from repro.optim import AdamW
+
+    axes = MeshAxes.from_mesh(mesh)
+    st = ffn_strategy(cfg, axes.tp)
+    opt = AdamW(lr, weight_decay=0.0)
+    step_fn, decls, _ = make_ffn_train_step(cfg, mesh, opt, batch)
+    params, opt_state = init_ffn(cfg, mesh, opt, seed=seed)
+    ds = TeacherDataset(cfg.ffn_width, batch, seed=seed)
+    meter = StepMeter(f"pilot_{cfg.name}", warmup=1)
+
+    losses = []
+    iters_to_target = None
+    for s in range(steps):
+        x, y = ds(s)
+        params, opt_state, loss = meter.call(
+            step_fn, params, opt_state, jnp.int32(s), x, y)
+        losses.append(float(loss))
+        if target_loss is not None and iters_to_target is None \
+                and losses[-1] <= target_loss:
+            iters_to_target = s + 1
+            if stop_at_target:
+                break
+
+    res = PilotResult(
+        name=f"pilot_{cfg.name}", strategy=st.kind, width=cfg.ffn_width,
+        tp=axes.tp, k=getattr(st, "k", 0), steps_run=len(losses),
+        final_loss=losses[-1] if losses else float("nan"), losses=losses,
+        target_loss=target_loss, iters_to_target=iters_to_target,
+        wall_us_median=meter.median_us())
+    if ledger is not None:
+        ledger.record(LedgerEntry(
+            name=res.name, suite="planner", kind="pilot", arch=cfg.name,
+            impl=st.kind, p=axes.tp, measured=dict(
+                meter.summary(), final_loss=res.final_loss,
+                iterations=iters_to_target or len(losses)),
+            extra={"width": res.width, "k": res.k,
+                   "target_loss": target_loss,
+                   "censored": iters_to_target is None}))
+    return res

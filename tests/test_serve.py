@@ -124,3 +124,40 @@ def test_engine_greedy_deterministic(mesh24):
         eng.run(reqs, max_steps=50)
         outs.append(tuple(reqs[0].out_tokens))
     assert outs[0] == outs[1]
+
+
+def test_engine_close_flushes_tail_window(mesh24):
+    """A short session (submit + a few steps, no run()) must not drop
+    its metered tail: close() flushes to the ledger, idempotently, and
+    the context-manager path closes on exit."""
+    from repro.telemetry import Ledger
+
+    cfg = get_config("stablelm-3b", smoke=True)
+    axes = MeshAxes.from_mesh(mesh24)
+    decls = model_decls(cfg, axes)
+    params = materialize(decls, 2)
+    rng = np.random.RandomState(1)
+    prompt = rng.randint(0, cfg.vocab_size, 16).astype(np.int32)
+
+    led = Ledger(run="close-test")
+    with ServeEngine(cfg, mesh24, params, slots=2, max_len=64,
+                     ledger=led) as eng:
+        eng.submit([Request(prompt=prompt.copy(), max_new_tokens=4)])
+        eng.step()
+        assert len(led) == 0          # nothing flushed mid-session
+    kinds = {e.kind for e in led.entries}
+    assert {"prefill", "decode"} <= kinds
+    n = len(led)
+    eng.close()                       # idempotent: no duplicate records
+    assert len(led) == n
+
+    # run() still flushes its own window; a following close adds nothing
+    led2 = Ledger(run="close-test-2")
+    eng2 = ServeEngine(cfg, mesh24, params, slots=2, max_len=64,
+                       ledger=led2)
+    eng2.run([Request(prompt=prompt.copy(), max_new_tokens=4)],
+             max_steps=50)
+    n2 = len(led2)
+    assert n2 > 0
+    eng2.close()
+    assert len(led2) == n2

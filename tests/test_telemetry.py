@@ -124,6 +124,27 @@ def test_event_wire_bytes_ring_model():
 
 
 # ---------------------------------------------------------------------------
+# the shared analysis cache (dry-run + planner entry point)
+# ---------------------------------------------------------------------------
+
+def test_analyze_lowered_caches_compiles_and_analyses():
+    """Re-lowering an identical module must not recompile or reparse:
+    the cache keys on the lowered/optimized HLO text."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.telemetry import analyze_lowered
+
+    f = jax.jit(lambda x: jnp.sum(x * 2.0))
+    x = jax.ShapeDtypeStruct((16,), jnp.float32)
+    c1, comp1 = analyze_lowered(f.lower(x), keep_compiled=True)
+    c2, comp2 = analyze_lowered(f.lower(x), keep_compiled=True)
+    assert comp1 is comp2                  # compile served from cache
+    assert c1 is c2                        # analysis memoized too
+    assert c1.flops >= 0
+
+
+# ---------------------------------------------------------------------------
 # StepMeter
 # ---------------------------------------------------------------------------
 
