@@ -1,52 +1,203 @@
-"""Serving launcher: continuous-batching engine over the mesh.
+"""Serving launcher: the energy-aware serving runtime over the mesh.
+
+Fixed config, closed trace (the classic smoke run):
 
   PYTHONPATH=src python -m repro.launch.serve --arch chatglm3-6b \
       --requests 8
+
+Routed: price tensor/phantom x mesh x slots candidates in predicted
+joules-per-token with the planner's calibrated constants, pick the
+cheapest meeting the SLO, replay a synthetic trace through it and print
+the measured TTFT/TPOT/e2e percentiles + the energy ledger join:
+
+  PYTHONPATH=src python -m repro.launch.serve --route auto \
+      --trace poisson --slo 200ms
+
+``--ledger PATH`` streams the serve telemetry rows to a JSONL file (and
+prints the joined ratios); ``--sample "t=0.8,k=40,p=0.95"`` switches
+the whole trace from greedy to seeded sampling; ``--seed`` seeds both
+the trace and the prompt token streams.  docs/serving.md documents the
+runtime and the joules-per-token methodology.
 """
 import argparse
 import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__)))))
+DEFAULT_LEDGER_SRC = os.path.join(ROOT, "BENCH_ledger.jsonl")
+DEFAULT_PLAN = os.path.join(ROOT, "PLAN_report.json")
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def parse_slo_ms(text):
+    """'200ms' | '0.2s' | '200' (ms) -> float ms; None/'' -> 0."""
+    if not text:
+        return 0.0
+    m = re.fullmatch(r"\s*([\d.]+)\s*(ms|s)?\s*", str(text))
+    if not m:
+        raise argparse.ArgumentTypeError(f"bad SLO {text!r} "
+                                         "(want e.g. 200ms or 0.2s)")
+    val = float(m.group(1))
+    return val * 1e3 if m.group(2) == "s" else val
+
+
+def parse_sampling(text):
+    """'t=0.8,k=40,p=0.95' -> SamplingParams; ''/None -> greedy."""
+    from repro.serve.sampling import SamplingParams
+    if not text:
+        return None
+    kw = {}
+    keys = {"t": "temperature", "temperature": "temperature",
+            "k": "top_k", "top_k": "top_k",
+            "p": "top_p", "top_p": "top_p", "seed": "seed"}
+    for part in str(text).split(","):
+        if not part.strip():
+            continue
+        k, _, v = part.partition("=")
+        k = k.strip().lower()
+        if k not in keys:
+            raise argparse.ArgumentTypeError(
+                f"bad --sample key {k!r} (known: t/k/p/seed)")
+        field = keys[k]
+        kw[field] = int(v) if field in ("top_k", "seed") else float(v)
+    kw.setdefault("temperature", 0.8)
+    return SamplingParams(**kw)
+
+
+def build_parser():
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.serve",
+        description="continuous-batching serving with paged KV cache, "
+                    "traffic/SLO harness and joules-per-token routing")
     ap.add_argument("--arch", default="chatglm3-6b")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--dp", type=int, default=2)
     ap.add_argument("--tp", type=int, default=4)
-    args = ap.parse_args()
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace + prompt RNG seed")
+    ap.add_argument("--ledger", default="",
+                    help="stream serve telemetry rows to this JSONL "
+                         "path (standalone sessions record like run())")
+    ap.add_argument("--trace", default="",
+                    choices=["", "poisson", "bursty", "closed"],
+                    help="synthetic workload; empty = legacy closed "
+                         "batch of --requests equal prompts")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="trace arrival rate (requests/s)")
+    ap.add_argument("--slo", type=parse_slo_ms, default=0.0,
+                    help="TTFT/TPOT SLO, e.g. 200ms")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request e2e deadline for goodput")
+    ap.add_argument("--sample", default="",
+                    help="sampling params, e.g. 't=0.8,k=40,p=0.95' "
+                         "(default greedy)")
+    ap.add_argument("--route", default="fixed",
+                    choices=["fixed", "auto"],
+                    help="auto: price candidates in predicted J/token "
+                         "and serve the cheapest meeting --slo")
+    ap.add_argument("--order", default="fcfs", choices=["fcfs", "edf"])
+    ap.add_argument("--calibration", default=DEFAULT_PLAN,
+                    help="PLAN_report.json with fitted constants "
+                         "(falls back to BENCH_ledger.jsonl, then "
+                         "paper defaults)")
+    return ap
+
+
+def _print_slo(report):
+    for key in ("ttft_ms", "tpot_ms", "e2e_ms"):
+        pc = report.get(key) or {}
+        if pc:
+            print(f"{key:8s} p50={pc['p50']:8.2f}  p95={pc['p95']:8.2f}  "
+                  f"p99={pc['p99']:8.2f}  (ms)")
+    print(f"requests={report.get('requests', 0)} "
+          f"tokens={report.get('generated_tokens', 0)} "
+          f"slo_met={report.get('slo_met_fraction', 0.0):.0%} "
+          f"goodput_tokens={report.get('goodput_tokens', 0)}")
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     if "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.dp * args.tp} "
             + os.environ.get("XLA_FLAGS", ""))
 
-    import numpy as np
+    from repro.planner import load_calibration
+    from repro.serve.router import (ServeConfig, candidate_configs, route,
+                                    run_config)
+    from repro.serve.traffic import make_trace, TraceItem
+    from repro.telemetry import Ledger
 
-    from repro.configs.base import get_config
-    from repro.launch.mesh import make_local_mesh
-    from repro.models.model import model_decls
-    from repro.parallel.axes import MeshAxes
-    from repro.parallel.params import materialize
-    from repro.serve.engine import Request, ServeEngine
+    ledger = None
+    if args.ledger:
+        ledger = Ledger(run="launch.serve", jsonl_path=args.ledger)
 
-    cfg = get_config(args.arch, smoke=True)
-    mesh = make_local_mesh(args.dp, args.tp)
-    axes = MeshAxes.from_mesh(mesh)
-    params = materialize(model_decls(cfg, axes), 0)
-    eng = ServeEngine(cfg, mesh, params, slots=args.slots,
-                      max_len=args.max_len)
-    rng = np.random.RandomState(0)
-    reqs = [Request(prompt=rng.randint(0, cfg.vocab_size, 16,
-                                       dtype=np.int64).astype(np.int32),
-                    max_new_tokens=args.new_tokens)
-            for _ in range(args.requests)]
-    eng.run(reqs)
-    for i, r in enumerate(reqs):
-        print(f"req{i}: {len(r.out_tokens)} tokens, done={r.done}")
+    sampling = parse_sampling(args.sample)
+    if args.trace:
+        trace = make_trace(args.trace, n=args.requests,
+                           rate_rps=args.rate,
+                           prompt_len_range=(4, min(48, args.max_len - 1)),
+                           new_tokens_range=(4, args.new_tokens),
+                           deadline_ms=args.deadline_ms, seed=args.seed)
+    else:
+        # legacy closed batch: --requests equal 16-token prompts
+        trace = [TraceItem(arrival_s=0.0, prompt_len=16,
+                           max_new_tokens=args.new_tokens,
+                           deadline_ms=args.deadline_ms, seed=args.seed)
+                 for _ in range(args.requests)]
+
+    calib = load_calibration(plan_report_path=args.calibration,
+                             ledger_path=DEFAULT_LEDGER_SRC)
+
+    if args.route == "auto":
+        cands = candidate_configs(args.arch, args.dp * args.tp,
+                                  slots_options=(args.slots,),
+                                  max_len=args.max_len,
+                                  page_size=args.page_size)
+        winner, priced = route(cands, calib, trace, slo_ms=args.slo)
+        print(f"# calibration: {calib.source}")
+        print("# candidates (predicted, modeled accelerator):")
+        for pc in priced:
+            flag = "*" if pc is winner else " "
+            print(f"# {flag} {pc.config.name:<44s} "
+                  f"J/tok={pc.j_per_token:.3e} "
+                  f"ttft={pc.ttft_s*1e3:.3f}ms tpot={pc.tpot_s*1e3:.3f}ms "
+                  f"slo_ok={pc.meets_slo}")
+        sc = winner.config
+        print(f"# routed -> {sc.name} "
+              f"(predicted {winner.j_per_token:.3e} J/token)")
+    else:
+        impl = "phantom" if "phantom" in args.arch else "tensor"
+        sc = ServeConfig(args.arch, impl, args.dp, args.tp, args.slots,
+                         max_len=args.max_len, page_size=args.page_size)
+
+    result = run_config(sc, trace, ledger=ledger, calib=calib,
+                        seed=args.seed, slo_ms=args.slo,
+                        sampling=sampling, order=args.order)
+    print(f"# served {sc.name} on mesh {sc.dp}x{sc.tp}")
+    _print_slo(result["slo"])
+    ratio = result["energy_ratio"]
+    print(f"joules/token (measured HLO account): "
+          f"{result['j_per_token_measured']:.3e}")
+    for kind in ("prefill", "decode"):
+        if kind in ratio:
+            print(f"energy measured/predicted [{kind}]: "
+                  f"{ratio[kind]:.3f}")
+    pages = result["pages"]
+    print(f"pages: high_water={pages['high_water_pages']}"
+          f"/{pages['total_pages']} allocs={pages['page_allocs']} "
+          f"frees={pages['page_frees']} "
+          f"fragmentation={pages['fragmentation']:.2f}")
+    if ledger is not None:
+        print(f"# wrote {len(ledger)} ledger rows to {args.ledger}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -12,6 +12,7 @@ runs (``isoloss``) and report the Pareto frontier + winning plan
 from repro.planner.calibration import (Calibration, calibrate_from_ledger,
                                        calibrate_from_rows,
                                        least_squares_scale,
+                                       load_calibration,
                                        paper_default_calibration)
 from repro.planner.constraints import (Constraints, Rejection,
                                        compiled_hbm_bytes, filter_feasible,
@@ -29,7 +30,8 @@ from repro.planner.space import PlanCandidate, enumerate_plans, mesh_shapes
 
 __all__ = [
     "Calibration", "calibrate_from_ledger", "calibrate_from_rows",
-    "least_squares_scale", "paper_default_calibration",
+    "least_squares_scale", "load_calibration",
+    "paper_default_calibration",
     "Constraints", "Rejection", "compiled_hbm_bytes", "filter_feasible",
     "hbm_bytes_estimate",
     "IsoLossResult", "LossCurve", "apply_iso_loss", "fit_loss_curve",

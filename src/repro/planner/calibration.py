@@ -96,6 +96,21 @@ class Calibration:
             "source": self.source,
         }
 
+    @classmethod
+    def from_dict(cls, d: dict) -> "Calibration":
+        """Rehydrate a serialized calibration (the ``calibration`` block
+        of ``PLAN_report.json``) — how the serving router reuses the
+        constants a planning pass already fitted."""
+        return cls(
+            alpha_scale=dict(d.get("alpha_scale") or {}),
+            beta_scale=dict(d.get("beta_scale") or {}),
+            nu_scale=dict(d.get("nu_scale") or {}),
+            collective_fits={k: tuple(v) for k, v in
+                             (d.get("collective_fits") or
+                              PAPER_COLLECTIVE_FITS).items()},
+            provenance=dict(d.get("provenance") or {}),
+            source=d.get("source", PAPER_SOURCE))
+
 
 def paper_default_calibration() -> Calibration:
     """The documented no-ledger fallback: the paper model verbatim."""
@@ -236,3 +251,26 @@ def calibrate_from_ledger(jsonl_path: Optional[str] = None,
     with neither, returns the documented paper-defaults calibration."""
     rows = _load_rows(jsonl_path, report)
     return calibrate_from_rows(rows)
+
+
+def load_calibration(plan_report_path: Optional[str] = None,
+                     ledger_path: Optional[str] = None) -> Calibration:
+    """The SERVING-side calibration entry point (docs/serving.md).
+
+    Preference order: the constants a planning pass already fitted and
+    serialized into ``PLAN_report.json`` > a fresh fit from
+    ``BENCH_ledger.jsonl`` > the documented paper defaults.  Missing or
+    unreadable files fall through rather than raise — serving must come
+    up on a blank checkout."""
+    if plan_report_path and os.path.exists(plan_report_path):
+        try:
+            with open(plan_report_path) as f:
+                rec = json.load(f)
+            block = rec.get("calibration")
+            if block:
+                return Calibration.from_dict(block)
+        except (OSError, ValueError):
+            pass
+    if ledger_path and os.path.exists(ledger_path):
+        return calibrate_from_ledger(jsonl_path=ledger_path)
+    return paper_default_calibration()

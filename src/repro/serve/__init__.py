@@ -1,0 +1,29 @@
+"""The energy-aware serving runtime (docs/serving.md).
+
+  * ``engine``    — slot-based continuous batching over the mesh
+  * ``kv_cache``  — paged KV-cache manager (admission, occupancy, churn)
+  * ``scheduler`` — length-bucketed refill groups, EDF/FCFS, interleave
+  * ``sampling``  — per-request greedy/temperature/top-k/top-p
+  * ``traffic``   — synthetic workload traces + the SLO tracker
+  * ``router``    — joules-per-token pricing and SLO-aware routing
+"""
+from repro.serve.engine import Request, ServeEngine, make_serve_fns
+from repro.serve.kv_cache import CacheOverflow, PagedKVCache
+from repro.serve.sampling import Sampler, SamplingParams
+from repro.serve.scheduler import Scheduler, bucket_of
+from repro.serve.traffic import (SLOTracker, TraceItem, make_trace,
+                                 replay, trace_requests)
+from repro.serve.router import (PricedConfig, ServeConfig,
+                                candidate_configs, price_config, route,
+                                run_config, serve_predictions,
+                                trace_stats)
+
+__all__ = [
+    "Request", "ServeEngine", "make_serve_fns",
+    "CacheOverflow", "PagedKVCache",
+    "Sampler", "SamplingParams",
+    "Scheduler", "bucket_of",
+    "SLOTracker", "TraceItem", "make_trace", "replay", "trace_requests",
+    "PricedConfig", "ServeConfig", "candidate_configs", "price_config",
+    "route", "run_config", "serve_predictions", "trace_stats",
+]

@@ -1,16 +1,37 @@
-"""Batched serving engine: prefill + decode steps over the mesh, greedy
-generation, and continuous batching (slot-based request scheduling with
-per-slot positions — finished slots are refilled without stalling the
-running batch).
+"""Batched serving engine: prefill + decode steps over the mesh, with
+continuous batching (slot-based request scheduling with per-slot
+positions — finished slots are refilled without stalling the running
+batch).
 
 The decode KV cache is sequence-sharded over the model axis and the
 partial-attention merge is a flash-decoding LSE psum (DESIGN.md §6), so
-any GQA geometry serves on any mesh.
+any GQA geometry serves on any mesh.  Around that physical cache the
+runtime layers (docs/serving.md):
+
+  * ``kv_cache.PagedKVCache``  — page-table admission/occupancy over
+    the slots (alloc on prefill, grow on decode, free on completion);
+  * ``scheduler.Scheduler``    — length-bucketed refill groups (mixed
+    prompt lengths padded to a shared bucket), EDF/FCFS ordering and
+    the prefill/decode interleave policy;
+  * ``sampling.Sampler``       — per-request greedy/temperature/top-k/
+    top-p decoding with per-request PRNG streams;
+  * a virtual clock            — wall time of executed steps, which the
+    traffic replay uses for arrivals and the SLO tracker for TTFT/TPOT.
+
+Bucket-padded prompts decode correctly via last-token replay: a prompt
+of true length ``s`` padded to ``S`` leaves garbage cache rows at
+positions ``s..S-1``, but decode masks cache positions ``>= pos + 1``,
+so the engine sets ``pos = s - 1``, feeds the last real prompt token as
+the first decode input (recomputing exactly the row prefill wrote at
+``s - 1``), and samples the first output token from that step's logits.
+Every later write lands at the current ``pos``, overwriting each pad
+row before it ever becomes attendable.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +45,14 @@ from repro.models.model import (forward_decode, forward_prefill,
 from repro.parallel.axes import MeshAxes, resolve_spec
 from repro.parallel.params import specs
 from repro.parallel.compat import shard_map
+from repro.serve.kv_cache import PagedKVCache
+from repro.serve.sampling import Sampler, SamplingParams
+from repro.serve.scheduler import Scheduler
 from repro.telemetry import LedgerEntry, StepMeter
+
+# model families whose prefill folds tokens into a recurrent state —
+# these cannot be right-padded, so their refill groups are exact-length
+RECURRENT_FAMILIES = ("ssm", "hybrid", "encdec")
 
 
 def make_serve_fns(cfg: ModelConfig, mesh, shape: ShapeConfig):
@@ -75,21 +103,34 @@ class Request:
     prompt: np.ndarray                  # [S_prompt] int32
     max_new_tokens: int = 32
     eos_id: int = -1                    # -1: never stops early
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    req_id: int = -1
+    arrival_s: float = 0.0              # trace time (virtual clock)
+    deadline_ms: float = 0.0            # e2e deadline; 0 = none
     out_tokens: list = field(default_factory=list)
     done: bool = False
+    error: Optional[str] = None         # admission rejection reason
+    # SLO stamps on the engine's virtual clock
+    t_submit_s: Optional[float] = None
+    t_first_s: Optional[float] = None
+    t_done_s: Optional[float] = None
+    _seq: int = field(default=0, repr=False)
+    _sampler: Optional[Sampler] = field(default=None, repr=False)
 
 
 class ServeEngine:
     """Slot-based continuous batching.
 
-    All slots decode together each step with per-slot positions; finished
-    slots are refilled from the queue by running a fresh batched prefill
-    for the pending prompts and splicing their cache rows in (a jitted
-    masked merge, so cache sharding is preserved).
+    All slots decode together each step with per-slot positions; the
+    scheduler refills finished slots by running a batched prefill for a
+    length-bucketed group of pending prompts and splicing their cache
+    rows in (a jitted masked merge, so cache sharding is preserved).
     """
 
     def __init__(self, cfg: ModelConfig, mesh, params, *, slots: int = 8,
-                 max_len: int = 256, ledger=None):
+                 max_len: int = 256, ledger=None, page_size: int = 16,
+                 order: str = "fcfs", min_free_for_prefill: int = 1,
+                 scheduler: Optional[Scheduler] = None):
         self.cfg, self.mesh, self.params = cfg, mesh, params
         self.slots = slots
         self.max_len = max_len
@@ -98,6 +139,23 @@ class ServeEngine:
         self.decode_meter = StepMeter(f"decode_{cfg.name}", warmup=1)
         self._ledger_window = 0
         self._closed = False
+        # the cache seq dim is sharded over the model axis, so every
+        # prefill length (= a bucket multiple) must divide tp — the
+        # invariant the old `S % 16 == 0` assert enforced
+        tp = MeshAxes.from_mesh(mesh).tp
+        if page_size % tp:
+            raise ValueError(
+                f"page_size {page_size} must be a multiple of the "
+                f"model-axis size {tp} (sequence-shard divisibility of "
+                f"bucket-padded prefills)")
+        self.pages = PagedKVCache(slots, max_len, page_size)
+        self.scheduler = scheduler or Scheduler(
+            bucket=page_size, order=order,
+            mixed_lengths=cfg.family not in RECURRENT_FAMILIES,
+            min_free_for_prefill=min_free_for_prefill, pages=self.pages)
+        # virtual clock: wall seconds of executed steps x clock_scale
+        self.now_s = 0.0
+        self.clock_scale = 1.0
         shape = ShapeConfig("serve", max_len, slots, "decode")
         self.prefill_fn, self.decode_fn, self.cache_sds, self.cspecs = \
             make_serve_fns(cfg, mesh, shape)
@@ -116,74 +174,155 @@ class ServeEngine:
 
         self._merge = jax.jit(merge)
 
+    # --- clock -----------------------------------------------------------
+
+    def advance_clock(self, dt_s: float):
+        """Jump the virtual clock forward (idle gaps in a trace replay)."""
+        self.now_s += max(0.0, dt_s)
+
+    def _timed(self, meter, fn, *args):
+        t0 = time.perf_counter()
+        out = meter.call(fn, *args)
+        self.now_s += (time.perf_counter() - t0) * self.clock_scale
+        return out
+
+    def has_active(self) -> bool:
+        return any(r is not None for r in self.active)
+
+    def warmup(self, bucket_lens=()):
+        """Compile the decode step and one prefill per bucket length
+        OUTSIDE the meters and the virtual clock — a trace replay would
+        otherwise bill multi-second XLA compiles as TTFT.  Real
+        deployments warm their known buckets at startup the same way."""
+        for S in sorted(set(bucket_lens)):
+            batch = _add_modality_stubs(
+                self.cfg, {"tokens": jnp.zeros((self.slots, S),
+                                               jnp.int32)},
+                self.slots, S)
+            jax.block_until_ready(self.prefill_fn(self.params, batch))
+        cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), self.cache_sds)
+        out, _ = self.decode_fn(self.params, cache,
+                                jnp.asarray(self.last_tok),
+                                jnp.asarray(self.pos))
+        jax.block_until_ready(out)
+
+    @property
+    def queue(self):
+        return self.scheduler.queue
+
+    # --- scheduling ------------------------------------------------------
+
     def submit(self, requests: List[Request]):
-        self.queue = list(requests)
+        """Enqueue requests (admission-checked) and refill free slots.
+        Unlike the old engine, submitting is cumulative — a trace replay
+        feeds arrivals in as the clock passes them."""
+        for req in requests:
+            if len(req.prompt) == 0:
+                req.done, req.error = True, "rejected: empty prompt"
+                self.scheduler.rejected.append(req)
+                continue
+            req.t_submit_s = self.now_s
+            req._sampler = Sampler(req.sampling, self.cfg.vocab_size)
+            self.scheduler.add([req])
         self._fill_slots()
 
     def _fill_slots(self):
-        pending = []
-        slot_ids = []
-        for i in range(self.slots):
-            if self.active[i] is None and self.queue:
-                req = self.queue.pop(0)
-                self.active[i] = req
-                pending.append(req)
-                slot_ids.append(i)
-        if not pending:
-            return
-        # batched prefill for ALL slots, then splice the new rows in.
-        # Prompts within one refill group must share a length (real
-        # deployments bucket by length); right-padding would misplace the
-        # last-token logits otherwise.
-        lens = {len(r.prompt) for r in pending}
-        assert len(lens) == 1, ("prompts in one refill group must have "
-                                f"equal length, got {sorted(lens)}")
-        S = max(len(r.prompt) for r in pending)
-        assert S % 16 == 0, ("prompt length must be a multiple of 16 "
-                             "(sequence-sharding divisibility), got "
-                             f"{S}")
+        """Refill free slots with length-bucketed prefill groups, per
+        the scheduler's interleave policy.  One group = one batched
+        prefill call."""
+        free = [i for i in range(self.slots) if self.active[i] is None]
+        while free:
+            n_active = self.slots - len(free)
+            if not self.scheduler.should_refill(len(free), n_active):
+                return
+            S, group = self.scheduler.next_group(len(free))
+            if not group:
+                return
+            self._prefill_group(S, group, free)
+
+    def _prefill_group(self, S: int, group: List[Request],
+                       free: List[int]):
+        """Batched prefill for ``group`` (prompts padded to ``S``),
+        splicing the new cache rows into the popped free slots."""
+        slot_ids = [free.pop(0) for _ in group]
         toks = np.zeros((self.slots, S), np.int32)
-        for i, req in zip(slot_ids, pending):
+        for i, req in zip(slot_ids, group):
             toks[i, :len(req.prompt)] = req.prompt
         batch = {"tokens": jnp.asarray(toks)}
         batch = _add_modality_stubs(self.cfg, batch, self.slots, S)
-        logits, fresh_full = self.prefill_meter.call(
-            self.prefill_fn, self.params, batch)
+        logits, fresh_full = self._timed(self.prefill_meter,
+                                         self.prefill_fn, self.params,
+                                         batch)
         # prefill used seq S; splice into the max_len cache rows
         fresh = jax.tree.map(
             lambda f, c: _pad_cache_seq(f, c), fresh_full, self.cache)
+        logits = np.asarray(logits)
         mask = np.zeros((self.slots,), bool)
-        for i, req in zip(slot_ids, pending):
+        for i, req in zip(slot_ids, group):
             mask[i] = True
-            self.pos[i] = len(req.prompt)
-            nxt = int(np.argmax(np.asarray(logits)[i, 0]))
-            self.last_tok[i, 0] = nxt
-            req.out_tokens.append(nxt)
+            self.active[i] = req
+            self.pages.alloc(i, S)
+            s = len(req.prompt)
+            if s == S:
+                # exact-length: prefill's last-position logits ARE the
+                # first output token
+                nxt = req._sampler(logits[i, 0])
+                req.out_tokens.append(nxt)
+                req.t_first_s = self.now_s
+                self.last_tok[i, 0] = nxt
+                self.pos[i] = s
+                # a prefill-produced token can already terminate: eos,
+                # or a max_new_tokens=1 request (no decode step burned)
+                if nxt == req.eos_id or req.max_new_tokens <= 1:
+                    self._finish(i, req)
+                    free.append(i)
+            else:
+                # bucket-padded: replay the last real prompt token as
+                # the first decode input (see module docstring)
+                self.last_tok[i, 0] = req.prompt[s - 1]
+                self.pos[i] = s - 1
         self.cache = self._merge(self.cache, fresh, jnp.asarray(mask))
 
+    def _finish(self, slot: int, req: Request):
+        req.done = True
+        req.t_done_s = self.now_s
+        self.active[slot] = None
+        self.pages.free(slot)
+
+    # --- decode ----------------------------------------------------------
+
     def step(self):
-        logits, self.cache = self.decode_meter.call(
-            self.decode_fn, self.params, self.cache,
+        if not self.has_active():
+            self._fill_slots()
+            if not self.has_active():
+                return
+        logits, self.cache = self._timed(
+            self.decode_meter, self.decode_fn, self.params, self.cache,
             jnp.asarray(self.last_tok), jnp.asarray(self.pos))
         logits = np.asarray(logits)
         for i, req in enumerate(self.active):
             if req is None:
                 continue
+            wrote = int(self.pos[i])          # decode wrote this row
             self.pos[i] += 1
-            nxt = int(np.argmax(logits[i, 0]))
+            self.pages.advance(i, wrote)
+            nxt = req._sampler(logits[i, 0])
+            if req.t_first_s is None:         # replayed-prompt first token
+                req.t_first_s = self.now_s
             req.out_tokens.append(nxt)
             self.last_tok[i, 0] = nxt
             if (len(req.out_tokens) >= req.max_new_tokens
                     or nxt == req.eos_id
                     or self.pos[i] >= self.max_len - 1):
-                req.done = True
-                self.active[i] = None
+                self._finish(i, req)
         self._fill_slots()
 
     def run(self, requests: List[Request], max_steps: int = 10_000):
         self.submit(requests)
         steps = 0
-        while any(r is not None for r in self.active) and steps < max_steps:
+        while (self.has_active() or len(self.scheduler)) \
+                and steps < max_steps:
             self.step()
             steps += 1
         if self.ledger is not None:
@@ -216,16 +355,23 @@ class ServeEngine:
     # --- telemetry -------------------------------------------------------
 
     def telemetry(self) -> dict:
-        """Wall-time summaries for the prefill and decode meters."""
+        """Wall-time summaries for the prefill and decode meters, plus
+        the page-table occupancy stats."""
         return {"prefill": self.prefill_meter.summary(),
-                "decode": self.decode_meter.summary()}
+                "decode": self.decode_meter.summary(),
+                "pages": self.pages.stats()}
 
-    def record_to(self, ledger, predicted=None):
+    def record_to(self, ledger, predicted=None, extra=None,
+                  measured_extra=None):
         """Flush one serving entry per metered step kind to a Ledger.
 
         The meters are reset afterwards, so repeated ``run()`` calls
         record disjoint windows rather than overlapping cumulative
-        summaries (the ``window`` counter in ``extra`` orders them)."""
+        summaries (the ``window`` counter in ``extra`` orders them).
+        ``predicted`` / ``measured_extra`` are optional per-kind dicts
+        (``{"prefill": {...}, "decode": {...}}``) — the router passes
+        the analytic serve prediction and the compiled-HLO measured
+        fields so the entries join into energy ratios."""
         axes = MeshAxes.from_mesh(self.mesh)
         impl = ("phantom" if self.cfg.uses_phantom_sites() else "dense")
         out = []
@@ -233,13 +379,19 @@ class ServeEngine:
                             ("decode", self.decode_meter)):
             if not meter.calls:
                 continue
+            ex = {"slots": self.slots, "max_len": self.max_len,
+                  "window": self._ledger_window,
+                  "pages": self.pages.stats()}
+            ex.update(extra or {})
+            measured = meter.summary()
+            if measured_extra and measured_extra.get(kind):
+                measured.update(measured_extra[kind])
             out.append(ledger.record(LedgerEntry(
                 name=f"serve_{kind}_{self.cfg.name}", suite="serve",
                 kind=kind, arch=self.cfg.name, impl=impl, p=axes.tp,
-                measured=meter.summary(),
+                measured=measured,
                 predicted=predicted.get(kind) if predicted else None,
-                extra={"slots": self.slots, "max_len": self.max_len,
-                       "window": self._ledger_window})))
+                extra=ex)))
             meter.reset(warm=True)
         self._ledger_window += 1
         return out

@@ -1,0 +1,183 @@
+"""Block/paged KV-cache manager over the sequence-sharded cache layout.
+
+The physical decode cache is still one dense, statically-shaped jax
+array per layer group (``[groups, slots, max_len, kv, hd]``, seq dim
+sharded over the model axis) — XLA's static-shape world rules out
+vLLM-style scatter-addressed physical pages.  What pages buy us here is
+everything *around* the tensor:
+
+  * **admission control** — a request is admitted only if its worst-case
+    page need (padded prompt + ``max_new_tokens``) fits the slot's frame
+    budget, instead of silently truncating at ``max_len``;
+  * **occupancy accounting** — the old engine zero-filled ``max_len``
+    rows per slot and reported nothing; the page table knows exactly how
+    many 16-token pages are live, the high-water mark, and the internal
+    fragmentation of the current residency (live tokens / paged tokens);
+  * **alloc/free invariants** — every slot's pages are allocated
+    contiguously from its frame base and returned in full on request
+    completion, which ``check()`` verifies and the churn tests exercise.
+
+Pages are ``page_size`` tokens (default 16 — the sequence-sharding
+divisibility unit, so a page never straddles a model-axis shard
+boundary for tp <= 16).  Each slot owns ``max_len // page_size`` frames;
+prefill reserves the pages covering the padded prompt and decode
+allocates one more page each time the write position crosses a page
+boundary.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass
+class PageAllocation:
+    """One slot's live page-table row."""
+    slot: int
+    pages: int = 0          # frames currently allocated to the slot
+    live_tokens: int = 0    # cache rows actually written (pos + 1)
+
+
+class CacheOverflow(RuntimeError):
+    """A (prompt, max_new_tokens) request cannot fit a slot's frames."""
+
+
+class PagedKVCache:
+    """Page table for a ``slots x max_len`` sequence-sharded cache."""
+
+    def __init__(self, slots: int, max_len: int, page_size: int = 16):
+        if page_size <= 0:
+            raise ValueError(f"page_size must be positive, got {page_size}")
+        if max_len % page_size:
+            raise ValueError(f"max_len {max_len} must be a multiple of "
+                             f"page_size {page_size}")
+        self.slots = slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.frames_per_slot = max_len // page_size
+        self.total_pages = slots * self.frames_per_slot
+        self._table: dict[int, PageAllocation] = {}
+        # counters for the stats/ledger report
+        self.page_allocs = 0
+        self.page_frees = 0
+        self.requests_admitted = 0
+        self.requests_freed = 0
+        self.high_water_pages = 0
+
+    # --- sizing ----------------------------------------------------------
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Frames needed to hold ``n_tokens`` cache rows."""
+        return max(0, -(-int(n_tokens) // self.page_size))
+
+    def can_admit(self, prompt_len: int, max_new_tokens: int,
+                  padded_len: int = 0) -> bool:
+        """Worst-case fit: padded prompt + every new token + the final
+        write position (decode writes at ``pos`` before the finish
+        check, so the last generated token still needs a row)."""
+        need = max(padded_len, prompt_len) + max(max_new_tokens, 1)
+        return need <= self.max_len and \
+            self.pages_for(need) <= self.frames_per_slot
+
+    # --- alloc / advance / free ------------------------------------------
+
+    def alloc(self, slot: int, n_tokens: int) -> PageAllocation:
+        """Admit a request into ``slot``, reserving pages for its first
+        ``n_tokens`` cache rows (the padded prefill length)."""
+        if slot in self._table:
+            raise RuntimeError(f"slot {slot} already allocated "
+                               f"({self._table[slot]})")
+        pages = self.pages_for(n_tokens)
+        if pages > self.frames_per_slot:
+            raise CacheOverflow(
+                f"{n_tokens} tokens need {pages} pages > "
+                f"{self.frames_per_slot} frames/slot "
+                f"(max_len={self.max_len}, page={self.page_size})")
+        rec = PageAllocation(slot=slot, pages=pages, live_tokens=n_tokens)
+        self._table[slot] = rec
+        self.page_allocs += pages
+        self.requests_admitted += 1
+        self.high_water_pages = max(self.high_water_pages,
+                                    self.allocated_pages)
+        return rec
+
+    def advance(self, slot: int, pos: int) -> int:
+        """Decode wrote a cache row at ``pos``; allocate any new page
+        that write crossed into.  Returns pages newly allocated."""
+        rec = self._table[slot]
+        rec.live_tokens = max(rec.live_tokens, pos + 1)
+        need = self.pages_for(rec.live_tokens)
+        grew = 0
+        if need > rec.pages:
+            if need > self.frames_per_slot:
+                raise CacheOverflow(
+                    f"slot {slot}: position {pos} is past the last frame "
+                    f"({self.frames_per_slot} x {self.page_size})")
+            grew = need - rec.pages
+            rec.pages = need
+            self.page_allocs += grew
+            self.high_water_pages = max(self.high_water_pages,
+                                        self.allocated_pages)
+        return grew
+
+    def free(self, slot: int) -> int:
+        """Request finished: return every page the slot held."""
+        rec = self._table.pop(slot)
+        self.page_frees += rec.pages
+        self.requests_freed += 1
+        return rec.pages
+
+    # --- stats / invariants ----------------------------------------------
+
+    @property
+    def allocated_pages(self) -> int:
+        return sum(r.pages for r in self._table.values())
+
+    @property
+    def live_tokens(self) -> int:
+        return sum(r.live_tokens for r in self._table.values())
+
+    def occupancy(self) -> float:
+        """Fraction of the page pool currently allocated."""
+        return self.allocated_pages / self.total_pages
+
+    def fragmentation(self) -> float:
+        """1 - live/paged tokens: the share of allocated cache rows not
+        holding a live token (page-rounding waste; the zero-filled
+        monolith this replaces sat at 1 - live/(slots*max_len))."""
+        paged = self.allocated_pages * self.page_size
+        return 1.0 - (self.live_tokens / paged) if paged else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "page_size": self.page_size,
+            "total_pages": self.total_pages,
+            "allocated_pages": self.allocated_pages,
+            "occupancy": self.occupancy(),
+            "high_water_pages": self.high_water_pages,
+            "live_tokens": self.live_tokens,
+            "fragmentation": self.fragmentation(),
+            "page_allocs": self.page_allocs,
+            "page_frees": self.page_frees,
+            "requests_admitted": self.requests_admitted,
+            "requests_freed": self.requests_freed,
+        }
+
+    def check(self):
+        """Raise if any page-table invariant is violated."""
+        for slot, rec in self._table.items():
+            assert 0 <= slot < self.slots, f"slot {slot} out of range"
+            assert 0 < rec.pages <= self.frames_per_slot, rec
+            assert rec.live_tokens <= rec.pages * self.page_size, rec
+            assert self.pages_for(rec.live_tokens) == rec.pages, \
+                f"slot {slot}: {rec.pages} pages but " \
+                f"{rec.live_tokens} live tokens"
+        assert self.allocated_pages <= self.total_pages
+        assert self.page_allocs - self.page_frees == self.allocated_pages, \
+            (self.page_allocs, self.page_frees, self.allocated_pages)
+        assert self.requests_admitted - self.requests_freed \
+            == len(self._table)
+
+    def __repr__(self):
+        return (f"PagedKVCache(slots={self.slots}, "
+                f"pages={self.allocated_pages}/{self.total_pages}, "
+                f"page={self.page_size})")

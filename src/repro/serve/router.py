@@ -1,0 +1,343 @@
+"""Energy-aware serve routing: price candidate configs in predicted
+joules-per-token, route a trace to the cheapest one meeting the SLO,
+and record measured-vs-predicted serve energy to the Ledger.
+
+A ``ServeConfig`` is one way to stand the serving engine up: projection
+family (tensor vs phantom at the MLP sites — the paper's technique on
+the inference path), mesh shape (dp x tp), and slot count.  Like the
+training planner, phantom candidates may use FEWER devices than the
+budget: the claim under test is that a phantom config on a smaller mesh
+can meet the same SLO at lower joules-per-token.
+
+Pricing reuses the planner's calibrated constants
+(``planner.load_calibration``: PLAN_report.json's fitted block when a
+planning pass ran, else a fresh ledger fit, else paper defaults) and
+``telemetry.predict.serve_step_prediction`` — the fwd-only per-step
+account of the very strategy objects that execute, priced by
+E = p·(A·α + B·β).  Joules-per-token for a trace with mean padded
+prompt length S, mean output length G, at full slot occupancy:
+
+    J/tok = (E_prefill_step / slots + G · E_decode_step / slots) / G
+
+(the prefill step serves ``slots`` prompts, each decode step yields
+``slots`` tokens).  Predicted TTFT/TPOT are the α+β step times of the
+MODELED accelerator (paper Frontier/TPU constants) — the SLO gate is a
+model-based feasibility screen; the measured SLO report comes from the
+replay itself.
+
+After routing, ``run_config`` replays the trace, lowers the engine's
+own prefill/decode functions to read the MEASURED compiled-HLO account
+(``telemetry.predict.measured_energy_fields``), and records joined
+ledger rows whose ``ratios.energy_j_per_iter`` CI pins to [0.5, 2.0].
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import (ModelConfig, ProjectionMap, ProjectionSpec,
+                                get_config)
+from repro.core.energy import FRONTIER_A_W, FRONTIER_B_W, TPU_PEAK_FLOPS
+from repro.planner.calibration import Calibration
+from repro.serve.scheduler import bucket_of
+from repro.serve.traffic import SLOTracker, TraceItem, replay, trace_requests
+
+# the ffn sites the phantom candidates factorize (the paper's technique;
+# attention projections stay dense on the serving path)
+_PHANTOM_FFN = ("ffn_gate", "ffn_up", "ffn_down")
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """One candidate serving configuration."""
+    arch: str
+    impl: str                    # "tensor" | "phantom"
+    dp: int
+    tp: int
+    slots: int
+    max_len: int = 64
+    page_size: int = 16
+    k: int = 0                   # ghost width; 0 = the arch's default
+
+    @property
+    def devices(self) -> int:
+        return self.dp * self.tp
+
+    @property
+    def name(self) -> str:
+        tag = f"{self.arch}-{self.impl}-mesh{self.dp}x{self.tp}" \
+              f"-slots{self.slots}"
+        if self.impl == "phantom" and self.k:
+            tag += f"-k{self.k}"
+        return tag
+
+    @property
+    def strategy_kind(self) -> str:
+        """The calibration table key for this config's MLP strategy."""
+        return "phantom" if self.impl == "phantom" else "tensor_col"
+
+    def model_config(self) -> ModelConfig:
+        """The ModelConfig this candidate serves.  ``scan_layers=False``
+        so the compiled-HLO measured account is exact (XLA counts scan
+        bodies once — the dry-run caveat)."""
+        cfg = get_config(self.arch, smoke=True)
+        if self.impl == "phantom":
+            ph = ProjectionSpec(kind="phantom",
+                                k=self.k or cfg.phantom.k)
+            pm = ProjectionMap(**{s: ph for s in _PHANTOM_FFN})
+        else:
+            pm = ProjectionMap(default=ProjectionSpec(kind="tensor"))
+        return cfg.replace(name=self.name, projections=pm,
+                           scan_layers=False)
+
+    def as_dict(self) -> dict:
+        return {"name": self.name, "arch": self.arch, "impl": self.impl,
+                "dp": self.dp, "tp": self.tp, "devices": self.devices,
+                "slots": self.slots, "max_len": self.max_len,
+                "page_size": self.page_size, "k": self.k}
+
+
+def candidate_configs(arch: str, devices: int = 8, *,
+                      slots_options: Sequence[int] = (4, 8),
+                      max_len: int = 64,
+                      page_size: int = 16) -> List[ServeConfig]:
+    """Enumerate candidates: tensor configs use the FULL device budget
+    (idling paid-for devices under the baseline would make the phantom
+    comparison trivially winnable — same rule as the training planner);
+    phantom configs may downsize to sub-meshes."""
+    cfg = get_config(arch, smoke=True)
+    out = []
+    # tp >= 2 only: the router arbitrates MODEL-PARALLEL serving
+    # configs (sequence-sharded cache, phantom-vs-tensor projections);
+    # a tp=1 pure-replication deployment has no collectives at all and
+    # would trivially win the latency-dominated energy model — it is
+    # still reachable explicitly via ``--route fixed --tp 1``.
+    for tp in (2, 4, 8, 16):
+        if tp > devices or cfg.d_model % tp:
+            continue
+        if cfg.num_heads and cfg.num_heads % tp:
+            continue
+        for slots in slots_options:
+            if devices % tp == 0:
+                out.append(ServeConfig(arch, "tensor", devices // tp, tp,
+                                       slots, max_len, page_size))
+            # phantom needs >= 2 model ranks and ffn divisibility
+            if tp >= 2 and cfg.d_ff and cfg.d_ff % tp == 0:
+                for dp in (1, 2):
+                    if dp * tp <= devices:
+                        out.append(ServeConfig(arch, "phantom", dp, tp,
+                                               slots, max_len, page_size))
+    # dedupe (tensor tp==devices appears once per slots already)
+    seen, uniq = set(), []
+    for sc in out:
+        if sc.name not in seen:
+            seen.add(sc.name)
+            uniq.append(sc)
+    return uniq
+
+
+# ---------------------------------------------------------------------------
+# pricing
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PricedConfig:
+    config: ServeConfig
+    j_per_token: float
+    prefill_energy_j: float       # per prefill step (slots prompts)
+    decode_energy_j: float        # per decode step (slots tokens)
+    ttft_s: float                 # modeled prefill step time
+    tpot_s: float                 # modeled decode step time
+    meets_slo: bool
+    notes: dict = field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return {"config": self.config.as_dict(),
+                "j_per_token": self.j_per_token,
+                "prefill_energy_j": self.prefill_energy_j,
+                "decode_energy_j": self.decode_energy_j,
+                "ttft_s": self.ttft_s, "tpot_s": self.tpot_s,
+                "meets_slo": self.meets_slo, "notes": self.notes}
+
+
+def trace_stats(trace: Sequence[TraceItem], page_size: int = 16) -> dict:
+    """Mean padded prompt length / output length the pricing uses."""
+    pads = [bucket_of(t.prompt_len, page_size) for t in trace]
+    outs = [t.max_new_tokens for t in trace]
+    return {"n": len(trace),
+            "mean_padded_prompt": float(np.mean(pads)) if pads else 0.0,
+            "mean_new_tokens": float(np.mean(outs)) if outs else 1.0,
+            "max_padded_prompt": max(pads) if pads else 0}
+
+
+def serve_predictions(sc: ServeConfig, calib: Calibration,
+                      stats: dict) -> Tuple[dict, dict]:
+    """(prefill, decode) ``serve_step_prediction`` blocks for one
+    candidate under a trace's length statistics."""
+    from repro.telemetry.predict import serve_step_prediction
+    cfg = sc.model_config()
+    a_s, b_s, _nu = calib.scales_for(sc.strategy_kind)
+    S = max(stats["mean_padded_prompt"], 1.0)
+    G = max(stats["mean_new_tokens"], 1.0)
+    del G  # step counts, not per-step shape, carry the output length
+    # ctx_tokens follows EXECUTED attention windows (what the energy
+    # model must price and the lowered HLO counts): blockwise attention
+    # computes the full masked window — S keys per prefill query token,
+    # the whole max_len cache per decode token
+    pre = serve_step_prediction(
+        cfg, sc.tp, int(round(sc.slots * S)), phase="prefill",
+        ctx_tokens=S, sequences=sc.slots, dp=sc.dp,
+        fits=calib.collective_fits, alpha_scale=a_s, beta_scale=b_s)
+    dec = serve_step_prediction(
+        cfg, sc.tp, sc.slots, phase="decode",
+        ctx_tokens=float(sc.max_len), dp=sc.dp,
+        fits=calib.collective_fits, alpha_scale=a_s, beta_scale=b_s)
+    return pre, dec
+
+
+def price_config(sc: ServeConfig, calib: Calibration, stats: dict, *,
+                 slo_ms: float = 0.0) -> PricedConfig:
+    """Predicted joules-per-generated-token + modeled step times."""
+    pre, dec = serve_predictions(sc, calib, stats)
+    G = max(stats["mean_new_tokens"], 1.0)
+    # E = p*(A*alpha+B*beta) in the prediction is per MODEL group; a
+    # dp-replicated mesh runs dp copies of the step for dp x the rows,
+    # so per-step energy scales by dp while tokens/step scales the same
+    # way — j/token is dp-invariant, total power is not.  Price per
+    # GLOBAL step (all dp groups) over global tokens.
+    e_pre = pre["energy_j_per_iter"] * sc.dp
+    e_dec = dec["energy_j_per_iter"] * sc.dp
+    tokens_per_step = sc.slots * sc.dp
+    j_tok = (e_pre / tokens_per_step + G * e_dec / tokens_per_step) / G
+    ttft = pre["alpha_s"] + pre["beta_s"]
+    tpot = dec["alpha_s"] + dec["beta_s"]
+    meets = (not slo_ms) or (ttft * 1e3 <= slo_ms and tpot * 1e3 <= slo_ms)
+    return PricedConfig(
+        config=sc, j_per_token=j_tok, prefill_energy_j=e_pre,
+        decode_energy_j=e_dec, ttft_s=ttft, tpot_s=tpot, meets_slo=meets,
+        notes={"alpha_scale": pre["alpha_scale"],
+               "beta_scale": pre["beta_scale"],
+               "calibration": calib.source,
+               "mean_padded_prompt": stats["mean_padded_prompt"],
+               "mean_new_tokens": stats["mean_new_tokens"]})
+
+
+def route(candidates: Sequence[ServeConfig], calib: Calibration,
+          trace: Sequence[TraceItem], *, slo_ms: float = 0.0
+          ) -> Tuple[PricedConfig, List[PricedConfig]]:
+    """Price every candidate and pick the cheapest j/token among those
+    meeting the (modeled) SLO; with no feasible candidate, fall back to
+    the lowest-latency one so serving still comes up."""
+    if not candidates:
+        raise ValueError("no serve candidates to route over")
+    stats = trace_stats(trace, candidates[0].page_size)
+    priced = [price_config(sc, calib, stats, slo_ms=slo_ms)
+              for sc in candidates]
+    # ties in j/token (dp-invariant pricing) go to the SMALLER mesh —
+    # fewer devices at the same joules-per-token is strictly better
+    priced.sort(key=lambda pc: (pc.j_per_token, pc.config.devices))
+    feasible = [pc for pc in priced if pc.meets_slo]
+    winner = feasible[0] if feasible else \
+        min(priced, key=lambda pc: pc.ttft_s)
+    return winner, priced
+
+
+# ---------------------------------------------------------------------------
+# routed execution
+# ---------------------------------------------------------------------------
+
+def run_config(sc: ServeConfig, trace: Sequence[TraceItem], *,
+               ledger=None, calib: Optional[Calibration] = None,
+               seed: int = 0, slo_ms: float = 0.0,
+               sampling=None, mesh=None, order: str = "fcfs",
+               max_steps: int = 100_000) -> dict:
+    """Stand up the engine for ``sc``, replay ``trace`` through it, and
+    record joined measured-vs-predicted serve rows to ``ledger``.
+
+    Returns ``{"slo": <SLO report>, "measured": ..., "predicted": ...,
+    "energy_ratio": ..., "j_per_token_measured": ...}``."""
+    import jax
+    from repro.launch.mesh import make_local_mesh
+    from repro.models.model import model_decls
+    from repro.parallel.axes import MeshAxes
+    from repro.parallel.params import materialize
+    from repro.serve.engine import ServeEngine
+    from repro.telemetry import analyze_lowerable, measured_energy_fields
+
+    calib = calib or Calibration()
+    cfg = sc.model_config()
+    mesh = mesh or make_local_mesh(sc.dp, sc.tp)
+    axes = MeshAxes.from_mesh(mesh)
+    params = materialize(model_decls(cfg, axes), seed)
+    stats = trace_stats(trace, sc.page_size)
+    reqs = trace_requests(trace, cfg.vocab_size, seed=seed,
+                          sampling=sampling)
+
+    eng = ServeEngine(cfg, mesh, params, slots=sc.slots,
+                      max_len=sc.max_len, page_size=sc.page_size,
+                      order=order)
+    eng.warmup(bucket_of(t.prompt_len, sc.page_size) for t in trace)
+    tracker = SLOTracker(slo_ttft_ms=slo_ms)
+    replay(eng, reqs, tracker=tracker, max_steps=max_steps)
+    slo_report = tracker.report()
+    pages = eng.pages.stats()
+
+    # measured compiled-HLO account of the engine's OWN step functions
+    p_sds = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    tok_sds = jax.ShapeDtypeStruct((sc.slots, 1), np.int32)
+    pos_sds = jax.ShapeDtypeStruct((sc.slots,), np.int32)
+    dec_costs = analyze_lowerable(eng.decode_fn, p_sds, eng.cache_sds,
+                                  tok_sds, pos_sds, default_group=sc.tp)
+    S_probe = int(stats["max_padded_prompt"] or sc.page_size)
+    from repro.serve.engine import _add_modality_stubs
+    probe_batch = _add_modality_stubs(
+        cfg, {"tokens": jax.ShapeDtypeStruct((sc.slots, S_probe),
+                                             np.int32)},
+        sc.slots, S_probe)
+    pre_costs = analyze_lowerable(eng.prefill_fn, p_sds, probe_batch,
+                                  default_group=sc.tp)
+
+    measured = {
+        "prefill": measured_energy_fields(pre_costs, sc.tp,
+                                          fits=calib.collective_fits),
+        "decode": measured_energy_fields(dec_costs, sc.tp,
+                                         fits=calib.collective_fits),
+    }
+    # the prediction prices the MEAN padded prompt; the probe lowered
+    # the max bucket — rescale the prediction to the probed shape so
+    # the ratio compares like with like
+    probe_stats = dict(stats, mean_padded_prompt=float(S_probe))
+    pred_pre, pred_dec = serve_predictions(sc, calib, probe_stats)
+    predicted = {"prefill": pred_pre, "decode": pred_dec}
+
+    g_tok = slo_report.get("generated_tokens", 0)
+    e_meas_total = (measured["prefill"]["energy_j_per_iter"] * sc.dp
+                    * eng.prefill_meter.calls
+                    + measured["decode"]["energy_j_per_iter"] * sc.dp
+                    * eng.decode_meter.calls)
+    out = {
+        "config": sc.as_dict(),
+        "slo": slo_report,
+        "pages": pages,
+        "measured": measured,
+        "predicted": predicted,
+        "energy_ratio": {
+            k: measured[k]["energy_j_per_iter"]
+            / predicted[k]["energy_j_per_iter"]
+            for k in ("prefill", "decode")
+            if predicted[k]["energy_j_per_iter"]},
+        "j_per_token_measured": (e_meas_total / g_tok) if g_tok else 0.0,
+        "prefill_steps": eng.prefill_meter.calls,
+        "decode_steps": eng.decode_meter.calls,
+    }
+    if ledger is not None:
+        eng.record_to(ledger, predicted=predicted,
+                      measured_extra=measured,
+                      extra={"config": sc.as_dict(), "slo": slo_report,
+                             "j_per_token_measured":
+                                 out["j_per_token_measured"]})
+    eng.close()
+    return out

@@ -23,6 +23,9 @@ from repro.telemetry.ledger import (SCHEMA, Ledger, LedgerEntry,
 from repro.telemetry.meter import StepMeter, measure
 from repro.telemetry.predict import (event_wire_bytes, events_for,
                                      ffn_step_prediction,
+                                     measured_energy_fields,
+                                     serve_site_strategies,
+                                     serve_step_prediction,
                                      strategy_prediction)
 from repro.telemetry.probe import make_ffn_probe_step, measure_ffn_step
 
@@ -31,6 +34,7 @@ __all__ = [
     "analyze_lowerable", "analyze_lowered", "clear_analysis_cache",
     "compile_lowered", "SCHEMA", "Ledger", "LedgerEntry", "load_report",
     "StepMeter", "measure", "event_wire_bytes", "events_for",
-    "ffn_step_prediction", "strategy_prediction", "make_ffn_probe_step",
-    "measure_ffn_step",
+    "ffn_step_prediction", "measured_energy_fields",
+    "serve_site_strategies", "serve_step_prediction",
+    "strategy_prediction", "make_ffn_probe_step", "measure_ffn_step",
 ]

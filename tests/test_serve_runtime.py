@@ -1,0 +1,396 @@
+"""The serving runtime layers (docs/serving.md): paged KV-cache
+invariants under churn, length-bucketed scheduling, per-request
+sampling, traffic traces / SLO tracking, router pricing — and the
+engine-level guarantee that mixed-length request streams through the
+bucketing scheduler produce IDENTICAL tokens to single-request greedy
+decoding (per-slot isolation)."""
+import numpy as np
+import pytest
+
+from repro.serve.kv_cache import CacheOverflow, PagedKVCache
+from repro.serve.sampling import Sampler, SamplingParams
+from repro.serve.scheduler import Scheduler, bucket_of
+from repro.serve.traffic import SLOTracker, make_trace
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (host-only)
+# ---------------------------------------------------------------------------
+
+def test_paged_cache_alloc_advance_free():
+    pc = PagedKVCache(slots=4, max_len=64, page_size=16)
+    rec = pc.alloc(0, 16)
+    assert rec.pages == 1 and pc.allocated_pages == 1
+    # decode writes cross a page boundary -> one new page
+    assert pc.advance(0, 15) == 0
+    assert pc.advance(0, 16) == 1
+    assert pc.advance(0, 17) == 0
+    pc.check()
+    assert pc.free(0) == 2
+    assert pc.allocated_pages == 0
+    pc.check()
+
+
+def test_paged_cache_admission_and_overflow():
+    pc = PagedKVCache(slots=2, max_len=64, page_size=16)
+    assert pc.can_admit(40, 10)
+    assert not pc.can_admit(60, 10)          # 60+10 > 64
+    assert not pc.can_admit(30, 10, padded_len=60)
+    with pytest.raises(CacheOverflow):
+        pc.alloc(0, 100)
+    pc.alloc(0, 64)
+    with pytest.raises(CacheOverflow):
+        pc.advance(0, 64)                    # past the last frame
+    with pytest.raises(RuntimeError):
+        pc.alloc(0, 16)                      # double-alloc
+
+
+def test_paged_cache_churn_invariants():
+    """Random alloc/advance/free churn holds every invariant at every
+    step and returns to an empty pool."""
+    rng = np.random.RandomState(0)
+    pc = PagedKVCache(slots=8, max_len=128, page_size=16)
+    live = {}
+    for _ in range(500):
+        op = rng.rand()
+        free_slots = [s for s in range(8) if s not in live]
+        if op < 0.4 and free_slots:
+            s = int(rng.choice(free_slots))
+            n = int(rng.randint(1, 100))
+            if pc.pages_for(n) <= pc.frames_per_slot:
+                pc.alloc(s, n)
+                live[s] = n
+        elif op < 0.8 and live:
+            s = int(rng.choice(list(live)))
+            pos = min(live[s] + int(rng.randint(0, 8)), 127)
+            pc.advance(s, pos)
+            live[s] = max(live[s], pos + 1)
+        elif live:
+            s = int(rng.choice(list(live)))
+            pc.free(s)
+            del live[s]
+        pc.check()
+        assert 0.0 <= pc.occupancy() <= 1.0
+        assert 0.0 <= pc.fragmentation() < 1.0 or not live
+    for s in list(live):
+        pc.free(s)
+    pc.check()
+    assert pc.allocated_pages == 0
+    st = pc.stats()
+    assert st["page_allocs"] == st["page_frees"]
+    assert st["requests_admitted"] == st["requests_freed"]
+    assert st["high_water_pages"] <= pc.total_pages
+
+
+# ---------------------------------------------------------------------------
+# scheduler (host-only; uses engine Request lazily to avoid jax import
+# ordering issues — conftest sets the device flag first anyway)
+# ---------------------------------------------------------------------------
+
+def _req(n, **kw):
+    from repro.serve.engine import Request
+    return Request(prompt=np.arange(n, dtype=np.int32), **kw)
+
+
+def test_bucket_of():
+    assert [bucket_of(x, 16) for x in (1, 15, 16, 17, 32, 33)] == \
+        [16, 16, 16, 32, 32, 48]
+
+
+def test_scheduler_groups_share_bucket():
+    sch = Scheduler(bucket=16)
+    reqs = [_req(n) for n in (12, 16, 23, 8, 40)]
+    sch.add(reqs)
+    S, group = sch.next_group(free_slots=4)
+    assert S == 16
+    assert [len(r.prompt) for r in group] == [12, 16, 8]
+    S2, group2 = sch.next_group(free_slots=4)
+    assert S2 == 32 and [len(r.prompt) for r in group2] == [23]
+    S3, group3 = sch.next_group(free_slots=4)
+    assert S3 == 48 and len(group3) == 1
+    assert len(sch) == 0
+
+
+def test_scheduler_edf_order():
+    sch = Scheduler(bucket=16, order="edf")
+    late = _req(10, deadline_ms=5000.0)
+    soon = _req(11, deadline_ms=100.0)
+    none = _req(12)                       # no deadline sorts last
+    sch.add([none, late, soon])
+    _, group = sch.next_group(free_slots=3)
+    assert [len(r.prompt) for r in group] == [11, 10, 12]
+
+
+def test_scheduler_rejects_oversize():
+    pages = PagedKVCache(slots=2, max_len=64, page_size=16)
+    sch = Scheduler(bucket=16, pages=pages)
+    ok = _req(30, max_new_tokens=8)
+    bad = _req(60, max_new_tokens=16)     # 64 padded + 16 > 64
+    rejected = sch.add([ok, bad])
+    assert rejected == [bad] and bad.done and "rejected" in bad.error
+    assert len(sch) == 1
+
+
+def test_scheduler_exact_length_mode():
+    # recurrent families: an unpaddable prompt is REJECTED at admission
+    # (not a session crash), multiple-of-bucket prompts group exactly
+    sch = Scheduler(bucket=16, mixed_lengths=False)
+    bad = _req(12)
+    assert sch.add([bad]) == [bad]
+    assert bad.done and "rejected" in bad.error
+    assert len(sch) == 0
+    sch.add([_req(32), _req(16)])
+    S, group = sch.next_group(free_slots=4)
+    assert S == 32 and len(group) == 1    # exact-length groups only
+
+
+def test_scheduler_interleave_policy():
+    sch = Scheduler(bucket=16, min_free_for_prefill=3)
+    sch.add([_req(16) for _ in range(4)])
+    assert not sch.should_refill(free_slots=2, active_slots=2)
+    assert sch.should_refill(free_slots=3, active_slots=1)
+    # a fully idle engine always refills (no deadlock)
+    assert sch.should_refill(free_slots=1, active_slots=0)
+
+
+# ---------------------------------------------------------------------------
+# sampling (host-only)
+# ---------------------------------------------------------------------------
+
+def test_sampling_greedy_and_vocab_slice():
+    logits = np.arange(12, dtype=np.float32)     # padded vocab 12
+    s = Sampler(SamplingParams(), vocab_size=10)
+    assert s(logits) == 9                        # argmax inside vocab
+
+
+def test_sampling_seeded_deterministic():
+    logits = np.random.RandomState(0).randn(64).astype(np.float32)
+    a = Sampler(SamplingParams(temperature=0.7, seed=3), 64)
+    b = Sampler(SamplingParams(temperature=0.7, seed=3), 64)
+    assert [a(logits) for _ in range(20)] == [b(logits) for _ in range(20)]
+
+
+def test_sampling_topk_topp_support():
+    logits = np.arange(10, dtype=np.float32)
+    s = Sampler(SamplingParams(temperature=1.0, top_k=3, seed=0), 10)
+    draws = {s(logits) for _ in range(300)}
+    assert draws <= {7, 8, 9}
+    sp = Sampler(SamplingParams(temperature=1.0, top_p=0.5, seed=0), 10)
+    draws_p = {sp(logits) for _ in range(300)}
+    assert 9 in draws_p and draws_p <= {8, 9}
+
+
+# ---------------------------------------------------------------------------
+# traffic + SLO (host-only)
+# ---------------------------------------------------------------------------
+
+def test_trace_reproducible_and_kinds():
+    a = make_trace("poisson", n=16, rate_rps=8.0, seed=5)
+    b = make_trace("poisson", n=16, rate_rps=8.0, seed=5)
+    assert a == b
+    assert all(x.arrival_s <= y.arrival_s for x, y in zip(a, a[1:]))
+    burst = make_trace("bursty", n=16, rate_rps=8.0, seed=5)
+    assert burst != a
+    closed = make_trace("closed", n=4, seed=0)
+    assert all(t.arrival_s == 0.0 for t in closed)
+    with pytest.raises(ValueError):
+        make_trace("warp", n=4)
+
+
+def test_slo_tracker_report():
+    from repro.serve.engine import Request
+    tr = SLOTracker(slo_ttft_ms=100.0)
+    for i, (ttft_s, n) in enumerate([(0.05, 4), (0.2, 3)]):
+        r = Request(prompt=np.arange(4, dtype=np.int32), req_id=i)
+        r.arrival_s, r.t_first_s = 0.0, ttft_s
+        r.t_done_s = ttft_s + 0.01 * (n - 1)
+        r.out_tokens = list(range(n))
+        tr.observe(r)
+    rep = tr.report()
+    assert rep["requests"] == 2 and rep["generated_tokens"] == 7
+    assert rep["ttft_ms"]["p50"] == pytest.approx(125.0)
+    assert rep["tpot_ms"]["p50"] == pytest.approx(10.0)
+    assert rep["slo_met_fraction"] == pytest.approx(0.5)
+    assert rep["goodput_tokens"] == 4
+
+
+# ---------------------------------------------------------------------------
+# engine: per-slot isolation + termination + page churn (mesh)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serve_setup(request):
+    from repro.configs.base import get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.models.model import model_decls
+    from repro.parallel.axes import MeshAxes
+    from repro.parallel.params import materialize
+
+    cfg = get_config("chatglm3-6b", smoke=True)
+    mesh = make_local_mesh(2, 4)
+    params = materialize(model_decls(cfg, MeshAxes.from_mesh(mesh)), 1)
+    return cfg, mesh, params
+
+
+def test_engine_mixed_lengths_match_single_request(serve_setup):
+    """Mixed-length streams through the bucketing scheduler produce
+    identical tokens to single-request greedy decoding."""
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg, mesh, params = serve_setup
+    rng = np.random.RandomState(0)
+    lens = [12, 16, 23, 8, 32, 17]
+    prompts = [rng.randint(0, cfg.vocab_size, s).astype(np.int32)
+               for s in lens]
+
+    eng = ServeEngine(cfg, mesh, params, slots=4, max_len=64)
+    reqs = [Request(prompt=p.copy(), max_new_tokens=5) for p in prompts]
+    eng.run(reqs, max_steps=200)
+    assert all(r.done for r in reqs)
+
+    solo_eng = ServeEngine(cfg, mesh, params, slots=4, max_len=64)
+    for p, r in zip(prompts, reqs):
+        solo = Request(prompt=p.copy(), max_new_tokens=5)
+        solo_eng.run([solo], max_steps=100)
+        assert solo.out_tokens == r.out_tokens, \
+            f"len {len(p)}: {solo.out_tokens} != {r.out_tokens}"
+
+    # paged-cache invariants after churn: everything freed
+    for e in (eng, solo_eng):
+        e.pages.check()
+        assert e.pages.allocated_pages == 0
+        st = e.pages.stats()
+        assert st["page_allocs"] == st["page_frees"] > 0
+
+
+def test_engine_rejects_undivisible_page_size(serve_setup):
+    """Bucket-padded prefill lengths must divide the model axis — the
+    invariant the old `S % 16 == 0` assert enforced, now checked at
+    engine construction."""
+    from repro.serve.engine import ServeEngine
+
+    cfg, mesh, params = serve_setup        # tp = 4
+    with pytest.raises(ValueError, match="model-axis"):
+        ServeEngine(cfg, mesh, params, slots=2, max_len=64, page_size=6)
+
+
+def test_engine_eos_and_one_token_at_prefill(serve_setup):
+    """The prefill-produced first token is checked against eos_id, and
+    max_new_tokens=1 requests finish WITHOUT burning a decode step."""
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg, mesh, params = serve_setup
+    rng = np.random.RandomState(3)
+    prompt = rng.randint(0, cfg.vocab_size, 16).astype(np.int32)
+
+    eng = ServeEngine(cfg, mesh, params, slots=2, max_len=64)
+    probe = Request(prompt=prompt.copy(), max_new_tokens=1)
+    eng.run([probe], max_steps=10)
+    assert probe.done and len(probe.out_tokens) == 1
+    assert eng.decode_meter.calls == 0       # no decode step burned
+    first = probe.out_tokens[0]
+
+    r_eos = Request(prompt=prompt.copy(), max_new_tokens=8, eos_id=first)
+    eng.run([r_eos], max_steps=10)
+    assert r_eos.done and r_eos.out_tokens == [first]
+    assert eng.decode_meter.calls == 0       # eos seen at prefill
+
+
+def test_engine_trace_replay_slo(serve_setup):
+    """An open-loop trace replay finishes every request and produces a
+    populated SLO report with page stats."""
+    from repro.serve.engine import ServeEngine
+    from repro.serve.scheduler import bucket_of
+    from repro.serve.traffic import (SLOTracker, make_trace, replay,
+                                     trace_requests)
+
+    cfg, mesh, params = serve_setup
+    trace = make_trace("poisson", n=6, rate_rps=100.0,
+                       prompt_len_range=(4, 30),
+                       new_tokens_range=(2, 5), seed=1)
+    reqs = trace_requests(trace, cfg.vocab_size, seed=1)
+    eng = ServeEngine(cfg, mesh, params, slots=4, max_len=64)
+    eng.warmup(bucket_of(t.prompt_len, 16) for t in trace)
+    tracker = replay(eng, reqs, tracker=SLOTracker(slo_ttft_ms=1e6))
+    rep = tracker.report()
+    assert rep["requests"] == 6
+    assert rep["generated_tokens"] == sum(t.max_new_tokens for t in trace)
+    assert rep["ttft_ms"] and rep["e2e_ms"]
+    assert rep["slo_met_fraction"] == 1.0    # SLO set absurdly high
+    assert eng.pages.allocated_pages == 0
+
+
+def test_engine_sampled_serving_reproducible(serve_setup):
+    """Per-request seeded sampling is schedule-independent: the same
+    request seed yields the same tokens whether served alone or with
+    batch-mates."""
+    from repro.serve.engine import Request, ServeEngine
+    from repro.serve.sampling import SamplingParams
+
+    cfg, mesh, params = serve_setup
+    rng = np.random.RandomState(7)
+    prompt = rng.randint(0, cfg.vocab_size, 16).astype(np.int32)
+    sp = SamplingParams(temperature=0.9, top_k=50, seed=11)
+
+    eng = ServeEngine(cfg, mesh, params, slots=4, max_len=64)
+    target = Request(prompt=prompt.copy(), max_new_tokens=6, sampling=sp)
+    others = [Request(prompt=rng.randint(0, cfg.vocab_size,
+                                         16).astype(np.int32),
+                      max_new_tokens=6) for _ in range(3)]
+    eng.run([target] + others, max_steps=100)
+
+    solo = Request(prompt=prompt.copy(), max_new_tokens=6, sampling=sp)
+    eng2 = ServeEngine(cfg, mesh, params, slots=4, max_len=64)
+    eng2.run([solo], max_steps=100)
+    assert solo.out_tokens == target.out_tokens
+
+
+# ---------------------------------------------------------------------------
+# router pricing (host-only)
+# ---------------------------------------------------------------------------
+
+def test_router_pricing_and_route():
+    from repro.planner import paper_default_calibration
+    from repro.serve.router import candidate_configs, route
+
+    calib = paper_default_calibration()
+    trace = make_trace("poisson", n=8, rate_rps=4.0, seed=0)
+    cands = candidate_configs("chatglm3-6b", 8, slots_options=(4,))
+    assert any(c.impl == "phantom" for c in cands)
+    assert any(c.impl == "tensor" for c in cands)
+    assert all(c.tp >= 2 for c in cands)
+    # tensor candidates use the full device budget; phantom may downsize
+    assert all(c.devices == 8 for c in cands if c.impl == "tensor")
+    assert any(c.devices < 8 for c in cands if c.impl == "phantom")
+
+    winner, priced = route(cands, calib, trace, slo_ms=1e6)
+    assert winner.meets_slo
+    assert winner.j_per_token == min(pc.j_per_token for pc in priced)
+    assert all(pc.j_per_token > 0 for pc in priced)
+    # an impossible SLO falls back to the lowest-latency candidate
+    w2, p2 = route(cands, calib, trace, slo_ms=1e-9)
+    assert not w2.meets_slo
+    assert w2.ttft_s == min(pc.ttft_s for pc in p2)
+
+
+def test_serve_calibration_loading(tmp_path):
+    """planner.load_calibration: PLAN_report.json constants win, then
+    a ledger fit, then paper defaults."""
+    import json
+
+    from repro.planner import Calibration, load_calibration
+    from repro.planner.calibration import PAPER_SOURCE
+
+    calib = Calibration(alpha_scale={"phantom": 1.25},
+                        source="ledger-fit")
+    plan = tmp_path / "PLAN_report.json"
+    plan.write_text(json.dumps({"schema": "plan-report/v1",
+                                "calibration": calib.as_dict()}))
+    got = load_calibration(plan_report_path=str(plan))
+    assert got.alpha_scale == {"phantom": 1.25}
+    assert got.scales_for("phantom")[0] == 1.25
+    # lowrank inherits phantom's fit through from_dict round-trip
+    assert got.scales_for("lowrank_distill")[0] == 1.25
+
+    got2 = load_calibration(plan_report_path=str(tmp_path / "nope.json"))
+    assert got2.source == PAPER_SOURCE
