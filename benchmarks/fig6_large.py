@@ -14,7 +14,7 @@ from benchmarks.common import emit
 
 
 def run():
-    from repro.core.energy import TPU_PEAK_FLOPS, pp_costs, tp_costs
+    from repro.core.energy import TPU_PEAK_FLOPS, phantom_costs, tp_costs
 
     batch = 64
     L = 2
@@ -22,7 +22,7 @@ def run():
     for n in (131_072, 262_144):
         for p in (32, 64, 128, 256):
             a_t, b_t = tp_costs(n, p, L, batch, TPU_PEAK_FLOPS)
-            a_p, b_p = pp_costs(n, p, L, k, batch, TPU_PEAK_FLOPS)
+            a_p, b_p = phantom_costs(n, p, L, k, batch, TPU_PEAK_FLOPS)
             # memory footprint per rank (fp32 params + adam m,v)
             tp_bytes = (n * n / p) * 4 * 3 * L
             pp_bytes = ((n / p) ** 2 + k * n / p + p * k * n / p) \

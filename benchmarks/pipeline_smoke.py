@@ -1,0 +1,75 @@
+"""Pipeline smoke: metered 1F1B FFN steps on the pp=2 × dp=2 × tp=2 mesh.
+
+For tensor and phantom per-stage strategies this compiles the pipelined
+FFN probe (wavefront ticks AND layers unrolled, input grads kept — the
+same exactness arguments as the flat probe), reads the MEASURED
+per-device flops / collective wire bytes / stage-boundary
+collective-permute wire bytes from the lowered HLO, runs a few metered
+executions, and joins against the PREDICTED executed-SPMD account from
+``telemetry.pipeline_ffn_step_prediction`` — the same
+``PipelineSchedule.p2p_events`` pricing the planner uses, at the
+executed tick count.
+
+The suite (and the CI ``pipeline-smoke`` job, re-checking from
+``BENCH_report.json``) asserts the measured/predicted STAGE-BOUNDARY
+wire-byte ratio lands in [0.9, 1.1]: the p2p energy term prices exactly
+the ppermutes the compiler emitted.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+
+BOUNDARY_BAND = (0.9, 1.1)
+
+
+def run(steps: int = 3):
+    from repro.configs.base import (ModelConfig, PhantomConfig,
+                                    PipelineConfig)
+    from repro.launch.mesh import make_local_mesh
+    from repro.parallel.axes import MeshAxes
+    from repro.telemetry import measure_ffn_pipeline_step
+
+    mesh = make_local_mesh(2, 2, 2)          # (pipe=2, data=2, model=2)
+    axes = MeshAxes.from_mesh(mesh)
+    if axes.pp != 2:
+        raise RuntimeError(f"needs an 8-device host for the pp=2 mesh, "
+                           f"got pp={axes.pp}")
+    n, L, batch, k, M = 256, 4, 32, 8, 4
+    out_of_band = []
+    for impl, strat in (("dense", "tensor_col"), ("phantom", "phantom")):
+        cfg = ModelConfig(name=f"pipe{n}-{impl}", family="ffn",
+                          num_layers=L, d_model=n, ffn_width=n,
+                          ffn_depth=L, ffn_impl=impl, mlp="relu",
+                          phantom=PhantomConfig(k=k),
+                          pipeline=PipelineConfig(stages=axes.pp),
+                          microbatches=M)
+        measured, predicted = measure_ffn_pipeline_step(cfg, mesh, batch,
+                                                        steps=steps)
+        rf = (measured["flops_per_device"]
+              / predicted["flops_per_device"])
+        rw = (measured["collective_wire_bytes_per_device"]
+              / predicted["collective_wire_bytes_per_device"])
+        rb = (measured["boundary_wire_bytes_per_device"]
+              / predicted["boundary_wire_bytes_per_device"])
+        emit(f"pipeline_smoke_{strat}",
+             measured.get("wall_us_median", 0.0),
+             f"n={n};L={L};k={k};pp={axes.pp};mb={M};"
+             f"flops_ratio={rf:.3f};wire_ratio={rw:.4f};"
+             f"boundary_wire_ratio={rb:.4f}",
+             kind="train", arch=cfg.name, impl=strat, p=axes.tp,
+             measured=measured, predicted=predicted,
+             extra={"n": n, "L": L, "k": k, "batch": batch,
+                    "pp": axes.pp, "dp": axes.dp, "microbatches": M,
+                    "ticks": predicted["ticks"],
+                    "bubble_fraction": predicted["bubble_fraction"],
+                    "boundary_wire_ratio": rb, "steps": steps})
+        if not (BOUNDARY_BAND[0] <= rb <= BOUNDARY_BAND[1]):
+            out_of_band.append((strat, rb))
+    if out_of_band:
+        raise RuntimeError(
+            f"stage-boundary wire ratio outside {BOUNDARY_BAND}: "
+            f"{out_of_band}")
+
+
+if __name__ == "__main__":
+    run()

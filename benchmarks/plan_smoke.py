@@ -41,6 +41,10 @@ def run(devices: int = 8):
     frontier = report["frontier"]
     if not frontier:
         raise RuntimeError("planner produced an EMPTY Pareto frontier")
+    if not any(e["plan"].get("pp", 1) > 1 for e in frontier):
+        raise RuntimeError(
+            "no pipeline-parallel (pp>1) candidate on the Pareto "
+            f"frontier: {[e['plan']['name'] for e in frontier]}")
     comp = report.get("comparison") or {}
     best = report["winner"]
     emit("plan_smoke_frontier", 0.0,

@@ -29,6 +29,8 @@ SUITES = {
                   "on this host's mesh",
     "train_smoke": "metered TP-vs-phantom FFN step "
                    "(measured/predicted ledger join)",
+    "pipeline_smoke": "metered 1F1B pipelined FFN step on the pp=2 mesh "
+                      "(stage-boundary wire-byte join)",
     "plan_smoke": "energy-aware planner end-to-end: calibrate, search, "
                   "iso-loss frontier -> PLAN_report.json",
     "serve_bench": "serving runtime: fixed trace through tensor + "
@@ -53,11 +55,13 @@ def main(argv=None) -> int:
     if "--list" in names or "-l" in names:
         return list_suites()
     from benchmarks import (comm_model, common, fig5_comm, fig5_exec,
-                            fig6_large, plan_smoke, roofline, serve_bench,
-                            table1_energy, train_smoke)
+                            fig6_large, pipeline_smoke, plan_smoke,
+                            roofline, serve_bench, table1_energy,
+                            train_smoke)
     suites = {
         "comm_model": comm_model.run,
         "train_smoke": train_smoke.run,
+        "pipeline_smoke": pipeline_smoke.run,
         "plan_smoke": plan_smoke.run,
         "serve_bench": serve_bench.run,
         "fig5_comm": fig5_comm.run,

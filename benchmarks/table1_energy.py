@@ -19,7 +19,7 @@ def run():
     from repro.configs.base import ModelConfig, PhantomConfig
     from repro.core.energy import (FRONTIER_A_W, FRONTIER_B_W,
                                    TPU_PEAK_FLOPS, energy_to_loss,
-                                   pp_costs, tp_costs)
+                                   phantom_costs, tp_costs)
     from repro.core.ffn import (ffn_model_params, init_ffn,
                                 make_ffn_train_step)
     from repro.data.synthetic import TeacherDataset
@@ -78,7 +78,7 @@ def run():
     n_p, L_p, batch_p = 16_384, 2, 64
     for p, k in [(8, 16), (16, 6), (32, 4), (64, 2), (128, 2), (256, 4)]:
         a_t, b_t = tp_costs(n_p, p, L_p, batch_p, TPU_PEAK_FLOPS)
-        a_p, b_p = pp_costs(n_p, p, L_p, k, batch_p, TPU_PEAK_FLOPS)
+        a_p, b_p = phantom_costs(n_p, p, L_p, k, batch_p, TPU_PEAK_FLOPS)
         # iterations scale with the measured small-scale ratio (PP trains
         # in fewer iterations because the model is smaller — paper
         # Table I; reproduced by the measured runs above)

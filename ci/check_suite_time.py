@@ -1,0 +1,35 @@
+#!/usr/bin/env python3
+"""Guard the tier-1 suite's wall time against regressions.
+
+Usage: check_suite_time.py <measured_seconds_file> <baseline_file>
+
+The baseline file holds the pre-PR wall seconds (first token; the rest
+of the line is free-form provenance).  The run fails when the measured
+time exceeds baseline * 1.25 — the budget test-suite satellites must
+stay inside.  Override the factor with SUITE_TIME_FACTOR when a CI
+runner class changes.
+"""
+import os
+import sys
+
+
+def main() -> int:
+    measured = float(open(sys.argv[1]).read().strip())
+    baseline = float(open(sys.argv[2]).read().split()[0])
+    factor = float(os.environ.get("SUITE_TIME_FACTOR", "1.25"))
+    limit = baseline * factor
+    print(f"tier-1 wall time: {measured:.0f}s "
+          f"(baseline {baseline:.0f}s, limit {limit:.0f}s = "
+          f"baseline x {factor})")
+    if measured > limit:
+        print(f"FAIL: suite regressed "
+              f"{measured / baseline - 1.0:+.0%} over the recorded "
+              f"baseline; speed the tests up or re-baseline "
+              f"ci/tier1_baseline.txt with justification",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, PhantomConfig
 from repro.core.energy import (FRONTIER_A_W, FRONTIER_B_W, TPU_PEAK_FLOPS,
-                               energy_to_loss, pp_costs, tp_costs)
+                               energy_to_loss, phantom_costs, tp_costs)
 from repro.core.ffn import ffn_model_params, init_ffn, make_ffn_train_step
 from repro.data.synthetic import TeacherDataset
 from repro.launch.mesh import make_local_mesh
@@ -68,7 +68,7 @@ def main():
           f"{nu_pp} iters (final {l_pp:.4f})")
 
     a_t, b_t = tp_costs(args.n, p, args.L, args.batch, TPU_PEAK_FLOPS)
-    a_p, b_p = pp_costs(args.n, p, args.L, args.k, args.batch,
+    a_p, b_p = phantom_costs(args.n, p, args.L, args.k, args.batch,
                         TPU_PEAK_FLOPS)
     E_tp = energy_to_loss(a_t, b_t, p, nu_tp, FRONTIER_A_W, FRONTIER_B_W)
     E_pp = energy_to_loss(a_p, b_p, p, nu_pp, FRONTIER_A_W, FRONTIER_B_W)

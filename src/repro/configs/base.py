@@ -63,6 +63,41 @@ class PhantomConfig:
     # ring:     ppermute ring with overlapped partial decompress GEMMs
 
 
+@dataclass(frozen=True)
+class PipelineConfig:
+    """Layer-to-stage partitioning for pipeline-parallel (pp) training.
+
+    ``stages`` is a MODEL property (how the layer stack is cut), the mesh's
+    ``pipe`` axis is the resource it maps onto: a config with S stages runs
+    1F1B on a pp=S mesh, or sequentially (stage by stage, per microbatch)
+    on a pp=1 mesh — both compute the identical function, which is what
+    the equivalence suite pins.  ``stage_specs`` optionally gives each
+    stage its own ``ProjectionSpec`` (tensor or phantom per stage, the
+    paper-FFN subject); empty means every stage uses the site's spec.
+    """
+    stages: int = 1
+    stage_specs: tuple = ()          # per-stage ProjectionSpec overrides
+
+    def __post_init__(self):
+        if self.stages < 1:
+            raise ValueError(f"pipeline stages must be >= 1, "
+                             f"got {self.stages}")
+        if self.stage_specs and len(self.stage_specs) != self.stages:
+            raise ValueError(
+                f"stage_specs has {len(self.stage_specs)} entries for "
+                f"{self.stages} stages")
+        if self.stages == 1 and self.stage_specs:
+            raise ValueError(
+                "stage_specs requires stages > 1 — a single-stage config "
+                "takes its strategy from the projection site spec")
+
+    @property
+    def mixed(self) -> bool:
+        """True when stages run DIFFERENT strategies (per-stage param
+        subtrees + runtime dispatch instead of one pipe-sharded stack)."""
+        return bool(self.stage_specs) and len(set(self.stage_specs)) > 1
+
+
 # ---------------------------------------------------------------------------
 # projection strategy selection (the ProjectionStrategy API's config side)
 # ---------------------------------------------------------------------------
@@ -176,6 +211,8 @@ class ModelConfig:
     phantom: PhantomConfig = field(default_factory=PhantomConfig)
     # per-site strategy selection (wins over the legacy shim when set)
     projections: ProjectionMap = field(default_factory=ProjectionMap)
+    # pipeline-parallel layer-to-stage partitioning (pp mesh axis)
+    pipeline: PipelineConfig = field(default_factory=PipelineConfig)
     attn_shard: str = "auto"        # auto | head | ring
     # decode-time: model axis factors into (gcd(kv,p) kv-groups x seq chunks)
 
@@ -237,6 +274,18 @@ class ModelConfig:
         if site in _PROJ_LEGACY_ATTN_SITES and pp.apply_attn_proj:
             return ph
         return ProjectionSpec()
+
+    def stage_projection_spec(self, stage: int,
+                              site: str = "ffn_layer") -> ProjectionSpec:
+        """The ProjectionSpec governing `site` on pipeline stage `stage`
+        (per-stage override when ``pipeline.stage_specs`` is set, else the
+        site's spec)."""
+        if self.pipeline.stage_specs:
+            spec = self.pipeline.stage_specs[stage]
+            if spec.kind == "tensor":
+                spec = dataclasses.replace(spec, kind=PROJECTION_SITES[site])
+            return spec
+        return self.projection_spec(site)
 
     def uses_phantom_sites(self, sites=None) -> bool:
         """True if any (given) projection site resolves to a phantom-family

@@ -21,12 +21,19 @@ FRONTIER_A_W = 560.0
 FRONTIER_B_W = 90.0
 
 # Paper Table III: comm_time(m, p) = c1*log2 p + c2*m [+ c3~0], microseconds,
-# m in floats (4 bytes).
+# m in floats (4 bytes).  ``collective_permute`` is the point-to-point
+# stage-boundary transfer of pipeline parallelism — a SINGLE hop, so its
+# c1 is charged once instead of log2(p) times (``comm_time_us`` special-
+# cases it); the paper has no p2p fit, so it is priced with the broadcast
+# constants (the closest latency/byte-slope shape Table III offers).
+P2P_COLLECTIVES = ("collective_permute", "p2p")
+
 PAPER_COLLECTIVE_FITS = {
     "broadcast":      (35.5, 1.12e-3),
     "all_reduce":     (33.4, 2.56e-3),
     "all_gather":     (149.94, 2.07e-3),
     "reduce_scatter": (145.52, 2.40e-3),
+    "collective_permute": (35.5, 1.12e-3),
 }
 
 # TPU v5e (roofline constants, DESIGN.md §2)
@@ -52,13 +59,25 @@ def tpu_collective_fits(hop_latency_us: float = 1.0) -> dict:
         "all_gather":     (hop_latency_us, c2),
         "reduce_scatter": (hop_latency_us, c2),
         "all_reduce":     (hop_latency_us, 2.0 * c2),
+        "collective_permute": (hop_latency_us, c2),
     }
 
 
 def comm_time_us(collective: str, m_floats: float, p: int,
                  fits=None) -> float:
-    """Paper Eqn. 26 with Table III constants (returns microseconds)."""
-    c1, c2 = (fits or PAPER_COLLECTIVE_FITS)[collective]
+    """Paper Eqn. 26 with Table III constants (returns microseconds).
+
+    Point-to-point transfers (``collective_permute`` — pipeline stage
+    boundaries) are a single neighbor hop: c1 + c2*m, with no log2(p)
+    latency term (``p`` only gates the degenerate single-rank case).
+    """
+    table = fits or PAPER_COLLECTIVE_FITS
+    if collective in P2P_COLLECTIVES:
+        if p <= 1:
+            return 0.0
+        c1, c2 = table["collective_permute"]
+        return c1 + c2 * m_floats
+    c1, c2 = table[collective]
     if p <= 1:
         return 0.0
     return c1 * math.log2(p) + c2 * m_floats
@@ -110,8 +129,8 @@ def tp_costs(n: int, p: int, L: int, batch: int, peak_flops: float,
     return costs_from_strategies([st], p, L, batch, peak_flops, fits)
 
 
-def pp_costs(n: int, p: int, L: int, k: int, batch: int, peak_flops: float,
-             fits=None):
+def phantom_costs(n: int, p: int, L: int, k: int, batch: int,
+                  peak_flops: float, fits=None):
     """(alpha_sec, beta_sec) per iteration for phantom-parallel training:
     sums the ``phantom`` strategy's account (historically 6*((n/p)^2 +
     k*n)*batch flops per rank + AG/RS of k*batch ghost floats per layer).
@@ -121,6 +140,30 @@ def pp_costs(n: int, p: int, L: int, k: int, batch: int, peak_flops: float,
     st = make_strategy(ProjectionSpec(kind="phantom", k=k), n, n, p,
                        bias=True)
     return costs_from_strategies([st], p, L, batch, peak_flops, fits)
+
+
+def pp_costs(n: int, p: int, L: int, k: int, batch: int, peak_flops: float,
+             fits=None):
+    """DEPRECATED alias of ``phantom_costs``.  Historically "pp" meant
+    *phantom*-parallel; since the pipeline-parallel (pp) mesh axis landed
+    the name collides, so the phantom cost model is ``phantom_costs`` and
+    this shim warns."""
+    import warnings
+    warnings.warn("pp_costs is deprecated (pp now means PIPELINE "
+                  "parallelism); use phantom_costs", DeprecationWarning,
+                  stacklevel=2)
+    return phantom_costs(n, p, L, k, batch, peak_flops, fits)
+
+
+def pipeline_p2p_time_us(schedule, m_floats: float, fits=None, *,
+                         executed: bool = False) -> float:
+    """Per-device microseconds of stage-boundary p2p traffic for one
+    iteration of a ``PipelineSchedule`` — each event priced as a single
+    ``collective_permute`` hop of ``m_floats`` (the carried activation /
+    activation-grad shard)."""
+    return sum(comm_time_us(ev.collective, ev.m_floats, schedule.stages,
+                            fits)
+               for ev in schedule.p2p_events(m_floats, executed=executed))
 
 
 def energy_per_iteration(alpha_s: float, beta_s: float, p: int,

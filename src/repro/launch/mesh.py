@@ -22,18 +22,44 @@ def _make_mesh(shape, axes):
                          axis_types=(AxisType.Auto,) * len(axes))
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def make_production_mesh(*, multi_pod: bool = False, pp: int = 1):
+    """dp×tp (×pod) production mesh, optionally with a leading pipeline
+    axis.  Pipeline stages are the OUTERMOST axis: stage-boundary traffic
+    is the lowest-volume communication, so it gets the slowest links.
+    Stages come out of the leading (pod/data) dimension, which pp must
+    divide — silently shrinking a 256-chip pod would idle paid-for
+    devices."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if pp > 1:
+        if shape[0] % pp:
+            raise ValueError(
+                f"pp={pp} does not divide the leading "
+                f"{axes[0]}={shape[0]} axis of the production mesh")
+        shape = (pp, shape[0] // pp) + shape[1:]
+        axes = ("pipe",) + axes
     return _make_mesh(shape, axes)
 
 
-def make_local_mesh(dp: int = 2, tp: int = 4):
-    """Small mesh over host devices (tests/benches/examples)."""
+def make_local_mesh(dp: int = 2, tp: int = 4, pp: int = 1):
+    """Small mesh over host devices (tests/benches/examples).
+
+    ``pp > 1`` adds a leading ``pipe`` axis (pipeline stages); meshes
+    without one behave exactly as before (pp=1).  dp then tp shrink to
+    fit the host (the historical contract); pp is a model property
+    (stage count) and is never silently changed — too many stages for
+    the host raises.
+    """
     n = len(jax.devices())
-    if dp * tp > n:
-        dp = max(1, n // tp)
-        if dp * tp > n:
-            tp = n
+    pp = max(pp, 1)
+    if pp > n:
+        raise ValueError(f"pp={pp} pipeline stages need at least pp "
+                         f"devices; host has {n}")
+    if dp * tp * pp > n:
+        dp = max(1, n // (tp * pp))
+        if dp * tp * pp > n:
+            tp = max(1, n // pp)
             dp = 1
+    if pp > 1:
+        return _make_mesh((pp, dp, tp), ("pipe", "data", "model"))
     return _make_mesh((dp, tp), ("data", "model"))

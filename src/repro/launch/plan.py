@@ -41,6 +41,9 @@ def build_parser():
     ap.add_argument("--strategies", default="tensor_col,phantom")
     ap.add_argument("--microbatches", default="1",
                     help="comma-separated gradient-accumulation options")
+    ap.add_argument("--pps", default="1,2",
+                    help="comma-separated pipeline-stage counts to "
+                         "search (1 = no pipeline axis)")
     ap.add_argument("--hbm-gb", type=float, default=16.0,
                     help="per-device HBM budget (TPU v5e default)")
     ap.add_argument("--min-throughput", type=float, default=0.0,
@@ -106,7 +109,7 @@ def plan(args, ledger=None, calib_rows=None) -> dict:
     candidates = enumerate_plans(
         args.devices, width=args.width, depth=args.depth,
         batch=args.batch, strategies=strategies, ks=ks,
-        microbatch_options=mbs)
+        microbatch_options=mbs, pps=_csv_ints(args.pps) or (1,))
     feasible, rejected = filter_feasible(candidates, constraints)
     print(f"# {len(candidates)} candidates, {len(feasible)} feasible, "
           f"{len(rejected)} rejected")
@@ -162,7 +165,7 @@ def plan(args, ledger=None, calib_rows=None) -> dict:
                 if id(s) in checked:
                     continue
                 checked.add(id(s))
-                key = (s.plan.dp, s.plan.tp)
+                key = (s.plan.dp, s.plan.tp, s.plan.pp)
                 if key not in mesh_cache:
                     mesh_cache[key] = make_local_mesh(*key)
                 got = compiled_hbm_bytes(s.plan, mesh_cache[key])

@@ -45,16 +45,16 @@ def _apply_plan(args, cfg):
     if not winner:
         raise ValueError(f"{path}: empty frontier, no winning plan")
     p = winner["plan"]
-    budget = args.dp * args.tp
+    budget = args.dp * args.tp * max(args.pp, 1)
     if p["devices"] > budget:
         # the XLA host device count was already pinned from --dp/--tp;
         # silently clamping the winner's mesh would train a different
         # configuration than the one we just announced
         raise ValueError(
             f"winning plan {p['name']} needs {p['devices']} devices but "
-            f"--dp {args.dp} x --tp {args.tp} only provisioned {budget}; "
-            f"re-run with --dp/--tp covering the plan's mesh "
-            f"({p['dp']}x{p['tp']})")
+            f"--dp {args.dp} x --tp {args.tp} x --pp {args.pp} only "
+            f"provisioned {budget}; re-run with --dp/--tp/--pp covering "
+            f"the plan's mesh ({p['dp']}x{p['tp']}x{p.get('pp', 1)}pp)")
     spec = p.get("projection_spec", {})
     kind = spec.get("kind", p.get("strategy", "tensor"))
     if kind in PHANTOM_KINDS:
@@ -70,9 +70,11 @@ def _apply_plan(args, cfg):
         default = ProjectionSpec(kind="tensor")
         applied = f"{kind} -> site-natural dense sharding"
     cfg = cfg.replace(projections=ProjectionMap(default=default))
+    pp = int(p.get("pp", 1))
     print(f"[plan] applying winner {p['name']}: projections default="
-          f"{applied}, mesh {p['dp']}x{p['tp']}")
-    return cfg, p["dp"], p["tp"]
+          f"{applied}, mesh {p['dp']}x{p['tp']}"
+          + (f"x{pp}pp" if pp > 1 else ""))
+    return cfg, p["dp"], p["tp"], pp
 
 
 def main():
@@ -87,6 +89,10 @@ def main():
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--dp", type=int, default=2)
     ap.add_argument("--tp", type=int, default=4)
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline stages (adds a 'pipe' mesh axis and "
+                         "runs the 1F1B schedule; layer count must "
+                         "divide by it)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--plan", default=None,
@@ -96,7 +102,7 @@ def main():
     args = ap.parse_args()
 
     if "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
-        ndev = args.dp * args.tp
+        ndev = args.dp * args.tp * max(args.pp, 1)
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={ndev} "
             + os.environ.get("XLA_FLAGS", ""))
@@ -114,15 +120,18 @@ def main():
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.plan:
-        cfg, args.dp, args.tp = _apply_plan(args, cfg)
+        cfg, args.dp, args.tp, args.pp = _apply_plan(args, cfg)
     elif args.impl == "dense":
         from repro.configs.base import ProjectionMap
         cfg = cfg.replace(phantom=dataclasses.replace(
             cfg.phantom, apply_ffn=False, apply_attn_proj=False),
             projections=ProjectionMap())
-    mesh = (make_local_mesh(args.dp, args.tp) if args.smoke
-            else make_production_mesh())
+    mesh = (make_local_mesh(args.dp, args.tp, args.pp) if args.smoke
+            else make_production_mesh(pp=args.pp))
     axes = MeshAxes.from_mesh(mesh)
+    if axes.pp > 1:
+        print(f"[train] 1F1B pipeline: pp={axes.pp} stages x dp={axes.dp} "
+              f"x tp={axes.tp}, {args.microbatches} microbatch(es)")
     _, bspec = input_specs(
         cfg, ShapeConfig("cli", args.seq, args.batch, "train"), axes)
     opt = make_optimizer(cfg.optimizer,

@@ -51,6 +51,10 @@ def model_decls(cfg: ModelConfig, axes: MeshAxes):
          "final_norm": norm_decls(cfg, layout, cfg.d_model),
          "head": head_decls(cfg)}
     if cfg.family == "encdec":
+        if axes.pp > 1:
+            raise NotImplementedError(
+                "pipeline parallelism does not cover encoder-decoder "
+                "stacks yet (two heterogeneous stacks)")
         enc = block_decls(cfg, axes, "attn", "mlp", layout)
         dec = block_decls(cfg, axes, "attn", "mlp", layout, cross=True)
         d["enc_layers"] = stack(enc, cfg.encoder_layers)
@@ -66,7 +70,29 @@ def model_decls(cfg: ModelConfig, axes: MeshAxes):
         sup = {f"sub{i}": block_decls(cfg, axes, mx, ff, layout)
                for i, (mx, ff) in enumerate(plan)}
         d["layers"] = stack(sup, cfg.num_layers // per)
+    if axes.pp > 1:
+        d["layers"] = _pp_shard_layer_decls(d["layers"], axes.pp)
     return _cast_decls(d, cfg.param_dtype)
+
+
+def _pp_shard_layer_decls(layers, pp: int):
+    """[G, ...] scan-stacked layer decls -> [pp, G/pp, ...] with the
+    stage axis sharded over the pipe mesh axis: each pipe rank holds
+    exactly its stage's contiguous slice of (super)layer groups.  The
+    reshape preserves layer order, and ``materialize`` draws the same
+    flat values for either shape, so a pp mesh trains bit-identical
+    parameters to the dp×tp mesh."""
+    import dataclasses
+
+    def reshape(d):
+        G = d.shape[0]
+        if G % pp:
+            raise ValueError(f"{G} layer groups do not divide into "
+                             f"{pp} pipeline stages")
+        return dataclasses.replace(
+            d, shape=(pp, G // pp) + tuple(d.shape[1:]),
+            spec=P(*(("pp",) + tuple(d.spec))))
+    return jax.tree.map(reshape, layers, is_leaf=is_decl)
 
 
 def _layer_decls_unstacked(cfg, axes):
@@ -206,6 +232,69 @@ def forward_train(cfg: ModelConfig, axes: MeshAxes, params, batch):
     h = norm_apply(cfg, layout, params["final_norm"], h, axes)
     sum_loss, n_valid = xent_loss(cfg, layout, params["head"], h,
                                   batch["labels"], axes)
+    return sum_loss, n_valid, aux
+
+
+def forward_train_pipeline(cfg: ModelConfig, axes: MeshAxes, params, batch,
+                           microbatches: int = 1):
+    """1F1B pipelined train forward over the ``pipe`` mesh axis: embed on
+    stage 0, the (super)layer stack partitioned into contiguous
+    per-stage slices (``model_decls`` pipe-shards the scan stack), final
+    norm + head + loss on the last stage, microbatch activations
+    ppermuted across stage boundaries by ``train/pipeline.py``.
+
+    Same contract as ``forward_train`` — returns each rank's UNIQUE
+    (sum_loss, n_valid, aux) contribution: loss/valid counts are masked
+    to the last pipe rank, aux covers only this rank's own stage layers.
+    On a pp=1 mesh it degrades to a sequential microbatched loop (the
+    equivalence reference)."""
+    from repro.train.pipeline import pipeline_run, split_batch_microbatches
+    if cfg.family == "encdec":
+        raise NotImplementedError("no pipeline path for encdec stacks")
+    if cfg.rope == "mrope":
+        raise NotImplementedError(
+            "mrope positions vary per microbatch; the wavefront carries "
+            "activations only")
+    layout = residual_layout(cfg, "train")
+    decls_layer, plan = _layer_decls_unstacked(cfg, axes)
+    M = max(microbatches, 1)
+    mb = split_batch_microbatches(batch, M)
+    B, S = batch["tokens"].shape
+    decls = model_decls_cache(cfg, axes)
+
+    # embed every microbatch up front: stage-0 work — on other ranks the
+    # wavefront's where() leaves these unselected, so they carry no
+    # gradient and the pipe psum in reduce_grads restores embed grads
+    h0 = [_embed(cfg, layout, params,
+                 decls, jax.tree.map(lambda a, i=i: a[i], mb), axes)
+          for i in range(M)]
+    x_mb = jnp.stack(h0)
+    positions = _positions(cfg, {}, B // M, S)
+
+    def stage_fn(h):
+        if axes.pp > 1:
+            stage_params = {"layers": jax.tree.map(lambda a: a[0],
+                                                   params["layers"])}
+        else:
+            stage_params = params
+        h, _, aux = _run_stack(cfg, layout, stage_params, decls_layer,
+                               plan, h, positions, axes, kind="train")
+        return h, aux
+
+    y_mb, aux = pipeline_run(stage_fn, x_mb, axes)
+
+    sum_loss = jnp.float32(0)
+    n_valid = jnp.int32(0)
+    for i in range(M):
+        h = norm_apply(cfg, layout, params["final_norm"], y_mb[i], axes)
+        sl, nv = xent_loss(cfg, layout, params["head"], h,
+                           mb["labels"][i], axes)
+        sum_loss = sum_loss + sl
+        n_valid = n_valid + nv.astype(jnp.int32)
+    if axes.pp > 1:
+        is_last = lax.axis_index(axes.pp_name) == axes.pp - 1
+        sum_loss = jnp.where(is_last, sum_loss, jnp.zeros_like(sum_loss))
+        n_valid = jnp.where(is_last, n_valid, jnp.zeros_like(n_valid))
     return sum_loss, n_valid, aux
 
 
@@ -486,7 +575,7 @@ _DECLS_CACHE = {}
 
 def model_decls_cache(cfg, axes):
     key = (cfg.name, cfg.ffn_impl, cfg.phantom, cfg.projections, axes.tp,
-           axes.dp, cfg.fsdp)
+           axes.dp, axes.pp, cfg.fsdp)
     if key not in _DECLS_CACHE:
         _DECLS_CACHE[key] = model_decls(cfg, axes)
     return _DECLS_CACHE[key]

@@ -6,9 +6,12 @@ Logical axis names used in all ``ParamDecl`` specs and activation specs:
     mesh and ``('data',)`` on the single-pod mesh.
   * ``"tp"`` — tensor/model parallel (also hosts EP and the phantom axis).
     Binds to ``'model'``.
+  * ``"pp"`` — pipeline parallel (layer-to-stage partitioning).  Binds to
+    ``'pipe'`` when the mesh provides one; meshes without a pipe axis are
+    pp=1 and every ``"pp"`` spec entry resolves to replicated.
 
 Everything inside ``shard_map`` uses these via a ``MeshAxes`` handle so the
-same model code runs on any mesh that provides the two logical axes.
+same model code runs on any mesh that provides the logical axes.
 """
 from __future__ import annotations
 
@@ -24,6 +27,8 @@ class MeshAxes:
     dp: int                      # total data-parallel ways (pod * data)
     dp_names: tuple              # ('pod','data') or ('data',)
     tp_name: str = "model"
+    pp: int = 1                  # size of the pipeline axis
+    pp_name: str = "pipe"
 
     @classmethod
     def from_mesh(cls, mesh: Mesh) -> "MeshAxes":
@@ -32,11 +37,17 @@ class MeshAxes:
         dp = 1
         for n in dp_names:
             dp *= mesh.shape[n]
-        return cls(tp=mesh.shape["model"], dp=dp, dp_names=dp_names)
+        pp = mesh.shape["pipe"] if "pipe" in names else 1
+        return cls(tp=mesh.shape["model"], dp=dp, dp_names=dp_names, pp=pp)
 
     @property
     def all_names(self):
-        return self.dp_names + (self.tp_name,)
+        return self.pp_names + self.dp_names + (self.tp_name,)
+
+    @property
+    def pp_names(self) -> tuple:
+        """('pipe',) when the mesh has a pipeline axis, else ()."""
+        return (self.pp_name,) if self.pp > 1 else ()
 
 
 def resolve_spec(spec: P, axes: MeshAxes) -> P:
@@ -50,6 +61,9 @@ def resolve_spec(spec: P, axes: MeshAxes) -> P:
                        else axes.dp_names[0])
         elif entry == "tp":
             out.append(axes.tp_name)
+        elif entry == "pp":
+            # meshes without a pipe axis treat pp-sharded dims as replicated
+            out.append(axes.pp_name if axes.pp > 1 else None)
         elif isinstance(entry, tuple):
             flat = []
             for e in entry:
@@ -57,9 +71,12 @@ def resolve_spec(spec: P, axes: MeshAxes) -> P:
                     flat.extend(axes.dp_names)
                 elif e == "tp":
                     flat.append(axes.tp_name)
+                elif e == "pp":
+                    if axes.pp > 1:
+                        flat.append(axes.pp_name)
                 else:
                     flat.append(e)
-            out.append(tuple(flat))
+            out.append(tuple(flat) if flat else None)
         else:
             out.append(entry)
     return P(*out)

@@ -9,6 +9,11 @@ its PartitionSpec:
     all-gather-on-use VJP (reduce-scatter) — no dp psum
   * replicated params (norm scales in sp layout, replicated KV
     projections, BC/dt projections)   -> psum over dp AND tp
+  * pipeline meshes: params NOT sharded over pp (embed/head/norms, and
+    the mixed-strategy per-stage subtrees) are replicated over the pipe
+    axis but only ONE stage computes a non-zero gradient for them, so
+    the pipe psum restores the full gradient on every rank; stage-local
+    layer stacks ('pp' in spec) keep their shard-local gradients.
 """
 from __future__ import annotations
 
@@ -35,6 +40,8 @@ def reduce_grads(grads, decls, axes: MeshAxes):
     def red(g, d):
         ax = _spec_axes(d.spec)
         names = []
+        if axes.pp > 1 and "pp" not in ax:
+            names.append(axes.pp_name)
         if "dp" not in ax:
             names.extend(axes.dp_names)
         if "tp" not in ax:

@@ -44,33 +44,54 @@ class Constraints:
 def hbm_bytes_estimate(plan: PlanCandidate) -> float:
     """Analytic per-device bytes for the training step.
 
-    params/tp · 4 copies (AdamW) + saved activations for the backward
-    (one [rows_local, n/tp] tensor per layer plus the x/y batch).  This
-    is deliberately a slight over-estimate — the filter must not pass a
-    plan the compiled check would reject."""
+    params/(tp·pp) · 4 copies (AdamW) + saved activations for the
+    backward (one [rows_local, n/tp] tensor per stage-local layer plus
+    the x/y batch, times the 1F1B in-flight bound min(mb, pp) for
+    pipelined plans — stage 0 holds that many microbatches mid-
+    wavefront).  For flat plans this is deliberately a slight
+    over-estimate — the filter must not pass a plan the compiled check
+    would reject.  Pipelined plans are priced at the IDEAL deployment
+    bound; the compiled check lowers the SPMD *emulation*, whose
+    unrolled wavefront retains all mb+pp-1 ticks of activations, so it
+    can measure above this estimate — `launch/plan.py`'s recheck loop
+    handles such late rejections by design."""
     from repro.parallel.strategies import make_strategy
+    from repro.train.pipeline import PipelineSchedule
     st = make_strategy(plan.spec(), plan.width, plan.width, plan.tp)
-    params_local = plan.depth * st.param_count() / plan.tp
+    pp = max(plan.pp, 1)
+    params_local = plan.depth * st.param_count() / plan.tp / pp
     state = params_local * _OPT_STATE_COPIES * FLOAT_BYTES
     rows_local = plan.batch / (plan.dp * plan.microbatches)
     feat_local = plan.width / plan.tp
-    acts = rows_local * feat_local * (plan.depth + 2) * FLOAT_BYTES
+    in_flight = 1
+    if pp > 1:
+        sched = PipelineSchedule(stages=pp, microbatches=plan.microbatches)
+        in_flight = sched.max_in_flight(0)
+    acts = (rows_local * feat_local * (plan.depth / pp + 2)
+            * in_flight * FLOAT_BYTES)
     return state + acts
 
 
 def compiled_hbm_bytes(plan: PlanCandidate, mesh) -> Optional[float]:
     """Per-device buffer bytes of the lowered probe step (argument +
     temp), via the shared analysis cache.  Returns None when the
-    compiler reports no memory analysis (some backends)."""
+    compiler reports no memory analysis (some backends).  Pipelined
+    plans lower the 1F1B wavefront probe, so the mesh must carry the
+    plan's pipe axis — and the number measured is the SPMD emulation's
+    (all wavefront ticks resident), an upper bound on the ideal 1F1B
+    deployment `hbm_bytes_estimate` prices."""
     import jax
     import jax.numpy as jnp
 
     from repro.parallel.params import abstract
     from repro.telemetry import analyze_lowered
-    from repro.telemetry.probe import make_ffn_probe_step
+    from repro.telemetry.probe import (make_ffn_pipeline_probe_step,
+                                       make_ffn_probe_step)
 
     cfg = plan.model_config()
-    fn, decls = make_ffn_probe_step(cfg, mesh, plan.batch)
+    make_probe = (make_ffn_pipeline_probe_step if plan.pp > 1
+                  else make_ffn_probe_step)
+    fn, decls = make_probe(cfg, mesh, plan.batch)
     x_sds = jax.ShapeDtypeStruct((plan.batch, plan.width), jnp.float32)
     lowered = fn.lower(abstract(decls), x_sds, x_sds)
     costs = analyze_lowered(lowered, default_group=plan.tp)

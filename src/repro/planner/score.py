@@ -17,6 +17,15 @@ GEMM work unchanged but repeats each layer collective once per
 microbatch at 1/mb the message size, so the c1·log2(p) latency term
 multiplies by mb — the planner can therefore see when accumulation
 stops being free.
+
+Pipelined plans (pp > 1) price the IDEAL 1F1B deployment: each device
+computes only its own L/pp layers (α and the layer-collective β divide
+by pp), pays the stage-boundary point-to-point transfers (one
+``collective_permute`` hop of the carried [rows_mb, n/tp] shard per
+microbatch per direction — ``PipelineSchedule.p2p_events``), and idles
+through the warmup/drain bubble — charged at static power B for the
+bubble-stretched fraction (pp-1)/mb of the working step time, with the
+step time itself stretched by (mb + pp - 1)/mb.
 """
 from __future__ import annotations
 
@@ -39,6 +48,7 @@ class ScoredPlan:
     energy_j_total: float
     throughput_rows_s: float
     param_count: int               # model size (the capacity proxy)
+    hbm_bytes_per_device: float = 0.0   # analytic napkin estimate
     predicted_loss: Optional[float] = None
     quality: Optional[float] = None   # lower is better (loss proxy)
     notes: dict = field(default_factory=dict)
@@ -51,7 +61,8 @@ class ScoredPlan:
              "iterations": self.iterations,
              "energy_j_total": self.energy_j_total,
              "throughput_rows_s": self.throughput_rows_s,
-             "param_count": self.param_count}
+             "param_count": self.param_count,
+             "hbm_bytes_per_device": self.hbm_bytes_per_device}
         if self.predicted_loss is not None:
             d["predicted_loss"] = self.predicted_loss
         if self.quality is not None:
@@ -73,39 +84,63 @@ def score_plan(plan: PlanCandidate, calib: Calibration, *,
     iterations-to-target (the iso-loss pilots) — the calibration's
     fitted ν scale corrects *predicted* iteration counts and must not
     be applied on top of a measurement."""
-    from repro.core.energy import comm_time_us, costs_from_strategies
+    from repro.core.energy import (comm_time_us, costs_from_strategies,
+                                   pipeline_p2p_time_us)
     from repro.parallel.strategies import make_strategy
+    from repro.train.pipeline import PipelineSchedule
 
     st = make_strategy(plan.spec(), plan.width, plan.width, plan.tp,
                        dp=plan.dp)
     s_a, s_b, s_nu = calib.scales_for(plan.strategy)
-    rows_per_pass = plan.batch / (plan.dp * plan.microbatches)
+    mb = plan.microbatches
+    pp = max(plan.pp, 1)
+    rows_per_pass = plan.batch / (plan.dp * mb)
     alpha, beta = costs_from_strategies(
         [st], plan.tp, plan.depth, rows_per_pass, peak_flops,
         fits=calib.collective_fits, training=training)
-    alpha = alpha * plan.microbatches * s_a
-    beta = beta * plan.microbatches * s_b
+    # each pipeline stage computes only its own depth/pp layers
+    alpha = alpha * mb * s_a / pp
+    beta = beta * mb * s_b / pp
+    if pp > 1:
+        # stage-boundary p2p: the carried feature shard crosses each
+        # boundary once per microbatch per direction
+        sched = PipelineSchedule(stages=pp, microbatches=mb)
+        m_boundary = rows_per_pass * plan.width / plan.tp
+        beta += pipeline_p2p_time_us(
+            sched, m_boundary, calib.collective_fits) * 1e-6 * s_b
     if training and plan.dp > 1:
         # data-parallel gradient synchronization: the step all-reduces
         # each layer's local (tp-sharded) parameter grads over the dp
         # group once per step — NOT per microbatch (accumulation syncs
         # after the last pass).  Without this term a pure-DP plan would
-        # falsely price as communication-free.
+        # falsely price as communication-free.  Pipelined devices hold
+        # (and sync) only their own stage's depth/pp layers.
         m_grads = st.param_count() / plan.tp
         us = comm_time_us("all_reduce", m_grads, plan.dp,
                           calib.collective_fits)
-        beta += us * plan.depth * 1e-6 * s_b
-    step_s = alpha + beta
-    e_iter = plan.devices * (A * alpha + B * beta)
+        beta += us * (plan.depth / pp) * 1e-6 * s_b
+    work_s = alpha + beta
+    # 1F1B warmup/drain bubble: the timeline stretches by (mb+pp-1)/mb;
+    # devices idle through the stretch at static power B
+    bubble_s = work_s * (pp - 1) / mb if pp > 1 else 0.0
+    step_s = work_s + bubble_s
+    e_iter = plan.devices * (A * alpha + B * (beta + bubble_s))
     nu = iterations * (s_nu if apply_nu_scale else 1.0)
+    notes = {"alpha_scale": s_a, "beta_scale": s_b, "nu_scale": s_nu,
+             "A_w": A, "B_w": B, "peak_flops": peak_flops}
+    if pp > 1:
+        notes["pp"] = pp
+        notes["bubble_s"] = bubble_s
+        notes["bubble_fraction"] = (pp - 1) / (mb + pp - 1)
+    from repro.planner.constraints import hbm_bytes_estimate
     return ScoredPlan(
         plan=plan, alpha_s=alpha, beta_s=beta, step_time_s=step_s,
         energy_j_per_iter=e_iter, iterations=nu,
         energy_j_total=nu * e_iter,
         throughput_rows_s=(plan.batch / step_s) if step_s else 0.0,
         param_count=plan.depth * st.param_count(),
-        notes={"alpha_scale": s_a, "beta_scale": s_b, "nu_scale": s_nu,
-               "A_w": A, "B_w": B, "peak_flops": peak_flops})
+        hbm_bytes_per_device=hbm_bytes_estimate(plan),
+        notes=notes)
 
 
 def score_plans(plans: Sequence[PlanCandidate], calib: Calibration,
@@ -130,14 +165,21 @@ def apply_throughput_floor(scored: Sequence[ScoredPlan],
 
 def pareto_frontier(scored: Sequence[ScoredPlan],
                     keys: Sequence[str] = ("energy_j_total",
-                                           "step_time_s")
+                                           "step_time_s",
+                                           "hbm_bytes_per_device")
                     ) -> List[ScoredPlan]:
     """Non-dominated set, minimizing every key; sorted by the first.
 
     With the iso-loss pass normalizing every plan to the same predicted
-    loss, the default 2-D frontier (energy, step time) is the paper's
-    trade-off curve: sorted by energy it is monotone — step time
-    non-increasing — by construction of dominance."""
+    loss, the default frontier spans the three resources a deployment
+    trades: energy, step time, and per-device memory.  Memory is what
+    pipeline parallelism buys (each stage holds 1/pp of the stack and
+    1F1B bounds in-flight activations at min(mb, pp)), so pp>1 plans
+    appear here as the memory-lean points even when the latency-priced
+    energy/step corner belongs to a small phantom mesh.  Restricting
+    ``keys`` to (energy, step time) recovers the classic monotone 2-D
+    curve — sorted by energy, step time non-increasing by construction
+    of dominance."""
     def vec(s: ScoredPlan):
         return tuple(getattr(s, k) for k in keys)
 

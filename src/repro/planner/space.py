@@ -16,7 +16,8 @@ from dataclasses import dataclass, replace
 from typing import Iterable, List, Optional, Sequence, Tuple
 
 from repro.configs.base import (PHANTOM_KINDS, PROJECTION_SITES,
-                                ModelConfig, ProjectionMap, ProjectionSpec)
+                                ModelConfig, PipelineConfig, ProjectionMap,
+                                ProjectionSpec)
 
 
 @dataclass(frozen=True)
@@ -30,6 +31,7 @@ class PlanCandidate:
     depth: int                     # layers L
     batch: int                     # global batch rows per step
     k: int = 0                     # ghost width (phantom family only)
+    pp: int = 1                    # pipeline stages (pipe mesh axis)
     site: str = "ffn_layer"        # projection site the strategy binds to
     microbatches: int = 1
     scan_layers: bool = True
@@ -37,11 +39,13 @@ class PlanCandidate:
 
     @property
     def devices(self) -> int:
-        return self.dp * self.tp
+        return self.dp * self.tp * self.pp
 
     @property
     def name(self) -> str:
         tag = f"{self.strategy}_n{self.width}_mesh{self.dp}x{self.tp}"
+        if self.pp > 1:
+            tag += f"x{self.pp}pp"
         if self.strategy in PHANTOM_KINDS:
             tag += f"_k{self.k}"
         if self.microbatches > 1:
@@ -60,6 +64,7 @@ class PlanCandidate:
             d_model=self.width, ffn_width=self.width, ffn_depth=self.depth,
             mlp="relu", microbatches=self.microbatches,
             scan_layers=self.scan_layers,
+            pipeline=PipelineConfig(stages=self.pp),
             projections=ProjectionMap(**{self.site: self.spec()}))
 
     def with_width(self, width: int) -> "PlanCandidate":
@@ -68,6 +73,7 @@ class PlanCandidate:
     def as_dict(self) -> dict:
         return {
             "name": self.name, "dp": self.dp, "tp": self.tp,
+            "pp": self.pp,
             "devices": self.devices, "strategy": self.strategy,
             "site": self.site, "width": self.width, "depth": self.depth,
             "batch": self.batch, "k": self.k,
@@ -103,18 +109,20 @@ def enumerate_plans(max_devices: int, *, width: int, depth: int,
                     strategies: Sequence[str] = ("tensor_col", "phantom"),
                     ks: Sequence[int] = (4, 8, 16),
                     microbatch_options: Sequence[int] = (1,),
+                    pps: Sequence[int] = (1, 2),
                     site: str = "ffn_layer",
                     device_counts: Optional[Iterable[int]] = None,
                     allow_submesh_tensor: bool = False
                     ) -> List[PlanCandidate]:
-    """Enumerate the structurally-valid candidates.
+    """Enumerate the structurally-valid dp×tp×pp×strategy×k candidates.
 
     Validity here is *model-class* validity (divisibility, the phantom
-    ghost-width regime k < n/p); resource feasibility (HBM fit, minimum
-    throughput) is `planner.constraints`' job so rejections can be
-    reported with reasons.
+    ghost-width regime k < n/p, layer stack dividing into pp stages);
+    resource feasibility (HBM fit, minimum throughput) is
+    `planner.constraints`' job so rejections can be reported with
+    reasons.
 
-    Tensor-family plans use the FULL device budget (dp fills whatever
+    Tensor-family plans use the FULL device budget (dp×pp fill whatever
     the model axis doesn't): they are the baseline the paper compares
     against, and idling paid-for devices under the baseline would make
     every comparison trivially winnable.  Phantom-family plans may
@@ -123,26 +131,44 @@ def enumerate_plans(max_devices: int, *, width: int, depth: int,
     if site not in PROJECTION_SITES:
         raise KeyError(f"unknown projection site {site!r}")
     plans: List[PlanCandidate] = []
+    seen_meshes = set()
     for dp, tp in mesh_shapes(max_devices, device_counts):
-        if width % max(tp, 1) or batch % max(dp, 1):
-            continue
-        for strat in strategies:
-            phantom = strat in PHANTOM_KINDS
-            if phantom and (tp < 2 or width % tp):
-                continue        # the phantom class needs >= 2 ranks
-            if not phantom and not allow_submesh_tensor \
-                    and dp * tp != max_devices:
+        for pp in pps:
+            if pp < 1 or (dp * tp) % pp or pp > depth or depth % pp:
                 continue
-            for mb in microbatch_options:
-                if batch % (dp * mb):
+            # re-factor (dp, tp) so the three axes multiply to the same
+            # device count: pp devices come out of the dp dimension
+            # first (stage boundaries replace gradient replication,
+            # not the model axis)
+            if dp % pp == 0:
+                dpp, tpp = dp // pp, tp
+            elif tp % pp == 0 and tp // pp >= 1:
+                dpp, tpp = dp, tp // pp
+            else:
+                continue
+            key = (dpp, tpp, pp)
+            if key in seen_meshes:
+                continue
+            seen_meshes.add(key)
+            if width % max(tpp, 1) or batch % max(dpp, 1):
+                continue
+            for strat in strategies:
+                phantom = strat in PHANTOM_KINDS
+                if phantom and (tpp < 2 or width % tpp):
+                    continue    # the phantom class needs >= 2 ranks
+                if not phantom and not allow_submesh_tensor \
+                        and dpp * tpp * pp != max_devices:
                     continue
-                for k in (ks if phantom else (0,)):
-                    # paper Eqn. 8 operating regime: ghosts narrower
-                    # than the activation shard they replace
-                    if phantom and k >= width // tp:
+                for mb in microbatch_options:
+                    if batch % (dpp * mb):
                         continue
-                    plans.append(PlanCandidate(
-                        dp=dp, tp=tp, strategy=strat, width=width,
-                        depth=depth, batch=batch, k=k, site=site,
-                        microbatches=mb))
+                    for k in (ks if phantom else (0,)):
+                        # paper Eqn. 8 operating regime: ghosts narrower
+                        # than the activation shard they replace
+                        if phantom and k >= width // tpp:
+                            continue
+                        plans.append(PlanCandidate(
+                            dp=dpp, tp=tpp, strategy=strat, width=width,
+                            depth=depth, batch=batch, k=k, pp=pp,
+                            site=site, microbatches=mb))
     return plans

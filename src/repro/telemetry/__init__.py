@@ -24,10 +24,14 @@ from repro.telemetry.meter import StepMeter, measure
 from repro.telemetry.predict import (event_wire_bytes, events_for,
                                      ffn_step_prediction,
                                      measured_energy_fields,
+                                     pipeline_ffn_step_prediction,
                                      serve_site_strategies,
                                      serve_step_prediction,
                                      strategy_prediction)
-from repro.telemetry.probe import make_ffn_probe_step, measure_ffn_step
+from repro.telemetry.probe import (make_ffn_pipeline_probe_step,
+                                   make_ffn_probe_step,
+                                   measure_ffn_pipeline_step,
+                                   measure_ffn_step)
 
 __all__ = [
     "CompiledCosts", "HLO_TO_PAPER", "analyze_compiled",
@@ -35,6 +39,8 @@ __all__ = [
     "compile_lowered", "SCHEMA", "Ledger", "LedgerEntry", "load_report",
     "StepMeter", "measure", "event_wire_bytes", "events_for",
     "ffn_step_prediction", "measured_energy_fields",
-    "serve_site_strategies", "serve_step_prediction",
-    "strategy_prediction", "make_ffn_probe_step", "measure_ffn_step",
+    "pipeline_ffn_step_prediction", "serve_site_strategies",
+    "serve_step_prediction", "strategy_prediction",
+    "make_ffn_pipeline_probe_step", "make_ffn_probe_step",
+    "measure_ffn_pipeline_step", "measure_ffn_step",
 ]

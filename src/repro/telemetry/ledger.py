@@ -35,6 +35,7 @@ _RATIO_KEYS = (
     "flops_per_device",
     "hbm_bytes_per_device",
     "collective_wire_bytes_per_device",
+    "boundary_wire_bytes_per_device",   # pipeline stage-boundary p2p
     "collective_m_floats",
     "energy_j_per_iter",
     "iterations",

@@ -267,6 +267,88 @@ def measured_energy_fields(costs, p: int, *, fits=None,
     }
 
 
+def pipeline_ffn_step_prediction(cfg, pp: int, tp: int, dp: int,
+                                 global_batch: int, *,
+                                 executed: bool = True,
+                                 peak_flops: float = TPU_PEAK_FLOPS,
+                                 fits=None, A: float = FRONTIER_A_W,
+                                 B: float = FRONTIER_B_W,
+                                 itemsize: float = FLOAT_BYTES) -> dict:
+    """The ledger's ``predicted`` block for one PIPELINED paper-FFN step
+    on a pp×dp×tp mesh (homogeneous stages).
+
+    ``executed=True`` predicts what the SPMD 1F1B emulation actually
+    lowers — every rank applies its stage at every wavefront tick
+    (bubbles compute on masked garbage) and ppermutes at every tick but
+    the last, forward and transposed-backward alike — so measured/
+    predicted ledger ratios pin at ~1.  ``executed=False`` is the ideal
+    deployment account (bubbles idle; M sends per boundary per
+    direction), which is what the planner prices.
+
+    The stage-boundary message is the carried feature shard:
+    ``rows_mb * n / tp`` floats per device per hop — a PHANTOM stage
+    carries the same shard but pays k-wide layer collectives, which is
+    how phantom shrinks total boundary-adjacent traffic.
+    """
+    from repro.core.ffn import ffn_stage_strategies
+    from repro.train.pipeline import PipelineSchedule
+
+    if cfg.pipeline.mixed:
+        raise ValueError("per-device prediction needs homogeneous stages "
+                         "(mixed stages run different per-rank programs)")
+    M = max(cfg.microbatches, 1)
+    sched = PipelineSchedule(stages=pp, microbatches=M)
+    st = ffn_stage_strategies(cfg, tp)[0]
+    L_loc = cfg.num_layers // max(pp, 1)
+    rows_mb = global_batch / max(dp, 1) / M
+    reps = sched.num_ticks if executed else M
+
+    alpha_s = (3.0 * reps * L_loc * st.flops(rows_mb)) / peak_flops
+    layer_events = [(ev, reps * L_loc) for ev in st.comm_events(rows_mb)]
+    m_boundary = rows_mb * cfg.ffn_width / max(tp, 1)
+    p2p = sched.p2p_events(m_boundary, executed=executed)
+    events = layer_events + [(ev, 1) for ev in p2p]
+    if dp > 1:
+        # dp gradient sync of this device's stage-local (tp-sharded)
+        # param grads — once per step (the probe psums after the
+        # wavefront, like the train step)
+        m_grads = L_loc * st.param_count() / max(tp, 1)
+        events.append((CommEvent("all_reduce", m_grads, "bwd"), 1))
+
+    def group(ev):
+        if ev.collective in ("collective_permute", "p2p"):
+            return pp
+        return dp if ev.collective == "all_reduce" else tp
+
+    wire = sum(event_wire_bytes(ev, group(ev), itemsize) * nrep
+               for ev, nrep in events)
+    boundary_wire = sum(event_wire_bytes(ev, pp, itemsize) for ev in p2p)
+    m_floats = sum(ev.m_floats * nrep for ev, nrep in events)
+    comm_us = sum(comm_time_us(ev.collective, ev.m_floats, group(ev), fits)
+                  * nrep for ev, nrep in events)
+    beta_s = comm_us * 1e-6
+    devices = pp * dp * tp
+    return {
+        "flops_per_device": alpha_s * peak_flops,
+        "collective_wire_bytes_per_device": wire,
+        "boundary_wire_bytes_per_device": boundary_wire,
+        "collective_m_floats": m_floats,
+        "comm_us": comm_us,
+        "alpha_s": alpha_s,
+        "beta_s": beta_s,
+        "energy_j_per_iter": energy_per_iteration(alpha_s, beta_s,
+                                                  devices, A, B),
+        "training": True,
+        "model": "E = nu*p*(A*alpha + B*beta), 1F1B pipeline",
+        "A_w": A, "B_w": B, "peak_flops": peak_flops,
+        "pp": pp, "tp": tp, "dp": dp, "microbatches": M,
+        "ticks": sched.num_ticks,
+        "bubble_fraction": sched.bubble_fraction,
+        "executed": executed,
+        "strategy": st.kind,
+    }
+
+
 def ffn_step_prediction(cfg, p: int, global_batch: int, *,
                         training: bool = True,
                         peak_flops: float = TPU_PEAK_FLOPS,

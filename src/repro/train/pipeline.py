@@ -1,0 +1,237 @@
+"""Pipeline parallelism: the 1F1B schedule and its SPMD execution engine.
+
+Two halves, one object each:
+
+  * ``PipelineSchedule`` — the ANALYTIC side.  Given (stages, microbatches)
+    it produces the canonical non-interleaved 1F1B order (warmup/steady/
+    drain), the bubble fraction, the 1F1B in-flight activation bound, and
+    the per-device stage-boundary ``CommEvent`` account that
+    ``core/energy.py`` / ``telemetry/predict.py`` price (the PIE-P-style
+    per-component extension: point-to-point activation/grad transfers are
+    first-class comm events, like the Table II collectives).
+
+  * ``pipeline_run`` — the EXECUTED side.  A wavefront loop over
+    ``ticks = M + S - 1`` clock ticks inside one ``shard_map``: at tick t,
+    pipe rank s computes microbatch ``t - s`` through its own stage and
+    ``lax.ppermute``s the activation to rank ``s+1``.  Bubble ticks
+    compute on masked garbage (zeroed before the send, so gradients
+    through them vanish) — in SPMD emulation a bubble burns flops instead
+    of idling, which the executed-account prediction mirrors exactly so
+    measured/predicted ledger ratios stay ~1.  Reverse-mode autodiff
+    transposes each ppermute into the opposite-direction hop, so
+    differentiating this loop IS the backward pipeline — per-microbatch
+    losses and gradients match the non-pipelined reference to float
+    reassociation (pinned by tests/test_hypothesis.py).
+
+On a pp=1 mesh the same entry points degrade to a sequential
+microbatched loop over all stages — the reference the equivalence suite
+compares against, and the path non-pipeline meshes keep using.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.axes import MeshAxes
+from repro.parallel.strategies.base import CommEvent
+
+
+# ---------------------------------------------------------------------------
+# the schedule (analytic)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PipelineSchedule:
+    """Non-interleaved 1F1B over ``microbatches`` microbatches and
+    ``stages`` pipeline stages."""
+
+    stages: int
+    microbatches: int
+
+    def __post_init__(self):
+        if self.stages < 1 or self.microbatches < 1:
+            raise ValueError(f"need stages >= 1 and microbatches >= 1, "
+                             f"got {self.stages}/{self.microbatches}")
+
+    # --- wavefront geometry ------------------------------------------------
+
+    @property
+    def num_ticks(self) -> int:
+        """Clock ticks of one forward (or one backward) wavefront."""
+        return self.microbatches + self.stages - 1
+
+    @property
+    def bubble_fraction(self) -> float:
+        """Idle fraction of the 1F1B timeline: (S-1)/(M+S-1)."""
+        return (self.stages - 1) / self.num_ticks
+
+    def makespan_ticks(self, t_fwd: float = 1.0, t_bwd: float = 2.0) -> float:
+        """1F1B makespan in stage-compute units: (M + S - 1)(t_f + t_b).
+        The useful work per stage is M(t_f + t_b); the rest is bubble."""
+        return self.num_ticks * (t_fwd + t_bwd)
+
+    def warmup(self, stage: int) -> int:
+        """Forward microbatches stage ``stage`` runs before its first
+        backward (the 1F1B warmup depth)."""
+        return min(self.stages - 1 - stage, self.microbatches)
+
+    def max_in_flight(self, stage: int) -> int:
+        """Peak activations stage ``stage`` holds under 1F1B — min(M, S-s),
+        versus GPipe's M.  This is the bound the planner's HBM napkin math
+        charges for pipelined plans."""
+        return min(self.microbatches, self.stages - stage)
+
+    def table(self, stage: int) -> List[Tuple[str, int]]:
+        """The canonical per-stage 1F1B op order: [("F", mb) | ("B", mb)].
+        Warmup forwards, then strict 1F1B alternation, then the drain."""
+        M, w = self.microbatches, self.warmup(stage)
+        ops: List[Tuple[str, int]] = [("F", i) for i in range(w)]
+        b = 0
+        for f in range(w, M):
+            ops.append(("F", f))
+            ops.append(("B", b))
+            b += 1
+        ops.extend(("B", i) for i in range(b, M))
+        return ops
+
+    # --- stage-boundary communication account ------------------------------
+
+    def stage_bounds(self, num_layers: int) -> List[Tuple[int, int]]:
+        """[lo, hi) layer range per stage (earlier stages take the
+        remainder when the stack doesn't divide evenly)."""
+        S = self.stages
+        base, extra = divmod(num_layers, S)
+        bounds, lo = [], 0
+        for s in range(S):
+            hi = lo + base + (1 if s < extra else 0)
+            bounds.append((lo, hi))
+            lo = hi
+        return bounds
+
+    def p2p_events(self, m_floats: float, *,
+                   executed: bool = False) -> List[CommEvent]:
+        """Per-device stage-boundary transfers for ONE iteration, in paper
+        Eqn. 26 units (m = per-rank message floats).
+
+        ``executed=False`` is the ideal deployment account: every interior
+        boundary moves each microbatch once forward (activation) and once
+        backward (activation grad) — M sends per device per direction.
+
+        ``executed=True`` is the SPMD-emulation account ``pipeline_run``
+        actually lowers (ledger joins compare against this): the unrolled
+        wavefront issues a ppermute at every tick but the last, forward
+        and transposed-backward alike — (M + S - 2) per direction.
+        """
+        if self.stages <= 1:
+            return []
+        n = (self.num_ticks - 1) if executed else self.microbatches
+        return ([CommEvent("collective_permute", m_floats, "fwd")] * n
+                + [CommEvent("collective_permute", m_floats, "bwd")] * n)
+
+
+# ---------------------------------------------------------------------------
+# the engine (executed, inside shard_map)
+# ---------------------------------------------------------------------------
+
+def pipeline_run(stage_fn, x_mb, axes: MeshAxes, *, unroll: bool = False):
+    """Run the pipeline wavefront over pre-split microbatch inputs.
+
+    ``stage_fn(x) -> (z, aux)`` applies THIS pipe rank's stage to one
+    microbatch activation (under pp=1 it must apply ALL stages
+    sequentially); ``x_mb`` is ``[M, ...]`` of stage-0 inputs (local
+    shards, replicated over the pipe axis).  Returns ``(y, aux_sum)``
+    where ``y`` is ``[M, ...]`` of stage outputs per microbatch — the
+    FINAL model outputs on the LAST pipe rank (callers mask their loss to
+    ``axis_index == pp - 1``), intermediate stage outputs elsewhere — and
+    ``aux_sum`` this rank's summed auxiliary losses over valid ticks.
+
+    ``unroll=True`` lowers the tick loop as straight-line HLO so compiled
+    cost analysis counts every tick (the same reason the FFN probe unrolls
+    layers); it also skips the dead last-tick send explicitly, so the
+    lowered ppermute count is deterministic rather than DCE-dependent.
+    """
+    M = x_mb.shape[0]
+    pp = axes.pp
+    if pp == 1:
+        def body(carry, x):
+            z, aux = stage_fn(x)
+            return carry + aux, z
+        if unroll:
+            aux_sum = jnp.float32(0)
+            ys = []
+            for i in range(M):
+                aux_sum, z = body(aux_sum, x_mb[i])
+                ys.append(z)
+            return jnp.stack(ys), aux_sum
+        aux_sum, ys = lax.scan(body, jnp.float32(0), x_mb)
+        return ys, aux_sum
+
+    T = M + pp - 1
+    s = lax.axis_index(axes.pp_name)
+    perm = [(i, i + 1) for i in range(pp - 1)]
+    pad = jnp.zeros((pp - 1,) + x_mb.shape[1:], x_mb.dtype)
+    xs_in = jnp.concatenate([x_mb, pad], axis=0)          # [T, ...]
+    ticks = jnp.arange(T, dtype=jnp.int32)
+
+    def tick_body(recv, aux_acc, xt, t):
+        """One wavefront tick on this rank: (z to forward, aux')."""
+        x_in = jnp.where(s == 0, xt, recv)
+        z, aux = stage_fn(x_in)
+        # bubble ticks (microbatch index t - s out of range) compute on
+        # garbage; zeroing z kills both the value and every gradient
+        # flowing through it
+        valid = jnp.logical_and(t - s >= 0, t - s < M)
+        z = jnp.where(valid, z, jnp.zeros_like(z))
+        return z, aux_acc + jnp.where(valid, aux, jnp.float32(0))
+
+    def tick(carry, xs):
+        recv, aux_acc = carry
+        z, aux_acc = tick_body(recv, aux_acc, *xs)
+        return (lax.ppermute(z, axes.pp_name, perm), aux_acc), z
+
+    recv0 = jnp.zeros(x_mb.shape[1:], x_mb.dtype)
+    if unroll:
+        recv, aux_sum = recv0, jnp.float32(0)
+        zs = []
+        for t in range(T):
+            z, aux_sum = tick_body(recv, aux_sum, xs_in[t],
+                                   jnp.int32(t))
+            # the last tick's send is dead — skip it explicitly so the
+            # lowered ppermute count is deterministic, not DCE-dependent
+            recv = (lax.ppermute(z, axes.pp_name, perm) if t < T - 1
+                    else recv0)
+            zs.append(z)
+        ys = jnp.stack(zs)
+    else:
+        (_, aux_sum), ys = lax.scan(tick, (recv0, jnp.float32(0)),
+                                    (xs_in, ticks))
+    # the last stage emits microbatch i's final output at tick i + pp - 1
+    return ys[pp - 1:], aux_sum
+
+
+def split_batch_microbatches(batch, M: int):
+    """Split every leaf of a batch pytree into M microbatches along its
+    batch axis (axis 0, except mrope ``positions`` whose batch axis
+    is 1) — the same convention as the trainer's accumulation splitter."""
+    import jax
+
+    def _split(path, x):
+        ax = 1 if (path and getattr(path[-1], "key", None)
+                   == "positions") else 0
+        return split_microbatches(x, M, axis=ax)
+
+    return jax.tree_util.tree_map_with_path(_split, batch)
+
+
+def split_microbatches(x, M: int, axis: int = 0):
+    """[..., B, ...] -> [M, ..., B/M, ...] along ``axis`` (leading
+    microbatch dim), preserving row order within each microbatch."""
+    B = x.shape[axis]
+    if B % M:
+        raise ValueError(f"batch axis {B} not divisible by "
+                         f"{M} microbatches")
+    xs = x.reshape(x.shape[:axis] + (M, B // M) + x.shape[axis + 1:])
+    return jnp.moveaxis(xs, axis, 0)

@@ -23,13 +23,15 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.models.model import AUX_LOSS_WEIGHT, forward_train, model_decls
+from repro.models.model import (AUX_LOSS_WEIGHT, forward_train,
+                                forward_train_pipeline, model_decls)
 from repro.parallel.axes import MeshAxes, resolve_spec
 from repro.parallel.compat import shard_map
 from repro.parallel.grads import reduce_grads
 from repro.parallel.params import (ParamDecl, abstract, is_decl,
                                    materialize, specs)
 from repro.telemetry import LedgerEntry, StepMeter, analyze_compiled
+from repro.train.pipeline import PipelineSchedule  # noqa: F401 (re-export)
 
 
 def _global_norm(grads, decls, axes: MeshAxes):
@@ -45,6 +47,8 @@ def _global_norm(grads, decls, axes: MeshAxes):
             repl *= axes.dp
         if "tp" not in ax:
             repl *= axes.tp
+        if "pp" not in ax:
+            repl *= axes.pp
         total = total + jnp.sum(jnp.square(g.astype(jnp.float32))) / repl
     return jnp.sqrt(lax.psum(total, axes.all_names))
 
@@ -53,10 +57,41 @@ def make_train_step(cfg: ModelConfig, mesh, optimizer, *,
                     microbatches: int = 1, grad_clip: float = 1.0,
                     batch_spec=None):
     """Returns (jit step_fn(params, opt, step, batch) -> (params, opt,
-    metrics), decls, opt_decls)."""
+    metrics), decls, opt_decls).
+
+    On a mesh with a ``pipe`` axis the step runs the 1F1B pipeline:
+    ``microbatches`` feeds the wavefront (stage-boundary ppermutes)
+    instead of the sequential accumulation scan, layer stacks are
+    pipe-sharded per stage, and the spec-aware grad reduction restores
+    embed/head gradients across stages via the pipe psum."""
     axes = MeshAxes.from_mesh(mesh)
     decls = model_decls(cfg, axes)
     opt_decls = optimizer.state_decls(decls)
+    pipelined = axes.pp > 1
+
+    def loss_fn_pipeline(params, batch):
+        # forward_train_pipeline masks loss/valid counts to the last pipe
+        # rank and keeps aux stage-local, so each device still
+        # differentiates its UNIQUE share of the global objective — the
+        # pipe psums below only aggregate for reporting/normalization.
+        # Normalization is GLOBAL per-token (sum over all microbatches /
+        # global valid count) — the exact microbatches=1 objective.  The
+        # accumulation path's mean-of-per-microbatch-means only differs
+        # on ragged batches, where per-token weighting is the more
+        # faithful objective, so the pipeline keeps it.
+        sum_loss, n_valid, aux = forward_train_pipeline(
+            cfg, axes, params, batch, microbatches)
+        red = axes.pp_names + axes.dp_names
+        nv_g = lax.psum(n_valid, red).astype(jnp.float32)
+        nv_g = jnp.maximum(nv_g, 1.0)
+        # aux is a per-microbatch MEAN summed over the M wavefront
+        # microbatches — divide by M so the effective aux weight matches
+        # the accumulation path (which averages grads over microbatches)
+        mb = max(microbatches, 1)
+        obj = (sum_loss / nv_g
+               + AUX_LOSS_WEIGHT * aux / (axes.dp * mb)) / axes.tp
+        ce_report = lax.psum(sum_loss, red) / nv_g
+        return obj, ce_report
 
     def loss_fn(params, batch):
         sum_loss, n_valid, aux = forward_train(cfg, axes, params, batch)
@@ -73,21 +108,15 @@ def make_train_step(cfg: ModelConfig, mesh, optimizer, *,
         return obj, ce_report
 
     def step_fn(params, opt_state, step, batch):
-        if microbatches == 1:
+        if pipelined:
+            (total, ce), grads = jax.value_and_grad(
+                loss_fn_pipeline, has_aux=True)(params, batch)
+        elif microbatches == 1:
             (total, ce), grads = jax.value_and_grad(loss_fn, has_aux=True)(
                 params, batch)
         else:
-            def _split(path, x):
-                # batch axis is 0 for all inputs except mrope positions
-                # ([3, B, S]: axis 1)
-                ax = 1 if (path and getattr(path[-1], "key", None)
-                           == "positions") else 0
-                n = x.shape[ax] // microbatches
-                xs = x.reshape(x.shape[:ax] + (microbatches, n)
-                               + x.shape[ax + 1:])
-                return jnp.moveaxis(xs, ax, 0)
-
-            mb_batch = jax.tree_util.tree_map_with_path(_split, batch)
+            from repro.train.pipeline import split_batch_microbatches
+            mb_batch = split_batch_microbatches(batch, microbatches)
 
             def acc_body(carry, mb):
                 g_acc, ce_acc = carry
@@ -242,7 +271,8 @@ class Trainer:
             name=name or f"train_{self.cfg.name}", suite="trainer",
             kind="train", arch=self.cfg.name, impl=impl, p=axes.tp,
             measured=measured, predicted=predicted,
-            extra={"window": self._ledger_window}))
+            extra={"window": self._ledger_window, "pp": axes.pp,
+                   "dp": axes.dp}))
         self.meter.reset(warm=True)
         self._ledger_window += 1
         return entry

@@ -44,3 +44,46 @@ def mesh14():
     rescale changes dp only: the phantom model class is tp-dependent)."""
     from repro.launch.mesh import make_local_mesh
     return make_local_mesh(1, 4)
+
+
+@pytest.fixture(scope="session")
+def mesh222():
+    """(pipe=2, data=2, model=2) mesh — the pipeline-parallel testbed."""
+    from repro.launch.mesh import make_local_mesh
+    return make_local_mesh(2, 2, 2)
+
+
+@pytest.fixture(scope="session")
+def mesh124():
+    """(pipe=4, data=1, model=2) mesh — deep-pipeline testbed."""
+    from repro.launch.mesh import make_local_mesh
+    return make_local_mesh(1, 2, 4)
+
+
+@pytest.fixture(scope="session")
+def mesh12():
+    """(data=1, model=2) mesh — the pp-mesh equivalence reference."""
+    from repro.launch.mesh import make_local_mesh
+    return make_local_mesh(1, 2)
+
+
+@pytest.fixture(scope="session")
+def compiled_step_cache():
+    """Session-scoped memo of jit-compiled step/probe builders.
+
+    Compiling a shard_map step dominates test wall time, and the
+    property-based suites re-draw the same few configurations many
+    times; ``cache.build(maker, cfg, mesh, *key_extras)`` calls
+    ``maker(cfg, mesh, *key_extras)`` once per distinct (maker, cfg,
+    mesh axes, extras) and replays the compiled result afterwards.
+    ``ModelConfig`` is frozen/hashable, so the config IS the key.
+    """
+    class _Cache(dict):
+        def build(self, maker, cfg, mesh, *extras):
+            key = (maker.__module__, maker.__qualname__, cfg,
+                   tuple(zip(mesh.axis_names, mesh.devices.shape)), extras)
+            if key not in self:
+                self[key] = maker(cfg, mesh, *extras)
+            return self[key]
+
+    return _Cache()

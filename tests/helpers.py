@@ -48,3 +48,57 @@ def make_batch(cfg, B, S, seed=0):
         pos = np.broadcast_to(np.arange(S, dtype=np.int32), (B, S)).copy()
         batch["positions"] = np.stack([pos, pos, pos])
     return batch
+
+
+# ---------------------------------------------------------------------------
+# pipeline parallelism (shared by test_pipeline.py and the hypothesis suite)
+# ---------------------------------------------------------------------------
+
+def pipeline_cfg(kind: str, k: int, M: int, stages: int, n: int = 32,
+                 layers=None):
+    """A paper-FFN config cut into ``stages`` pipeline stages: homogeneous
+    tensor/phantom, or mixed (alternating per-stage specs)."""
+    from repro.configs.base import (ModelConfig, PhantomConfig,
+                                    PipelineConfig, ProjectionSpec)
+    if kind == "mixed":
+        pipe = PipelineConfig(stages=stages, stage_specs=tuple(
+            ProjectionSpec(kind="phantom", k=k) if s % 2
+            else ProjectionSpec(kind="tensor") for s in range(stages)))
+    else:
+        pipe = PipelineConfig(stages=stages)
+    L = layers or stages
+    return ModelConfig(
+        name=f"pipe-{kind}-k{k}-m{M}-s{stages}-n{n}-L{L}", family="ffn",
+        num_layers=L, d_model=n, ffn_width=n, ffn_depth=L,
+        ffn_impl="phantom" if kind == "phantom" else "dense", mlp="relu",
+        phantom=PhantomConfig(k=k), pipeline=pipe, microbatches=M)
+
+
+def assert_pipeline_equivalence(cache, mesh_pp, mesh_ref, kind, k, M,
+                                stages, seed, batch=8):
+    """Loss AND grads (params + input) of the 1F1B wavefront on
+    ``mesh_pp`` must match the sequential reference on ``mesh_ref``
+    within float-reassociation tolerance."""
+    from repro.parallel.params import materialize
+    from repro.telemetry.probe import make_ffn_pipeline_probe_step
+
+    cfg = pipeline_cfg(kind, k, M, stages)
+    fn_pp, decls = cache.build(make_ffn_pipeline_probe_step, cfg,
+                               mesh_pp, batch)
+    fn_ref, decls_ref = cache.build(make_ffn_pipeline_probe_step, cfg,
+                                    mesh_ref, batch)
+    assert jax.tree.structure(decls) == jax.tree.structure(decls_ref)
+
+    params = materialize(decls, seed % 7)
+    kx, ky = jax.random.split(jax.random.key(seed))
+    x = jax.random.normal(kx, (batch, cfg.ffn_width), jnp.float32)
+    y = jax.random.normal(ky, (batch, cfg.ffn_width), jnp.float32)
+
+    loss_pp, (gp_pp, gx_pp) = fn_pp(params, x, y)
+    loss_ref, (gp_ref, gx_ref) = fn_ref(params, x, y)
+    np.testing.assert_allclose(float(loss_pp), float(loss_ref), rtol=2e-4)
+    for a, b in zip(jax.tree.leaves(gp_pp), jax.tree.leaves(gp_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(gx_pp), np.asarray(gx_ref),
+                               rtol=5e-4, atol=1e-6)

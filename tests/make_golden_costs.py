@@ -1,0 +1,105 @@
+"""Golden-value fixture for the energy model's per-strategy accounts.
+
+``compute()`` evaluates every pinned quantity — strategy ``flops()`` /
+``param_count()`` / ``comm_events()`` (Table II), the tp/phantom closed
+forms, Eqn. 26 comm times including the new single-hop
+``collective_permute`` stage-boundary pricing, the 1F1B schedule
+geometry, and the executed-SPMD pipeline step prediction —
+from the live code.  ``tests/fixtures/golden_costs.json`` stores the
+values this PR shipped with; ``test_golden_costs.py`` fails on ANY
+drift, so an energy-model refactor cannot silently change predictions.
+
+Regenerate DELIBERATELY (after verifying the new numbers are intended):
+
+    PYTHONPATH=src python tests/make_golden_costs.py
+"""
+from __future__ import annotations
+
+import json
+import os
+
+FIXTURE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "fixtures", "golden_costs.json")
+
+
+def compute() -> dict:
+    from repro.configs.base import (ModelConfig, PhantomConfig,
+                                    PipelineConfig, ProjectionSpec)
+    from repro.core.energy import (comm_time_us, phantom_costs,
+                                   pipeline_p2p_time_us, tp_costs)
+    from repro.parallel.strategies import make_strategy
+    from repro.telemetry.predict import pipeline_ffn_step_prediction
+    from repro.train.pipeline import PipelineSchedule
+
+    n, tp, batch = 512, 4, 32
+    out = {"strategies": {}, "closed_forms": {}, "comm_time_us": {},
+           "schedule": {}, "pipeline_prediction": {}}
+
+    for kind, k in (("tensor_col", 0), ("tensor_row", 0),
+                    ("phantom", 8), ("lowrank_distill", 4)):
+        spec = ProjectionSpec(kind=kind, k=k or 64)
+        st = make_strategy(spec, n, n, tp, bias=True)
+        out["strategies"][f"{kind}_k{k}"] = {
+            "n": n, "tp": tp, "batch": batch, "k": k,
+            "flops": st.flops(batch),
+            "param_count": st.param_count(),
+            "comm_events": [[ev.collective, ev.m_floats, ev.phase]
+                            for ev in st.comm_events(batch)],
+        }
+
+    a_t, b_t = tp_costs(n, tp, 2, batch, 197e12)
+    a_p, b_p = phantom_costs(n, tp, 2, 8, batch, 197e12)
+    out["closed_forms"] = {
+        "tp_costs_n512_p4_L2_b32": [a_t, b_t],
+        "phantom_costs_n512_p4_L2_k8_b32": [a_p, b_p],
+    }
+
+    for coll in ("broadcast", "all_reduce", "all_gather",
+                 "reduce_scatter", "collective_permute"):
+        out["comm_time_us"][f"{coll}_m4096_p4"] = comm_time_us(coll,
+                                                               4096.0, 4)
+
+    sched = PipelineSchedule(stages=4, microbatches=8)
+    out["schedule"] = {
+        "stages": 4, "microbatches": 8,
+        "num_ticks": sched.num_ticks,
+        "bubble_fraction": sched.bubble_fraction,
+        "warmup": [sched.warmup(s) for s in range(4)],
+        "max_in_flight": [sched.max_in_flight(s) for s in range(4)],
+        "table_stage0": sched.table(0)[:8],
+        "p2p_events_ideal": len(sched.p2p_events(1.0)),
+        "p2p_events_executed": len(sched.p2p_events(1.0, executed=True)),
+        "p2p_time_us_m2048_ideal": pipeline_p2p_time_us(sched, 2048.0),
+        "p2p_time_us_m2048_executed": pipeline_p2p_time_us(
+            sched, 2048.0, executed=True),
+        "stage_bounds_L10": sched.stage_bounds(10),
+    }
+
+    for impl, k in (("dense", 8), ("phantom", 8)):
+        cfg = ModelConfig(name=f"golden-{impl}", family="ffn",
+                          num_layers=4, d_model=256, ffn_width=256,
+                          ffn_depth=4, ffn_impl=impl, mlp="relu",
+                          phantom=PhantomConfig(k=k),
+                          pipeline=PipelineConfig(stages=2),
+                          microbatches=4)
+        pred = pipeline_ffn_step_prediction(cfg, 2, 2, 2, 32,
+                                            executed=True)
+        out["pipeline_prediction"][impl] = {
+            key: pred[key] for key in (
+                "flops_per_device", "collective_wire_bytes_per_device",
+                "boundary_wire_bytes_per_device", "collective_m_floats",
+                "comm_us", "energy_j_per_iter", "ticks",
+                "bubble_fraction")}
+    return out
+
+
+def main():
+    os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
+    with open(FIXTURE, "w") as f:
+        json.dump(compute(), f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {FIXTURE}")
+
+
+if __name__ == "__main__":
+    main()

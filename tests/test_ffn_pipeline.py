@@ -15,9 +15,19 @@ from repro.parallel.compat import shard_map
 
 
 def _cfg(impl, n=64, L=2, k=4, variant="fused"):
-    return ModelConfig(name="t", family="ffn", num_layers=L, d_model=n,
+    return ModelConfig(name=f"t-{impl}-{variant}", family="ffn",
+                       num_layers=L, d_model=n,
                        ffn_width=n, ffn_depth=L, ffn_impl=impl, mlp="relu",
                        phantom=PhantomConfig(k=k, variant=variant))
+
+
+def _build_step(cfg, mesh, batch):
+    """Session-cache maker: one compile per (cfg, mesh, batch) — the
+    trains-to-loss and identical-trajectory tests share the SGD(0.3)
+    step instead of re-jitting it per case."""
+    opt = SGD(0.3)
+    step_fn, decls, _ = make_ffn_train_step(cfg, mesh, opt, batch)
+    return step_fn, decls, opt
 
 
 def test_tp_matches_single_device_dense(mesh24):
@@ -41,10 +51,11 @@ def test_tp_matches_single_device_dense(mesh24):
                                           ("phantom", "fused"),
                                           ("phantom", "faithful"),
                                           ("phantom", "ring")])
-def test_pipeline_trains_to_loss(mesh24, impl, variant):
+def test_pipeline_trains_to_loss(mesh24, compiled_step_cache, impl,
+                                 variant):
     cfg = _cfg(impl, variant=variant)
-    opt = SGD(0.3)
-    step_fn, decls, _ = make_ffn_train_step(cfg, mesh24, opt, 16)
+    step_fn, decls, opt = compiled_step_cache.build(_build_step, cfg,
+                                                    mesh24, 16)
     params, opt_state = init_ffn(cfg, mesh24, opt)
     ds = TeacherDataset(cfg.ffn_width, 16)
     first = last = None
@@ -58,13 +69,15 @@ def test_pipeline_trains_to_loss(mesh24, impl, variant):
     assert last < 0.7 * first, (impl, variant, first, last)
 
 
-def test_variants_identical_training(mesh24):
-    """faithful / fused / ring are the SAME model: identical losses."""
+def test_variants_identical_training(mesh24, compiled_step_cache):
+    """faithful / fused / ring are the SAME model: identical losses.
+    (Steps come from the session cache — the fused/faithful/ring compiles
+    are shared with test_pipeline_trains_to_loss.)"""
     traces = {}
     for variant in ("faithful", "fused", "ring"):
         cfg = _cfg("phantom", variant=variant)
-        opt = SGD(0.05)
-        step_fn, decls, _ = make_ffn_train_step(cfg, mesh24, opt, 16)
+        step_fn, decls, opt = compiled_step_cache.build(_build_step, cfg,
+                                                        mesh24, 16)
         params, opt_state = init_ffn(cfg, mesh24, opt)
         ds = TeacherDataset(cfg.ffn_width, 16)
         losses = []
@@ -81,9 +94,9 @@ def test_variants_identical_training(mesh24):
 
 
 def test_pp_model_smaller_and_energy_lower():
-    """Paper Table I structure: PP model smaller; per-iteration energy
-    lower at the paper's operating points."""
-    from repro.core.energy import (energy_per_iteration, pp_costs,
+    """Paper Table I structure: phantom model smaller; per-iteration
+    energy lower at the paper's operating points."""
+    from repro.core.energy import (energy_per_iteration, phantom_costs,
                                    tp_costs, TPU_PEAK_FLOPS)
     n, L, batch = 16_384, 2, 64
     for p, k in [(8, 16), (16, 6), (32, 4), (64, 2), (128, 2), (256, 4)]:
@@ -91,7 +104,7 @@ def test_pp_model_smaller_and_energy_lower():
         tp_params = ffn_model_params(_cfg("dense", n=n, L=L), p)
         assert pp_params < tp_params
         a_t, b_t = tp_costs(n, p, L, batch, TPU_PEAK_FLOPS)
-        a_p, b_p = pp_costs(n, p, L, k, batch, TPU_PEAK_FLOPS)
+        a_p, b_p = phantom_costs(n, p, L, k, batch, TPU_PEAK_FLOPS)
         assert a_p < a_t and b_p < b_t
         assert (energy_per_iteration(a_p, b_p, p)
                 < energy_per_iteration(a_t, b_t, p))

@@ -1,0 +1,73 @@
+"""Golden-value regression pins for the energy model.
+
+Each strategy's ``flops()``/``comm_events()`` account (Table II / Eqn.
+26 closed forms, including the pipeline stage-boundary p2p events), the
+1F1B schedule geometry, and the executed-SPMD pipeline prediction are
+compared against the seeded fixture ``tests/fixtures/golden_costs.json``
+— an energy-model refactor that changes ANY prediction fails here until
+the fixture is regenerated deliberately (see tests/make_golden_costs.py).
+"""
+import json
+import math
+
+import pytest
+
+from make_golden_costs import FIXTURE, compute
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def live():
+    return compute()
+
+
+def _assert_same(path, want, got):
+    if isinstance(want, dict):
+        assert isinstance(got, dict) and set(want) == set(got), path
+        for key in want:
+            _assert_same(f"{path}.{key}", want[key], got[key])
+    elif isinstance(want, (list, tuple)):
+        got_l = list(got)
+        assert len(want) == len(got_l), path
+        for i, (w, g) in enumerate(zip(want, got_l)):
+            _assert_same(f"{path}[{i}]", w, g)
+    elif isinstance(want, float) and not isinstance(want, bool):
+        assert got == pytest.approx(want, rel=1e-9, abs=1e-12), \
+            f"{path}: fixture {want} != live {got}"
+    else:
+        # JSON round-trips tuples as lists; normalize before comparing
+        assert want == got, f"{path}: fixture {want!r} != live {got!r}"
+
+
+@pytest.mark.parametrize("section", ["strategies", "closed_forms",
+                                     "comm_time_us", "schedule",
+                                     "pipeline_prediction"])
+def test_golden_section_pinned(golden, live, section):
+    # the live table() returns tuples; JSON stores lists — canonicalize
+    want, got = golden[section], json.loads(json.dumps(live[section]))
+    _assert_same(section, want, got)
+
+
+def test_fixture_is_sane(golden):
+    """Guard against a truncated/hand-edited fixture: the pinned values
+    must satisfy the model's own arithmetic identities."""
+    st = golden["strategies"]["tensor_col_k0"]
+    n, tp, b = st["n"], st["tp"], st["batch"]
+    assert st["flops"] == pytest.approx(2.0 * n * (n / tp) * b)
+    assert [e[0] for e in st["comm_events"]] == ["all_gather",
+                                                 "reduce_scatter"]
+    ph = golden["strategies"]["phantom_k8"]
+    assert all(e[1] == 8 * b for e in ph["comm_events"])
+    sched = golden["schedule"]
+    assert sched["num_ticks"] == sched["microbatches"] + sched["stages"] - 1
+    assert sched["bubble_fraction"] == pytest.approx(
+        (sched["stages"] - 1) / sched["num_ticks"])
+    assert sched["p2p_events_ideal"] == 2 * sched["microbatches"]
+    assert sched["p2p_events_executed"] == 2 * (sched["num_ticks"] - 1)
+    assert not math.isnan(
+        golden["pipeline_prediction"]["phantom"]["energy_j_per_iter"])

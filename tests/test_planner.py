@@ -167,22 +167,47 @@ def test_scoring_prices_dp_gradient_sync():
 
 def test_frontier_monotone_and_nondominated():
     scored = _scored()
-    front = pareto_frontier(scored)
-    assert front
-    # sorted by energy; step time monotone non-increasing along it
-    energies = [s.energy_j_total for s in front]
-    times = [s.step_time_s for s in front]
+    # classic 2-key curve: sorted by energy, step time non-increasing
+    front2 = pareto_frontier(scored, keys=("energy_j_total",
+                                           "step_time_s"))
+    assert front2
+    energies = [s.energy_j_total for s in front2]
+    times = [s.step_time_s for s in front2]
     assert energies == sorted(energies)
     assert all(times[i] >= times[i + 1] for i in range(len(times) - 1))
-    # no frontier point is dominated by ANY scored plan
+    # default 3-objective frontier (energy, step time, per-device HBM):
+    # contains the 2-key curve and no point is dominated by ANY plan
+    front = pareto_frontier(scored)
+    assert {id(s) for s in front2} <= {id(s) for s in front}
     for f in front:
         for s in scored:
             if s is f:
                 continue
-            assert not (s.energy_j_total <= f.energy_j_total
-                        and s.step_time_s <= f.step_time_s
-                        and (s.energy_j_total, s.step_time_s)
-                        != (f.energy_j_total, f.step_time_s))
+            fv = (f.energy_j_total, f.step_time_s, f.hbm_bytes_per_device)
+            sv = (s.energy_j_total, s.step_time_s, s.hbm_bytes_per_device)
+            assert not (all(a <= b for a, b in zip(sv, fv)) and sv != fv)
+
+
+def test_frontier_contains_pipeline_plans():
+    """pp>1 plans are the memory-lean frontier points: with the pipe
+    axis in the enumeration, some pipelined plan must be non-dominated
+    on (energy, step time, per-device HBM)."""
+    calib = paper_default_calibration()
+    plans = enumerate_plans(8, width=512, depth=2, batch=64, pps=(1, 2))
+    assert any(p.pp > 1 for p in plans)
+    # pp slices devices out of dp, never inflates the budget
+    assert all(p.devices <= 8 for p in plans)
+    front = pareto_frontier(score_plans(plans, calib, iterations=100.0))
+    pp_front = [s for s in front if s.plan.pp > 1]
+    assert pp_front, [s.plan.name for s in front]
+    # the pipelined plan offers lower per-device HBM than its pp=1
+    # sibling on the same (dp*pp, tp) device count
+    for s in pp_front:
+        sib = [o for o in front if o.plan.pp == 1
+               and o.plan.tp == s.plan.tp
+               and o.plan.strategy == s.plan.strategy]
+        for o in sib:
+            assert s.hbm_bytes_per_device < o.hbm_bytes_per_device
 
 
 def test_loss_curve_fit_and_inversion():

@@ -219,15 +219,14 @@ def test_slo_tracker_report():
 # ---------------------------------------------------------------------------
 
 @pytest.fixture(scope="module")
-def serve_setup(request):
+def serve_setup(request, mesh24):
     from repro.configs.base import get_config
-    from repro.launch.mesh import make_local_mesh
     from repro.models.model import model_decls
     from repro.parallel.axes import MeshAxes
     from repro.parallel.params import materialize
 
     cfg = get_config("chatglm3-6b", smoke=True)
-    mesh = make_local_mesh(2, 4)
+    mesh = mesh24
     params = materialize(model_decls(cfg, MeshAxes.from_mesh(mesh)), 1)
     return cfg, mesh, params
 

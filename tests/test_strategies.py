@@ -11,7 +11,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import (ModelConfig, PhantomConfig, ProjectionMap,
                                 ProjectionSpec, get_config)
-from repro.core.energy import comm_time_us, pp_costs, tp_costs
+from repro.core.energy import comm_time_us, phantom_costs, tp_costs
 from repro.parallel.axes import MeshAxes
 from repro.parallel.params import materialize, param_count
 from repro.parallel.strategies import (available_strategies, make_strategy,
@@ -297,7 +297,7 @@ def test_strategy_costs_match_hand_formulas_paper_ffn():
             a_ref, b_ref = _old_tp_costs(n, p, L, batch, peak)
             np.testing.assert_allclose(a, a_ref, rtol=1e-12)
             np.testing.assert_allclose(b, b_ref, rtol=1e-12)
-            a, b = pp_costs(n, p, L, k, batch, peak)
+            a, b = phantom_costs(n, p, L, k, batch, peak)
             a_ref, b_ref = _old_pp_costs(n, p, L, k, batch, peak)
             np.testing.assert_allclose(a, a_ref, rtol=1e-12)
             np.testing.assert_allclose(b, b_ref, rtol=1e-12)
