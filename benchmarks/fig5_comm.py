@@ -13,6 +13,16 @@ from __future__ import annotations
 from benchmarks.common import emit
 
 
+
+def _projections(impl: str, k: int):
+    """Explicit per-site strategy selection for the paper-FFN subject
+    (the deprecated ffn_impl= shim is off-limits in-repo)."""
+    from repro.configs.base import (dense_projection_map,
+                                    phantom_projection_map)
+    if impl == "phantom":
+        return phantom_projection_map(k, ffn_layer=True)
+    return dense_projection_map()
+
 def run():
     from repro.configs.base import ModelConfig, PhantomConfig
     from repro.core.energy import comm_time_us
@@ -44,8 +54,9 @@ def run():
     for impl, strat in (("dense", "tensor_col"), ("phantom", "phantom")):
         cfg = ModelConfig(name=f"fig5a-{impl}", family="ffn",
                           num_layers=L_s, d_model=n_s, ffn_width=n_s,
-                          ffn_depth=L_s, ffn_impl=impl, mlp="relu",
-                          phantom=PhantomConfig(k=k_s))
+                          ffn_depth=L_s, mlp="relu",
+                          phantom=PhantomConfig(k=k_s),
+                          projections=_projections(impl, k_s))
         measured, predicted = measure_ffn_step(cfg, mesh, batch_s)
         wire = measured["collective_wire_bytes_per_device"]
         ratio = wire / predicted["collective_wire_bytes_per_device"]

@@ -15,6 +15,16 @@ import jax.numpy as jnp
 from benchmarks.common import emit, timeit
 
 
+
+def _projections(impl: str, k: int):
+    """Explicit per-site strategy selection for the paper-FFN subject
+    (the deprecated ffn_impl= shim is off-limits in-repo)."""
+    from repro.configs.base import (dense_projection_map,
+                                    phantom_projection_map)
+    if impl == "phantom":
+        return phantom_projection_map(k, ffn_layer=True)
+    return dense_projection_map()
+
 def run():
     from repro.configs.base import ModelConfig, PhantomConfig
     from repro.core.ffn import init_ffn, make_ffn_train_step
@@ -33,8 +43,9 @@ def run():
                             ("phantom", "phantom")):
             cfg = ModelConfig(name=f"fig5bc-{impl}", family="ffn",
                               num_layers=2, d_model=n, ffn_width=n,
-                              ffn_depth=2, ffn_impl=impl, mlp="relu",
-                              phantom=PhantomConfig(k=k))
+                              ffn_depth=2, mlp="relu",
+                              phantom=PhantomConfig(k=k),
+                              projections=_projections(impl, k))
             opt = SGD(0.05)
             step, decls, _ = make_ffn_train_step(cfg, mesh, opt, batch)
             params, opt_state = init_ffn(cfg, mesh, opt)

@@ -22,6 +22,16 @@ from benchmarks.common import emit
 BOUNDARY_BAND = (0.9, 1.1)
 
 
+
+def _projections(impl: str, k: int):
+    """Explicit per-site strategy selection for the paper-FFN subject
+    (the deprecated ffn_impl= shim is off-limits in-repo)."""
+    from repro.configs.base import (dense_projection_map,
+                                    phantom_projection_map)
+    if impl == "phantom":
+        return phantom_projection_map(k, ffn_layer=True)
+    return dense_projection_map()
+
 def run(steps: int = 3):
     from repro.configs.base import (ModelConfig, PhantomConfig,
                                     PipelineConfig)
@@ -39,8 +49,9 @@ def run(steps: int = 3):
     for impl, strat in (("dense", "tensor_col"), ("phantom", "phantom")):
         cfg = ModelConfig(name=f"pipe{n}-{impl}", family="ffn",
                           num_layers=L, d_model=n, ffn_width=n,
-                          ffn_depth=L, ffn_impl=impl, mlp="relu",
+                          ffn_depth=L, mlp="relu",
                           phantom=PhantomConfig(k=k),
+                          projections=_projections(impl, k),
                           pipeline=PipelineConfig(stages=axes.pp),
                           microbatches=M)
         measured, predicted = measure_ffn_pipeline_step(cfg, mesh, batch,

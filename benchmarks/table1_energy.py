@@ -15,6 +15,16 @@ import jax.numpy as jnp
 from benchmarks.common import emit
 
 
+
+def _projections(impl: str, k: int):
+    """Explicit per-site strategy selection for the paper-FFN subject
+    (the deprecated ffn_impl= shim is off-limits in-repo)."""
+    from repro.configs.base import (dense_projection_map,
+                                    phantom_projection_map)
+    if impl == "phantom":
+        return phantom_projection_map(k, ffn_layer=True)
+    return dense_projection_map()
+
 def run():
     from repro.configs.base import ModelConfig, PhantomConfig
     from repro.core.energy import (FRONTIER_A_W, FRONTIER_B_W,
@@ -49,13 +59,14 @@ def run():
         return max_iters
 
     rows = []
-    tp_cfg = ModelConfig(name="tp", family="ffn", num_layers=L, d_model=n,
-                         ffn_width=n, ffn_depth=L, ffn_impl="dense",
-                         mlp="relu", phantom=PhantomConfig(k=4))
+    tp_cfg = ModelConfig(name="tp", family="ffn", num_layers=L,
+                         d_model=n, ffn_width=n, ffn_depth=L, mlp="relu",
+                         phantom=PhantomConfig(k=4),
+                         projections=_projections("dense", 4))
     nu_tp = train_to_target(tp_cfg)
     for k in (4, 8, 16):
-        pp_cfg = tp_cfg.replace(ffn_impl="phantom",
-                                phantom=PhantomConfig(k=k))
+        pp_cfg = tp_cfg.replace(phantom=PhantomConfig(k=k),
+                                projections=_projections("phantom", k))
         nu_pp = train_to_target(pp_cfg)
         rows.append((k, nu_pp, ffn_model_params(pp_cfg, 8)))
 

@@ -14,6 +14,16 @@ from __future__ import annotations
 from benchmarks.common import emit
 
 
+
+def _projections(impl: str, k: int):
+    """Explicit per-site strategy selection for the paper-FFN subject
+    (the deprecated ffn_impl= shim is off-limits in-repo)."""
+    from repro.configs.base import (dense_projection_map,
+                                    phantom_projection_map)
+    if impl == "phantom":
+        return phantom_projection_map(k, ffn_layer=True)
+    return dense_projection_map()
+
 def run(steps: int = 5):
     from repro.configs.base import ModelConfig, PhantomConfig
     from repro.launch.mesh import make_local_mesh
@@ -26,8 +36,9 @@ def run(steps: int = 5):
     for impl, strat in (("dense", "tensor_col"), ("phantom", "phantom")):
         cfg = ModelConfig(name=f"ffn{n}-{impl}", family="ffn",
                           num_layers=L, d_model=n, ffn_width=n,
-                          ffn_depth=L, ffn_impl=impl, mlp="relu",
-                          phantom=PhantomConfig(k=k))
+                          ffn_depth=L, mlp="relu",
+                          phantom=PhantomConfig(k=k),
+                          projections=_projections(impl, k))
         measured, predicted = measure_ffn_step(cfg, mesh, batch,
                                                steps=steps)
         rf = (measured["flops_per_device"]

@@ -16,7 +16,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, PhantomConfig
+from repro.configs.base import (ModelConfig, PhantomConfig,
+                                dense_projection_map,
+                                phantom_projection_map)
 from repro.core.ffn import (abstract_ffn, ffn_model_params, init_ffn,
                             make_ffn_train_step)
 from repro.data.synthetic import TeacherDataset
@@ -33,9 +35,11 @@ def main():
           f"FFN n={n} L={L}, phantom k={k}\n")
 
     for impl in ("dense", "phantom"):
+        projections = (phantom_projection_map(k, ffn_layer=True)
+                       if impl == "phantom" else dense_projection_map())
         cfg = ModelConfig(name=impl, family="ffn", num_layers=L,
                           d_model=n, ffn_width=n, ffn_depth=L,
-                          ffn_impl=impl, mlp="relu",
+                          projections=projections, mlp="relu",
                           phantom=PhantomConfig(k=k))
         opt = AdamW(3e-3, weight_decay=0.0)
         step, decls, opt_decls = make_ffn_train_step(cfg, mesh, opt, batch)

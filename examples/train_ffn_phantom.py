@@ -13,7 +13,9 @@ import argparse
 
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, PhantomConfig
+from repro.configs.base import (ModelConfig, PhantomConfig,
+                                dense_projection_map,
+                                phantom_projection_map)
 from repro.core.energy import (FRONTIER_A_W, FRONTIER_B_W, TPU_PEAK_FLOPS,
                                energy_to_loss, phantom_costs, tp_costs)
 from repro.core.ffn import ffn_model_params, init_ffn, make_ffn_train_step
@@ -51,9 +53,11 @@ def main():
 
     base = dict(family="ffn", num_layers=args.L, d_model=args.n,
                 ffn_width=args.n, ffn_depth=args.L, mlp="relu")
-    tp_cfg = ModelConfig(name="tp", ffn_impl="dense",
+    tp_cfg = ModelConfig(name="tp", projections=dense_projection_map(),
                          phantom=PhantomConfig(k=args.k), **base)
-    pp_cfg = ModelConfig(name="pp", ffn_impl="phantom",
+    pp_cfg = ModelConfig(name="pp",
+                         projections=phantom_projection_map(
+                             args.k, ffn_layer=True),
                          phantom=PhantomConfig(k=args.k), **base)
 
     nu_tp, l_tp = train_to(tp_cfg, mesh, ds, args.batch, args.target,

@@ -12,7 +12,9 @@ os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
 import argparse
 import time
 
-from repro.configs.base import ModelConfig, PhantomConfig, ShapeConfig
+from repro.configs.base import (ModelConfig, PhantomConfig,
+                                ShapeConfig, dense_projection_map,
+                                phantom_projection_map)
 from repro.data.synthetic import LMDataset
 from repro.launch.mesh import make_local_mesh
 from repro.launch.specs import input_specs
@@ -28,7 +30,9 @@ def lm_100m(dense: bool = False) -> ModelConfig:
         name="lm-100m", family="dense", num_layers=8, d_model=512,
         num_heads=8, num_kv_heads=4, d_ff=2048, vocab_size=32_000,
         attn_shard="head", rope="full",
-        phantom=PhantomConfig(k=8, apply_ffn=not dense),
+        phantom=PhantomConfig(k=8),
+        projections=(dense_projection_map() if dense
+                     else phantom_projection_map(8, ffn=True)),
         loss_chunk=256,
     )
 

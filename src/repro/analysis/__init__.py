@@ -1,0 +1,30 @@
+"""Static sharding & energy audit.
+
+A rule engine that proves — without executing anything — that every
+collective in the lowered HLO of each jitted entrypoint is priced by a
+predicted ``CommEvent`` from the executing ``ProjectionStrategy`` /
+pipeline / serving account, and vice versa; plus sharding-hygiene,
+dtype-drift, recompilation-hazard and repo-idiom (AST) rules.  See
+docs/analysis.md for the rule catalog and suppression syntax.
+
+Entry point: ``python -m repro.launch.audit --all`` -> AUDIT_report.json
+(schema ``audit-report/v1``).
+"""
+from repro.analysis.findings import (AUDIT_BASELINE_SCHEMA, ERROR, INFO,
+                                     WARNING, Baseline, Finding,
+                                     apply_baseline, load_baseline)
+from repro.analysis.engine import (AUDIT_SCHEMA, AuditResult, audit_plans,
+                                   run_audit)
+from repro.analysis.rules import PROGRAM_RULES, rule_catalog, run_rules
+from repro.analysis.units import (AuditUnit, PricedCollective,
+                                  build_default_units, ffn_train_unit,
+                                  pipeline_unit, plan_unit, serve_units)
+
+__all__ = [
+    "AUDIT_BASELINE_SCHEMA", "AUDIT_SCHEMA", "ERROR", "INFO", "WARNING",
+    "AuditResult", "AuditUnit", "Baseline", "Finding", "PROGRAM_RULES",
+    "PricedCollective", "apply_baseline", "audit_plans",
+    "build_default_units", "ffn_train_unit", "load_baseline",
+    "pipeline_unit", "plan_unit", "rule_catalog", "run_audit",
+    "run_rules", "serve_units",
+]

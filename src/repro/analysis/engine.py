@@ -1,0 +1,136 @@
+"""Audit orchestration: run every rule, apply the baseline, emit the
+``audit-report/v1`` record.
+
+``run_audit`` is the library entrypoint ``repro.launch.audit`` wraps;
+``audit_plans`` is the planner gate (``launch/plan.py`` drops frontier
+candidates whose audit has active errors, same recheck-loop shape as
+the compiled-HBM check).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.findings import (Baseline, Finding, apply_baseline,
+                                     severity_counts)
+from repro.analysis.rules import run_rules
+from repro.analysis.units import AuditUnit
+
+AUDIT_SCHEMA = "audit-report/v1"
+
+
+@dataclass
+class AuditResult:
+    findings: List[Finding] = field(default_factory=list)   # active
+    suppressed: List[Finding] = field(default_factory=list)
+    stale_suppressions: List[str] = field(default_factory=list)
+    units: List[AuditUnit] = field(default_factory=list)
+    baseline_path: Optional[str] = None
+
+    @property
+    def counts(self) -> Dict[str, int]:
+        return severity_counts(self.findings)
+
+    @property
+    def ok(self) -> bool:
+        """True when nothing ERROR-severity is active (warnings and
+        info report but don't gate)."""
+        return self.counts["error"] == 0
+
+    def as_dict(self) -> dict:
+        return {
+            "schema": AUDIT_SCHEMA,
+            "ok": self.ok,
+            "counts": self.counts,
+            "units": [{
+                "name": u.name, "kind": u.kind, "axes": dict(u.axes),
+                "strict": u.strict, "compute_dtype": u.compute_dtype,
+                "collectives": {
+                    f"{kind}@g{g}": dict(b)
+                    for (kind, g), b in sorted(
+                        u.measured_buckets().items())},
+                "predicted": {
+                    f"{kind}@g{g}": dict(b)
+                    for (kind, g), b in sorted(
+                        u.predicted_buckets().items())},
+                "meta": {k: v for k, v in u.meta.items()
+                         if isinstance(v, (str, int, float, bool))},
+            } for u in self.units],
+            "findings": [f.as_dict() for f in self.findings],
+            "suppressed": [f.as_dict() for f in self.suppressed],
+            "stale_suppressions": list(self.stale_suppressions),
+            "baseline": self.baseline_path,
+        }
+
+    def write(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.as_dict(), f, indent=1)
+            f.write("\n")
+
+    def summary_lines(self) -> List[str]:
+        c = self.counts
+        lines = [f"# audit: {len(self.units)} units, "
+                 f"{c['error']} errors / {c['warning']} warnings / "
+                 f"{c['info']} info "
+                 f"({len(self.suppressed)} baseline-suppressed)"]
+        for f in self.findings:
+            lines.append(f"{f.severity.upper():8s} {f.rule:24s} "
+                         f"{f.unit}: {f.message}")
+        for fp in self.stale_suppressions:
+            lines.append(f"STALE    baseline suppression matches "
+                         f"nothing: {fp}")
+        return lines
+
+
+def run_audit(units: Sequence[AuditUnit], *,
+              baseline: Optional[Baseline] = None,
+              source_root: Optional[str] = None) -> AuditResult:
+    """Program rules over ``units``, plus (when ``source_root`` is
+    given) the AST lint over the repo source, ratcheted by the
+    baseline."""
+    from repro.analysis.lint import lint_sources
+    findings: List[Finding] = []
+    for unit in units:
+        findings.extend(run_rules(unit))
+    if source_root:
+        findings.extend(lint_sources(source_root))
+    baseline = baseline or Baseline()
+    active, suppressed, stale = apply_baseline(findings, baseline)
+    order = {"error": 0, "warning": 1, "info": 2}
+    active.sort(key=lambda f: (order[f.severity], f.fingerprint))
+    return AuditResult(findings=active, suppressed=suppressed,
+                       stale_suppressions=stale, units=list(units),
+                       baseline_path=baseline.path)
+
+
+def audit_plans(plans: Sequence, *, mesh_cache: Optional[dict] = None,
+                baseline: Optional[Baseline] = None) -> Dict[str, dict]:
+    """Audit each planner candidate's lowered entrypoint; returns
+    ``{plan.name: {"ok": bool, "errors": [messages]}}``.  Compiles go
+    through the shared telemetry caches, so a frontier the
+    compiled-HBM check already lowered re-compiles nothing.
+    ``mesh_cache`` maps (dp, tp, pp) -> mesh for the same reason."""
+    from repro.analysis.units import plan_unit
+    from repro.launch.mesh import make_local_mesh
+    mesh_cache = mesh_cache if mesh_cache is not None else {}
+    out: Dict[str, dict] = {}
+    for plan in plans:
+        key = (plan.dp, plan.tp, plan.pp)
+        if key not in mesh_cache:
+            mesh_cache[key] = make_local_mesh(*key)
+        try:
+            unit = plan_unit(plan, mesh_cache[key])
+        except Exception as e:     # unlowerable candidate = audit error
+            out[plan.name] = {"ok": False,
+                              "errors": [f"audit could not lower "
+                                         f"{plan.name}: {e}"]}
+            continue
+        res = run_audit([unit], baseline=baseline)
+        out[plan.name] = {
+            "ok": res.ok,
+            "errors": [f.message for f in res.findings
+                       if f.severity == "error"],
+            "counts": res.counts,
+        }
+    return out

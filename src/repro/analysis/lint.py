@@ -1,0 +1,157 @@
+"""Repo-idiom AST lint: source rules over ``src/repro`` + ``benchmarks``.
+
+Where the program rules audit what the compiler LOWERED, these audit
+what the humans WROTE: parallelism must route through the pinned
+``parallel/compat`` shim, nothing in-repo may call the deprecated
+config shims its own deprecation tests pin, benchmark suites must
+record to the shared ledger, and PRNGs must be explicitly seeded
+(unseeded randomness breaks the measured-vs-predicted reproducibility
+story).  Pure ``ast`` walk — no third-party linter is required at
+runtime (ruff/mypy run as the separate CI lint job).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Tuple
+
+from repro.analysis.findings import ERROR, WARNING, Finding
+
+# the deprecated config-shim surfaces (satellite: in-repo callers are
+# migrated off; only the shim-pinning tests may touch them)
+DEPRECATED_KEYWORDS = ("ffn_impl", "apply_ffn", "apply_attn_proj")
+DEPRECATED_CALLS = ("pp_costs",)
+
+# np.random entry points that are fine when (and only when) seeded
+_SEEDED_FACTORIES = ("default_rng", "RandomState", "SeedSequence",
+                     "Generator")
+
+# files allowed to touch jax's shard_map: the compat shim itself
+_RAW_SHARD_MAP_ALLOW = ("parallel/compat.py",)
+
+SOURCE_RULES: Dict[str, Tuple[str, str, str]] = {
+    # id -> (severity, rationale, short title)
+    "raw-shard-map": (
+        ERROR,
+        "jax.shard_map moved across jax versions; everything must "
+        "import it from repro.parallel.compat",
+        "raw jax shard_map import"),
+    "deprecated-shim": (
+        ERROR,
+        "ffn_impl / PhantomConfig.apply_* / pp_costs are deprecation "
+        "shims kept for external callers; in-repo code uses "
+        "ProjectionMap / phantom_costs",
+        "deprecated shim call"),
+    "ledger-missing": (
+        WARNING,
+        "a benchmark suite that never records to the shared Ledger "
+        "produces numbers the report join can't see",
+        "suite records nothing"),
+    "unseeded-prng": (
+        WARNING,
+        "unseeded RNGs break run-to-run reproducibility of the "
+        "measured-vs-predicted ledger",
+        "unseeded PRNG"),
+}
+
+
+def _attr_chain(node: ast.AST) -> str:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _lint_tree(tree: ast.AST, rel: str) -> List[Finding]:
+    out: List[Finding] = []
+
+    def add(rule: str, line: int, msg: str, key: str):
+        sev = SOURCE_RULES[rule][0]
+        out.append(Finding(rule, sev, rel, f"{rel}:{line}: {msg}",
+                           key=key, detail={"line": line}))
+
+    allow_shard_map = rel.replace(os.sep, "/").endswith(
+        _RAW_SHARD_MAP_ALLOW)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and not allow_shard_map:
+            mod = node.module or ""
+            names = [a.name for a in node.names]
+            if "shard_map" in mod or (mod.startswith("jax")
+                                      and "shard_map" in names):
+                add("raw-shard-map", node.lineno,
+                    f"imports shard_map from {mod!r} instead of "
+                    f"repro.parallel.compat", key="import")
+        elif isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            leaf = chain.rsplit(".", 1)[-1]
+            if not allow_shard_map and chain.startswith("jax") \
+                    and leaf == "shard_map":
+                add("raw-shard-map", node.lineno,
+                    f"calls {chain} directly instead of "
+                    f"repro.parallel.compat.shard_map", key="call")
+            if leaf in DEPRECATED_CALLS:
+                add("deprecated-shim", node.lineno,
+                    f"calls deprecated {leaf}()", key=leaf)
+            for kw in node.keywords:
+                if kw.arg in DEPRECATED_KEYWORDS:
+                    add("deprecated-shim", node.lineno,
+                        f"passes deprecated keyword {kw.arg}= "
+                        f"(use ModelConfig.projections)",
+                        key=f"kw:{kw.arg}")
+            if chain.startswith(("np.random.", "numpy.random.")):
+                if leaf in _SEEDED_FACTORIES:
+                    if not node.args and not node.keywords:
+                        add("unseeded-prng", node.lineno,
+                            f"{chain}() without a seed", key=leaf)
+                elif leaf != "Generator":
+                    add("unseeded-prng", node.lineno,
+                        f"{chain}() uses numpy's global unseeded "
+                        f"generator (use np.random.default_rng(seed))",
+                        key=leaf)
+    return out
+
+
+def _is_bench_suite(rel: str) -> bool:
+    norm = rel.replace(os.sep, "/")
+    return norm.startswith("benchmarks/") and norm.endswith(".py") \
+        and os.path.basename(norm) not in ("common.py", "run.py",
+                                           "__init__.py")
+
+
+def lint_file(path: str, rel: str) -> List[Finding]:
+    with open(path) as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=rel)
+    except SyntaxError as e:
+        return [Finding("deprecated-shim", ERROR, rel,
+                        f"{rel}: unparseable: {e}", key="syntax")]
+    out = _lint_tree(tree, rel)
+    if _is_bench_suite(rel) and not any(
+            tok in src for tok in ("emit(", "get_ledger", "record_to",
+                                   ".record(")):
+        out.append(Finding(
+            "ledger-missing", WARNING, rel,
+            f"{rel}: benchmark suite never records to a ledger "
+            f"(benchmarks.common.emit)", key="ledger"))
+    return out
+
+
+def lint_sources(root: str, subdirs=("src/repro", "benchmarks")
+                 ) -> List[Finding]:
+    """Walk the repo's own source (tests are out of scope — the shim-
+    pinning tests must keep calling the shims)."""
+    out: List[Finding] = []
+    for sub in subdirs:
+        base = os.path.join(root, sub)
+        for dirpath, _dirnames, filenames in os.walk(base):
+            for fname in sorted(filenames):
+                if not fname.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fname)
+                rel = os.path.relpath(path, root)
+                out.extend(lint_file(path, rel))
+    return out

@@ -1,0 +1,276 @@
+"""Program rules: checks over one lowered entrypoint (an ``AuditUnit``).
+
+Every rule is a pure function ``rule(unit) -> List[Finding]`` registered
+in ``PROGRAM_RULES``; ``run_rules`` applies them all.  Rules consume the
+PARSED artifacts (``CompiledCosts.collectives`` buckets, the closed
+jaxpr, the config objects) — never the raw entrypoint — so seeded-
+violation fixtures can feed synthetic HLO through the real parser and
+prove each rule fires (tests/test_audit_rules.py).
+"""
+from __future__ import annotations
+
+import copy
+from typing import Callable, Dict, List
+
+from repro.analysis.findings import ERROR, INFO, WARNING, Finding
+from repro.analysis.units import AuditUnit
+
+# dtype-drift: bf16->f32 converts below this many elements are scalar
+# bookkeeping (loss terms, norms), not a path-wide upcast
+DTYPE_DRIFT_MIN_ELEMENTS = 65_536
+# sharding-hygiene: lowered live memory may exceed the napkin estimate
+# by fusion temporaries; past this factor something is replicated
+MEMORY_BLOWUP_FACTOR = 8.0
+
+
+def _demote(severity: str, strict: bool) -> str:
+    """Loose units (serving) report one level below strict units."""
+    if strict:
+        return severity
+    return {ERROR: WARNING, WARNING: INFO}.get(severity, INFO)
+
+
+# ---------------------------------------------------------------------------
+# R1: collective accounting
+# ---------------------------------------------------------------------------
+
+def rule_collective_accounting(unit: AuditUnit) -> List[Finding]:
+    """Every lowered collective must match a predicted ``CommEvent``
+    bucket by (kind, mesh-axis size) and per-rank message floats, and
+    vice versa.  Unpriced measured traffic and predicted-but-never-
+    lowered (phantom) traffic are errors; sub-``small_m_floats``
+    mismatches are the latency-priced noise floor (scalar loss psums,
+    the tiny gathers XLA relowers as all-reduces) and report as info."""
+    out: List[Finding] = []
+    measured = unit.measured_buckets()
+    predicted = unit.predicted_buckets()
+    for key in sorted(set(measured) | set(predicted)):
+        kind, group = key
+        skey = f"{kind}@g{group}"
+        m = measured.get(key)
+        p = predicted.get(key)
+        if p is None:
+            sev = INFO if m["m_floats"] < unit.small_m_floats \
+                else _demote(ERROR, unit.strict)
+            out.append(Finding(
+                "collective-accounting", sev, unit.name,
+                f"unpriced collective: lowered HLO issues {kind} over a "
+                f"group of {group} ({m['count']:.0f} ops, "
+                f"{m['m_floats']:.0f} floats/rank) but no CommEvent "
+                f"prices it", key=skey,
+                detail={"measured": m, "predicted": None}))
+            continue
+        if m is None:
+            sev = INFO if p["m_floats"] < unit.small_m_floats \
+                else _demote(ERROR, unit.strict)
+            out.append(Finding(
+                "collective-accounting", sev, unit.name,
+                f"phantom prediction: the account prices {kind} over a "
+                f"group of {group} ({p['m_floats']:.0f} floats/rank) "
+                f"but the lowered HLO never issues it", key=skey,
+                detail={"measured": None, "predicted": p}))
+            continue
+        hi = max(m["m_floats"], p["m_floats"])
+        rel = abs(m["m_floats"] - p["m_floats"]) / hi if hi else 0.0
+        if rel > unit.wire_rtol:
+            sev = INFO if hi < unit.small_m_floats \
+                else _demote(ERROR, unit.strict)
+            out.append(Finding(
+                "collective-accounting", sev, unit.name,
+                f"mispriced collective: {kind} over a group of {group} "
+                f"moves {m['m_floats']:.0f} floats/rank lowered vs "
+                f"{p['m_floats']:.0f} predicted "
+                f"(rel {rel:.2f} > rtol {unit.wire_rtol})",
+                key=f"{skey}:bytes",
+                detail={"measured": m, "predicted": p, "rel": rel}))
+        elif m["count"] != p["count"]:
+            out.append(Finding(
+                "collective-accounting", INFO, unit.name,
+                f"{kind} over a group of {group}: {m['count']:.0f} "
+                f"lowered ops vs {p['count']:.0f} predicted events "
+                f"(bytes agree — fusion/splitting only)",
+                key=f"{skey}:count",
+                detail={"measured": m, "predicted": p}))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R2: sharding hygiene
+# ---------------------------------------------------------------------------
+
+def rule_sharding_hygiene(unit: AuditUnit) -> List[Finding]:
+    """Collectives must run over mesh-axis-shaped groups (a group size
+    that is no product of the unit's axes means a reshard the
+    ``ProjectionSpec`` never implied), and the lowered live memory must
+    stay within ``MEMORY_BLOWUP_FACTOR`` of the planner napkin estimate
+    (past that something is accidentally replicated)."""
+    out: List[Finding] = []
+    sizes = [max(int(v), 1) for v in unit.axes.values()]
+    legal = {1}
+    for s in sizes:
+        legal |= {g * s for g in list(legal)}
+    for (kind, group), m in sorted(unit.measured_buckets().items()):
+        if group not in legal:
+            out.append(Finding(
+                "sharding-hygiene", _demote(WARNING, unit.strict),
+                unit.name,
+                f"{kind} over a group of {group}, which is no product "
+                f"of the mesh axes {unit.axes} — a reshard the "
+                f"ProjectionSpec does not imply", key=f"group{group}",
+                detail={"kind": kind, "group": group,
+                        "axes": dict(unit.axes), "measured": m}))
+    if unit.napkin_bytes:
+        mem = unit.costs.memory or {}
+        live = sum(float(mem.get(f) or 0.0)
+                   for f in ("argument_bytes", "temp_bytes",
+                             "output_bytes"))
+        if live > MEMORY_BLOWUP_FACTOR * unit.napkin_bytes:
+            out.append(Finding(
+                "sharding-hygiene", _demote(WARNING, unit.strict),
+                unit.name,
+                f"live memory blowup: lowered buffers are "
+                f"{live / 2**20:.1f} MiB vs the planner napkin estimate "
+                f"{unit.napkin_bytes / 2**20:.1f} MiB "
+                f"(> {MEMORY_BLOWUP_FACTOR:.0f}x — replication?)",
+                key="memory-blowup",
+                detail={"live_bytes": live,
+                        "napkin_bytes": unit.napkin_bytes}))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R3: dtype drift
+# ---------------------------------------------------------------------------
+
+def _walk_jaxpr(jaxpr):
+    """Yield every eqn in a (closed) jaxpr, descending into sub-jaxprs
+    (scan/while/cond/pjit bodies)."""
+    core = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in core.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            sub = v if isinstance(v, (list, tuple)) else (v,)
+            for s in sub:
+                if hasattr(s, "eqns") or hasattr(s, "jaxpr"):
+                    yield from _walk_jaxpr(s)
+
+
+def rule_dtype_drift(unit: AuditUnit) -> List[Finding]:
+    """In bf16 compute paths, a large bf16 -> f32 convert means some
+    operator runs (and moves memory) at double width — drift the energy
+    account never priced.  Scalar/small converts (losses, norm stats)
+    are exempt below ``DTYPE_DRIFT_MIN_ELEMENTS``."""
+    if unit.jaxpr is None or "bf" not in str(unit.compute_dtype):
+        return []
+    out: List[Finding] = []
+    seen = set()
+    for eqn in _walk_jaxpr(unit.jaxpr):
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        try:
+            src = eqn.invars[0].aval
+            dst = eqn.outvars[0].aval
+        except Exception:
+            continue
+        if str(src.dtype) != "bfloat16" or str(dst.dtype) != "float32":
+            continue
+        n = 1
+        for d in getattr(dst, "shape", ()):
+            n *= int(d)
+        if n < DTYPE_DRIFT_MIN_ELEMENTS:
+            continue
+        key = f"upcast{tuple(dst.shape)}"
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(Finding(
+            "dtype-drift", WARNING, unit.name,
+            f"f32 upcast inside a bf16 path: convert bf16 -> f32 of "
+            f"shape {tuple(dst.shape)} ({n} elements)", key=key,
+            detail={"shape": list(dst.shape), "elements": n}))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R4: recompilation hazards
+# ---------------------------------------------------------------------------
+
+def rule_recompilation_hazard(unit: AuditUnit) -> List[Finding]:
+    """The config objects an entrypoint is built from must be hashable
+    AND hash-stable under copy (frozen dataclasses are; anything
+    carrying a list/dict/array is not) — an unstable static arg makes
+    every jit/telemetry cache keyed on it miss, recompiling the same
+    program forever."""
+    out: List[Finding] = []
+    for name, obj in unit.static_args.items():
+        try:
+            h = hash(obj)
+        except TypeError as e:
+            out.append(Finding(
+                "recompilation-hazard", ERROR, unit.name,
+                f"unhashable static arg {name!r} "
+                f"({type(obj).__name__}): {e}", key=name,
+                detail={"type": type(obj).__name__}))
+            continue
+        try:
+            clone = copy.deepcopy(obj)
+        except Exception:
+            continue
+        if hash(clone) != h or clone != obj:
+            out.append(Finding(
+                "recompilation-hazard", ERROR, unit.name,
+                f"hash-unstable static arg {name!r} "
+                f"({type(obj).__name__}): an equal copy hashes "
+                f"differently, so caches keyed on it always miss",
+                key=name, detail={"type": type(obj).__name__}))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+PROGRAM_RULES: Dict[str, Callable[[AuditUnit], List[Finding]]] = {
+    "collective-accounting": rule_collective_accounting,
+    "sharding-hygiene": rule_sharding_hygiene,
+    "dtype-drift": rule_dtype_drift,
+    "recompilation-hazard": rule_recompilation_hazard,
+}
+
+
+def run_rules(unit: AuditUnit) -> List[Finding]:
+    out: List[Finding] = []
+    for rule in PROGRAM_RULES.values():
+        out.extend(rule(unit))
+    return out
+
+
+def rule_catalog() -> List[dict]:
+    """Every rule (program + AST) with its severity and rationale —
+    the docs/analysis.md table is generated from this."""
+    from repro.analysis.lint import SOURCE_RULES
+    cat = [
+        {"id": "collective-accounting", "severity": ERROR,
+         "kind": "program",
+         "rationale": "every HLO collective must match a predicted "
+                      "CommEvent by kind, mesh axis, and bytes — and "
+                      "vice versa; unpriced traffic is unpriced energy"},
+        {"id": "sharding-hygiene", "severity": WARNING,
+         "kind": "program",
+         "rationale": "collectives over non-mesh-axis groups are "
+                      "resharding the ProjectionSpec never implied; "
+                      "live memory far past the planner napkin estimate "
+                      "is accidental replication"},
+        {"id": "dtype-drift", "severity": WARNING, "kind": "program",
+         "rationale": "large bf16->f32 converts inside bf16 paths run "
+                      "operators at double width the energy account "
+                      "never priced"},
+        {"id": "recompilation-hazard", "severity": ERROR,
+         "kind": "program",
+         "rationale": "unhashable or hash-unstable entrypoint configs "
+                      "defeat every compile cache"},
+    ]
+    cat += [{"id": rid, "severity": sev, "kind": "source",
+             "rationale": why} for rid, (sev, why, _) in
+            SOURCE_RULES.items()]
+    return cat

@@ -1,0 +1,330 @@
+"""Audit units: one lowered jitted entrypoint + its predicted account.
+
+A unit is everything the program rules need about ONE entrypoint,
+gathered WITHOUT executing it: the optimized HLO text and
+``CompiledCosts`` (through the shared telemetry caches, so an audit
+after a planning pass re-parses nothing), the closed jaxpr, the list of
+``PricedCollective`` records the executing ``ProjectionStrategy`` /
+pipeline / serving account predicts, the mesh-axis sizes, and the
+config objects the entrypoint was built from (the recompilation-hazard
+rule checks those are hashable and hash-stable).
+
+Builders cover every shipped entrypoint family:
+
+  * ``ffn_train_unit``  — the paper-FFN fwd+bwd probe step
+  * ``pipeline_unit``   — the 1F1B pipelined probe step
+  * ``serve_units``     — the serving engine's prefill + decode fns
+  * ``plan_unit``       — one planner candidate (train or pipeline)
+  * ``build_default_units`` — the ``audit --all`` set
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.telemetry.compiled import CompiledCosts, HLO_TO_PAPER
+
+# below this per-rank message size (paper float units) a bucket mismatch
+# is bookkeeping, not energy: loss scalars, masks, and the tiny gathers
+# XLA freely relowers as all-reduces (serve_bench documents the latter)
+SMALL_M_FLOATS = 4096.0
+
+
+@dataclass(frozen=True)
+class PricedCollective:
+    """One predicted collective bucket: ``count`` occurrences of a
+    ``kind`` collective moving ``m_floats`` per-rank floats each
+    (CommEvent units) over a mesh axis of size ``group``."""
+    kind: str          # paper kind: all_gather | all_reduce | ...
+    m_floats: float
+    group: int
+    count: float = 1.0
+
+    @property
+    def total_m_floats(self) -> float:
+        return self.m_floats * self.count
+
+
+@dataclass
+class AuditUnit:
+    """One lowered entrypoint, ready for the program rules."""
+
+    name: str                   # e.g. "ffn_train/paper-ffn-smoke/tp8"
+    kind: str                   # ffn_train | pipeline | serve_* | plan
+    hlo_text: str = ""
+    costs: CompiledCosts = field(default_factory=CompiledCosts)
+    jaxpr: Optional[object] = None          # ClosedJaxpr when captured
+    predicted: List[PricedCollective] = field(default_factory=list)
+    axes: Dict[str, int] = field(default_factory=dict)  # tp/dp/pp sizes
+    compute_dtype: str = "float32"
+    static_args: Dict[str, object] = field(default_factory=dict)
+    # strict units pin the measured/predicted account (probe-grade, the
+    # wire-ratio-1.00 paths); loose units (serving: bf16 wire vs float
+    # units, latency-dominated small messages) downgrade bucket errors
+    # one severity level
+    strict: bool = True
+    wire_rtol: float = 0.05
+    small_m_floats: float = SMALL_M_FLOATS
+    napkin_bytes: Optional[float] = None    # planner live-memory estimate
+    meta: Dict[str, object] = field(default_factory=dict)
+
+    def device_count(self) -> int:
+        n = 1
+        for v in self.axes.values():
+            n *= max(int(v), 1)
+        return n
+
+    def measured_buckets(self) -> Dict[tuple, Dict[str, float]]:
+        """Measured traffic bucketed by (paper kind, group size).
+        Degenerate single-member groups (XLA lowers axis-size-1 psums
+        as {{0},{1},..} collectives) move zero wire bytes and are
+        dropped, mirroring ``predicted_buckets``."""
+        out: Dict[tuple, Dict[str, float]] = {}
+        for op, rec in self.costs.collectives.items():
+            paper = HLO_TO_PAPER.get(op, op)
+            for g, grec in rec.get("groups", {}).items():
+                if int(g) <= 1:
+                    continue
+                key = (paper, int(g))
+                b = out.setdefault(key, {"count": 0.0, "m_floats": 0.0})
+                b["count"] += grec["count"]
+                b["m_floats"] += grec["m_floats"]
+        return out
+
+    def predicted_buckets(self) -> Dict[tuple, Dict[str, float]]:
+        """Predicted traffic in the same (kind, group) buckets —
+        degenerate single-device groups carry no wire traffic and are
+        dropped, matching what XLA lowers."""
+        out: Dict[tuple, Dict[str, float]] = {}
+        for pc in self.predicted:
+            if pc.group <= 1 or pc.total_m_floats <= 0.0:
+                continue
+            key = (pc.kind, int(pc.group))
+            b = out.setdefault(key, {"count": 0.0, "m_floats": 0.0})
+            b["count"] += pc.count
+            b["m_floats"] += pc.total_m_floats
+        return out
+
+
+def _lower_unit(fn, *args, default_group: int, with_jaxpr: bool = True):
+    """Lower + compile (both cached) + parse one entrypoint; returns
+    (hlo_text, CompiledCosts, jaxpr)."""
+    import jax
+    from repro.telemetry.compiled import analyze_lowered
+    lowered = fn.lower(*args)
+    costs, compiled = analyze_lowered(lowered, default_group=default_group,
+                                      keep_compiled=True)
+    jaxpr = None
+    if with_jaxpr:
+        try:
+            jaxpr = jax.make_jaxpr(fn)(*args)
+        except Exception:
+            jaxpr = None        # jaxpr rules just skip this unit
+    return compiled.as_text(), costs, jaxpr
+
+
+def _loss_psum(devices: int) -> PricedCollective:
+    # the probes' scalar loss psum over ALL mesh axes
+    return PricedCollective("all_reduce", 1.0, devices, 1.0)
+
+
+def ffn_train_unit(cfg, mesh, global_batch: int) -> AuditUnit:
+    """The paper-FFN fwd+bwd probe step (``telemetry/probe.py``) —
+    the entrypoint whose ledger wire ratio pins at 1.00."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.ffn import ffn_strategy
+    from repro.parallel.axes import MeshAxes
+    from repro.parallel.params import abstract
+    from repro.telemetry.probe import make_ffn_probe_step
+
+    axes = MeshAxes.from_mesh(mesh)
+    tp, dp = axes.tp, axes.dp
+    fn, decls = make_ffn_probe_step(cfg, mesh, global_batch)
+    x_sds = jax.ShapeDtypeStruct((global_batch, cfg.ffn_width),
+                                 jnp.float32)
+    hlo, costs, jaxpr = _lower_unit(fn, abstract(decls), x_sds, x_sds,
+                                    default_group=tp)
+
+    st = ffn_strategy(cfg, tp)
+    L = cfg.num_layers
+    # layer collectives see the PER-DP-SHARD rows (each data-parallel
+    # replica runs the schedule on its own batch slice)
+    rows_local = global_batch / max(dp, 1)
+    predicted = [PricedCollective(ev.collective, ev.m_floats, tp, L)
+                 for ev in st.comm_events(rows_local)]
+    if dp > 1:
+        # grad sync: one psum per param tensor (W and b per layer)
+        m_grads = L * st.param_count() / max(tp, 1)
+        predicted.append(PricedCollective(
+            "all_reduce", m_grads / (2 * L), dp, 2.0 * L))
+    predicted.append(_loss_psum(dp * tp))
+
+    return AuditUnit(
+        name=f"ffn_train/{cfg.name}/dp{dp}tp{tp}",
+        kind="ffn_train", hlo_text=hlo, costs=costs, jaxpr=jaxpr,
+        predicted=predicted, axes={"dp": dp, "tp": tp, "pp": 1},
+        compute_dtype="float32",
+        static_args={"cfg": cfg, "strategy_spec": cfg.projection_spec(
+            "ffn_layer")},
+        strict=True, wire_rtol=0.05,
+        meta={"strategy": st.kind, "global_batch": global_batch},
+    )
+
+
+def pipeline_unit(cfg, mesh, global_batch: int) -> AuditUnit:
+    """The 1F1B pipelined paper-FFN probe step — the entrypoint whose
+    boundary_wire ratio pins at 1.0000."""
+    import jax
+    import jax.numpy as jnp
+    from repro.parallel.axes import MeshAxes
+    from repro.parallel.params import abstract
+    from repro.telemetry.predict import pipeline_ffn_step_events
+    from repro.telemetry.probe import make_ffn_pipeline_probe_step
+
+    axes = MeshAxes.from_mesh(mesh)
+    pp, tp, dp = axes.pp, axes.tp, axes.dp
+    fn, decls = make_ffn_pipeline_probe_step(cfg, mesh, global_batch)
+    x_sds = jax.ShapeDtypeStruct((global_batch, cfg.ffn_width),
+                                 jnp.float32)
+    hlo, costs, jaxpr = _lower_unit(fn, abstract(decls), x_sds, x_sds,
+                                    default_group=tp)
+
+    acct = pipeline_ffn_step_events(cfg, pp, tp, dp, global_batch,
+                                    executed=True)
+    predicted = [PricedCollective(ev.collective, ev.m_floats, g, n)
+                 for ev, g, n in acct["events"]]
+    predicted.append(_loss_psum(dp * tp * pp))
+
+    return AuditUnit(
+        name=f"pipeline/{cfg.name}/pp{pp}dp{dp}tp{tp}",
+        kind="pipeline", hlo_text=hlo, costs=costs, jaxpr=jaxpr,
+        predicted=predicted, axes={"dp": dp, "tp": tp, "pp": pp},
+        compute_dtype="float32",
+        static_args={"cfg": cfg, "pipeline": cfg.pipeline},
+        strict=True, wire_rtol=0.05,
+        meta={"strategy": acct["strategy"].kind,
+              "microbatches": acct["schedule"].microbatches,
+              "ticks": acct["schedule"].num_ticks,
+              "global_batch": global_batch},
+    )
+
+
+def serve_units(sc, mesh=None) -> List[AuditUnit]:
+    """The serving engine's own prefill and decode entrypoints for one
+    ``ServeConfig`` — lowered exactly the way ``serve/router.run_config``
+    lowers them for the measured ledger rows, priced by
+    ``serve_step_events`` (the account ``serve_step_prediction`` sums).
+
+    Serving units are LOOSE: the wire unit mismatch (bf16 messages count
+    half a float) and XLA's freedom to relower tiny gathers as
+    all-reduces put exact bucket matching out of reach — the energy-
+    ratio CI band for this path is [0.5, 2.0], and the unit's tolerances
+    mirror that."""
+    import jax
+    import numpy as np
+    from repro.launch.mesh import make_local_mesh
+    from repro.models.model import model_decls
+    from repro.parallel.axes import MeshAxes
+    from repro.parallel.params import abstract
+    from repro.serve.engine import _add_modality_stubs, make_serve_fns
+    from repro.configs.base import ShapeConfig
+    from repro.telemetry.predict import serve_step_events
+
+    cfg = sc.model_config()
+    mesh = mesh or make_local_mesh(sc.dp, sc.tp)
+    axes = MeshAxes.from_mesh(mesh)
+    shape = ShapeConfig("serve", sc.max_len, sc.slots, "decode")
+    prefill_fn, decode_fn, cache_sds, _ = make_serve_fns(cfg, mesh, shape)
+    p_sds = abstract(model_decls(cfg, axes))
+
+    S = sc.page_size            # one prefill bucket, the smallest
+    batch = _add_modality_stubs(
+        cfg, {"tokens": jax.ShapeDtypeStruct((sc.slots, S), np.int32)},
+        sc.slots, S)
+    tok_sds = jax.ShapeDtypeStruct((sc.slots, 1), np.int32)
+    pos_sds = jax.ShapeDtypeStruct((sc.slots,), np.int32)
+
+    units = []
+    for phase, fn, args, rows in (
+            ("prefill", prefill_fn, (p_sds, batch), sc.slots * S),
+            ("decode", decode_fn, (p_sds, cache_sds, tok_sds, pos_sds),
+             sc.slots)):
+        hlo, costs, jaxpr = _lower_unit(fn, *args, default_group=sc.tp)
+        events = serve_step_events(cfg, sc.tp, rows, phase,
+                                   sequences=sc.slots, dp=sc.dp)
+        predicted = [PricedCollective(ev.collective, ev.m_floats,
+                                      sc.tp, n) for ev, n in events]
+        units.append(AuditUnit(
+            name=f"serve_{phase}/{sc.name}",
+            kind=f"serve_{phase}", hlo_text=hlo, costs=costs,
+            jaxpr=jaxpr, predicted=predicted,
+            axes={"dp": sc.dp, "tp": sc.tp, "pp": 1},
+            compute_dtype=cfg.dtype,
+            static_args={"cfg": cfg, "serve_config": sc},
+            strict=False, wire_rtol=0.75,
+            small_m_floats=4.0 * SMALL_M_FLOATS,
+            meta={"rows": rows, "phase": phase, "slots": sc.slots,
+                  "prefill_len": S},
+        ))
+    return units
+
+
+def plan_unit(plan, mesh=None) -> AuditUnit:
+    """Audit one planner candidate: its probe entrypoint on a local mesh
+    of the candidate's own (dp, tp, pp) shape.  Shares the telemetry
+    caches with ``planner.constraints.compiled_hbm_bytes``, so auditing
+    a frontier the planner already compiled re-lowers nothing."""
+    from repro.launch.mesh import make_local_mesh
+    from repro.planner.constraints import hbm_bytes_estimate
+
+    cfg = plan.model_config()
+    mesh = mesh or make_local_mesh(plan.dp, plan.tp, plan.pp)
+    if plan.pp > 1:
+        unit = pipeline_unit(cfg, mesh, plan.batch)
+    else:
+        unit = ffn_train_unit(cfg, mesh, plan.batch)
+    unit.name = f"plan/{plan.name}"
+    unit.kind = "plan"
+    unit.napkin_bytes = float(hbm_bytes_estimate(plan))
+    unit.meta["plan"] = plan.name
+    return unit
+
+
+def build_default_units(*, arch: str = "qwen2.5-14b") -> List[AuditUnit]:
+    """The ``audit --all`` unit set: every shipped entrypoint family on
+    the 8-device CPU host — tensor and phantom FFN train probes (pure-tp
+    and dp×tp meshes), the 1F1B pipeline probe on a pp×dp×tp mesh, and
+    a serving engine's prefill/decode pair (tensor and phantom).
+
+    The train probes run at width 1024 (not the width-128 smoke size):
+    the audited per-layer messages must clear the small-message noise
+    floor, or every accounting error would demote to info."""
+    from repro.configs.base import (dense_projection_map, get_config,
+                                    phantom_projection_map)
+    from repro.launch.mesh import make_local_mesh
+    from repro.serve.router import ServeConfig
+
+    units: List[AuditUnit] = []
+
+    base = get_config("paper-ffn-4k", smoke=True).replace(
+        d_model=1024, ffn_width=1024)
+    dense = base.replace(name="audit-ffn-tensor",
+                         projections=dense_projection_map())
+    phantom = base.replace(
+        name="audit-ffn-phantom",
+        projections=phantom_projection_map(8, ffn_layer=True))
+    units.append(ffn_train_unit(dense, make_local_mesh(1, 8), 64))
+    units.append(ffn_train_unit(phantom, make_local_mesh(1, 8), 64))
+    units.append(ffn_train_unit(phantom, make_local_mesh(2, 4), 64))
+
+    pipe = phantom.replace(
+        name="audit-ffn-pipe",
+        pipeline=phantom.pipeline.__class__(stages=2), microbatches=4)
+    units.append(pipeline_unit(pipe, make_local_mesh(2, 2, 2), 64))
+
+    for impl in ("tensor", "phantom"):
+        sc = ServeConfig(arch=arch, impl=impl, dp=1, tp=4, slots=4,
+                         max_len=64, page_size=16)
+        units.extend(serve_units(sc))
+    return units

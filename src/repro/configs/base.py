@@ -163,6 +163,57 @@ class ProjectionMap:
         return getattr(self, site) or self.default
 
 
+def dense_projection_map() -> ProjectionMap:
+    """Every site at its natural dense (Megatron-TP) strategy — the
+    explicit replacement for the old ``ffn_impl="dense"`` /
+    ``apply_*=False`` combination (shadows the legacy shim)."""
+    return ProjectionMap(default=ProjectionSpec(kind="tensor"))
+
+
+def with_phantom_overrides(cfg: "ModelConfig", **kw) -> "ModelConfig":
+    """Apply ``PhantomConfig``-style overrides (``k``, ``variant``,
+    ``include_self_term``) to the legacy phantom sub-config AND to every
+    phantom-family entry of the explicit ``ProjectionMap`` — the CLI
+    ``--variant`` / ``phantom.k`` override path, which must keep working
+    now that shipped configs carry explicit per-site specs."""
+    spec_kw = {key: v for key, v in kw.items()
+               if key in ("k", "variant", "include_self_term")}
+    entries = {}
+    for f in dataclasses.fields(ProjectionMap):
+        spec = getattr(cfg.projections, f.name)
+        if spec is not None and spec.kind in PHANTOM_KINDS and spec_kw:
+            spec = dataclasses.replace(spec, **spec_kw)
+        entries[f.name] = spec
+    return cfg.replace(phantom=dataclasses.replace(cfg.phantom, **kw),
+                       projections=ProjectionMap(**entries))
+
+
+def phantom_projection_map(k: int, *, variant: str = "fused",
+                           include_self_term: bool = False,
+                           ffn: bool = False, attn: bool = False,
+                           ffn_layer: bool = False) -> ProjectionMap:
+    """The explicit per-site ``ProjectionMap`` equivalent of the
+    deprecated ``ffn_impl`` / ``PhantomConfig.apply_*`` flags: phantom
+    at the selected site families, the natural dense strategy
+    everywhere else (``default="tensor"`` shadows the legacy shim
+    completely, so configs built this way never consult it).
+
+      ffn_layer  the paper square-FFN site (old ``ffn_impl="phantom"``)
+      ffn        the MLP sites           (old ``apply_ffn=True``)
+      attn       QKV/O + SSM in/out      (old ``apply_attn_proj=True``)
+    """
+    ph = ProjectionSpec(kind="phantom", k=k, variant=variant,
+                        include_self_term=include_self_term)
+    entries: dict = {"default": ProjectionSpec(kind="tensor")}
+    if ffn_layer:
+        entries["ffn_layer"] = ph
+    if ffn:
+        entries.update({s: ph for s in _FFN_SITES})
+    if attn:
+        entries.update({s: ph for s in _PROJ_LEGACY_ATTN_SITES})
+    return ProjectionMap(**entries)
+
+
 # ---------------------------------------------------------------------------
 # model config
 # ---------------------------------------------------------------------------
@@ -262,17 +313,30 @@ class ModelConfig:
 
     def _legacy_projection_spec(self, site: str) -> ProjectionSpec:
         """Deprecation shim: expand ffn_impl / PhantomConfig.apply_* flags
-        into the equivalent per-site spec."""
+        into the equivalent per-site spec.  Warns when the shim ACTIVELY
+        selects phantom (a plain dense config hitting the fallback is
+        not using the deprecated surface, just its default)."""
         pp = self.phantom
-        ph = ProjectionSpec(kind="phantom", k=pp.k, variant=pp.variant,
-                            include_self_term=pp.include_self_term)
+
+        def ph() -> ProjectionSpec:
+            import warnings
+            warnings.warn(
+                f"config {self.name!r} selects phantom at site {site!r} "
+                f"through the deprecated ffn_impl/PhantomConfig.apply_* "
+                f"shim; set ModelConfig.projections (e.g. "
+                f"phantom_projection_map) instead",
+                DeprecationWarning, stacklevel=4)
+            return ProjectionSpec(kind="phantom", k=pp.k,
+                                  variant=pp.variant,
+                                  include_self_term=pp.include_self_term)
+
         if site == "ffn_layer":
-            return ph if self.ffn_impl == "phantom" else ProjectionSpec()
+            return ph() if self.ffn_impl == "phantom" else ProjectionSpec()
         if site in _FFN_SITES and pp.apply_ffn \
                 and self.ffn_impl != "dense_force":
-            return ph
+            return ph()
         if site in _PROJ_LEGACY_ATTN_SITES and pp.apply_attn_proj:
-            return ph
+            return ph()
         return ProjectionSpec()
 
     def stage_projection_spec(self, stage: int,

@@ -3,7 +3,7 @@
 28L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=65024 — 2d RoPE (rotary on
 half the head dims), GQA.  [arXiv:2406.12793]
 """
-from repro.configs.base import ModelConfig, PhantomConfig
+from repro.configs.base import phantom_projection_map, ModelConfig, PhantomConfig
 
 
 def config() -> ModelConfig:
@@ -19,7 +19,8 @@ def config() -> ModelConfig:
         attn_shard="head",
         rope="partial",
         rope_fraction=0.5,
-        phantom=PhantomConfig(k=16, apply_ffn=True),
+        phantom=PhantomConfig(k=16),
+        projections=phantom_projection_map(16, ffn=True),
         qkv_bias=True,
     )
 
@@ -37,7 +38,8 @@ def smoke_config() -> ModelConfig:
         attn_shard="head",
         rope="partial",
         rope_fraction=0.5,
-        phantom=PhantomConfig(k=4, apply_ffn=True),
+        phantom=PhantomConfig(k=4),
+        projections=phantom_projection_map(4, ffn=True),
         qkv_bias=True,
         loss_chunk=64,
     )

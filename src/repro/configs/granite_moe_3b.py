@@ -7,7 +7,7 @@ Notes (DESIGN.md §5): 40 % 16 != 0 -> experts tensor-partitioned (each
 expert's d_ff sharded over the model axis).  24 heads % 16 != 0 -> ring
 (sequence-sharded) attention.
 """
-from repro.configs.base import ModelConfig, MoEConfig, PhantomConfig
+from repro.configs.base import phantom_projection_map, ModelConfig, MoEConfig, PhantomConfig
 
 
 def config() -> ModelConfig:
@@ -27,7 +27,8 @@ def config() -> ModelConfig:
         # ring attention keeps activations sequence-sharded (no cross-rank
         # feature blocks to factorize) and the experts are tiny (d_ff=512)
         # tensor-partitioned FFNs.  The arch runs without the technique.
-        phantom=PhantomConfig(k=8, apply_ffn=False, apply_attn_proj=False),
+        phantom=PhantomConfig(k=8),
+        projections=phantom_projection_map(8),
         rope="full",
     )
 
@@ -45,7 +46,8 @@ def smoke_config() -> ModelConfig:
         moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=32,
                       partition="tensor"),
         attn_shard="ring",
-        phantom=PhantomConfig(k=4, apply_ffn=False, apply_attn_proj=False),
+        phantom=PhantomConfig(k=4),
+        projections=phantom_projection_map(4),
         rope="full",
         loss_chunk=64,
     )

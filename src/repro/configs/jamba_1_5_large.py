@@ -7,7 +7,7 @@ top-2 — Mamba+attention 1:7 interleave.  [arXiv:2403.19887]
 (even offsets).  Adafactor (Adam fp32 states would not fit 16 GB/chip at
 398B/256 chips — DESIGN.md §5).  FSDP over data axis.  Runs ``long_500k``.
 """
-from repro.configs.base import ModelConfig, MoEConfig, SSMConfig, PhantomConfig
+from repro.configs.base import phantom_projection_map, ModelConfig, MoEConfig, SSMConfig, PhantomConfig
 
 
 def config() -> ModelConfig:
@@ -25,7 +25,8 @@ def config() -> ModelConfig:
                       every_n=2, offset=1, partition="expert"),
         ssm=SSMConfig(d_state=128, head_dim=64, expand=2, conv_width=4),
         attn_shard="head",
-        phantom=PhantomConfig(k=32, apply_ffn=True),
+        phantom=PhantomConfig(k=32),
+        projections=phantom_projection_map(32, ffn=True),
         fsdp=True,
         optimizer="adafactor",
         param_dtype="bfloat16",   # 398B: fp32 params would not fit
@@ -49,6 +50,7 @@ def smoke_config() -> ModelConfig:
         ssm=SSMConfig(d_state=16, head_dim=16, expand=2, conv_width=4,
                       chunk=32),
         attn_shard="head",
-        phantom=PhantomConfig(k=4, apply_ffn=True),
+        phantom=PhantomConfig(k=4),
+        projections=phantom_projection_map(4, ffn=True),
         loss_chunk=64,
     )

@@ -8,7 +8,7 @@ Phantom applicability: in/out projections only (DESIGN.md §Arch-applicability);
 the SSD scan itself has no cross-rank weight block to factorize.
 Runs ``long_500k`` (sub-quadratic by construction).
 """
-from repro.configs.base import ModelConfig, SSMConfig, PhantomConfig
+from repro.configs.base import phantom_projection_map, ModelConfig, SSMConfig, PhantomConfig
 
 
 def config() -> ModelConfig:
@@ -23,7 +23,8 @@ def config() -> ModelConfig:
         vocab_size=50280,
         attn_period=-1,
         ssm=SSMConfig(d_state=128, head_dim=64, expand=2, conv_width=4),
-        phantom=PhantomConfig(k=8, apply_ffn=False, apply_attn_proj=True),
+        phantom=PhantomConfig(k=8),
+        projections=phantom_projection_map(8, attn=True),
         rope="none",
     )
 
@@ -38,7 +39,8 @@ def smoke_config() -> ModelConfig:
         attn_period=-1,
         ssm=SSMConfig(d_state=16, head_dim=16, expand=2, conv_width=4,
                       chunk=32),
-        phantom=PhantomConfig(k=4, apply_ffn=False, apply_attn_proj=True),
+        phantom=PhantomConfig(k=4),
+        projections=phantom_projection_map(4, attn=True),
         rope="none",
         loss_chunk=64,
     )

@@ -5,7 +5,7 @@ experts top-8.  [arXiv:2409.02060]
 
 64 % 16 == 0 -> experts expert-partitioned over the model axis (4/rank).
 """
-from repro.configs.base import ModelConfig, MoEConfig, PhantomConfig
+from repro.configs.base import phantom_projection_map, ModelConfig, MoEConfig, PhantomConfig
 
 
 def config() -> ModelConfig:
@@ -21,7 +21,8 @@ def config() -> ModelConfig:
         moe=MoEConfig(num_experts=64, top_k=8, d_ff_expert=1024,
                       partition="expert"),
         attn_shard="head",
-        phantom=PhantomConfig(k=8, apply_ffn=False, apply_attn_proj=True),
+        phantom=PhantomConfig(k=8),
+        projections=phantom_projection_map(8, attn=True),
         rope="full",
     )
 
@@ -39,7 +40,8 @@ def smoke_config() -> ModelConfig:
         moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=32,
                       partition="expert"),
         attn_shard="head",
-        phantom=PhantomConfig(k=4, apply_ffn=False, apply_attn_proj=True),
+        phantom=PhantomConfig(k=4),
+        projections=phantom_projection_map(4, attn=True),
         rope="full",
         loss_chunk=64,
     )

@@ -4,7 +4,8 @@ stacks trained on the Gaussian-teacher dataset with MSE loss.
 Sizes from the paper: n in {4096, 16384, 65536, 131072, 262144},
 L in {2, 6}; ghost width k in {2..64}.
 """
-from repro.configs.base import ModelConfig, PhantomConfig
+from repro.configs.base import (ModelConfig, PhantomConfig,
+                                phantom_projection_map)
 
 _SIZES = {
     "paper-ffn-4k": (4_096, 2, 3),
@@ -24,8 +25,8 @@ def config(arch: str = "paper-ffn-16k") -> ModelConfig:
         d_model=n,
         ffn_width=n,
         ffn_depth=L,
-        phantom=PhantomConfig(k=k, apply_ffn=True),
-        ffn_impl="phantom",
+        phantom=PhantomConfig(k=k),
+        projections=phantom_projection_map(k, ffn_layer=True, ffn=True),
         mlp="relu",
     )
 
@@ -39,7 +40,7 @@ def smoke_config(arch: str = "paper-ffn-16k") -> ModelConfig:
         d_model=128,
         ffn_width=128,
         ffn_depth=L,
-        phantom=PhantomConfig(k=4, apply_ffn=True),
-        ffn_impl="phantom",
+        phantom=PhantomConfig(k=4),
+        projections=phantom_projection_map(4, ffn_layer=True, ffn=True),
         mlp="relu",
     )

@@ -3,7 +3,7 @@
 32L d_model=3072 32H (kv=32 -> MHA) d_ff=8192 vocab=32064 — RoPE, SwiGLU,
 RMSNorm.  [arXiv:2404.14219; unverified]
 """
-from repro.configs.base import ModelConfig, PhantomConfig
+from repro.configs.base import phantom_projection_map, ModelConfig, PhantomConfig
 
 
 def config() -> ModelConfig:
@@ -17,7 +17,8 @@ def config() -> ModelConfig:
         d_ff=8192,
         vocab_size=32064,
         attn_shard="head",
-        phantom=PhantomConfig(k=12, apply_ffn=True),
+        phantom=PhantomConfig(k=12),
+        projections=phantom_projection_map(12, ffn=True),
     )
 
 
@@ -32,6 +33,7 @@ def smoke_config() -> ModelConfig:
         d_ff=128,
         vocab_size=256,
         attn_shard="head",
-        phantom=PhantomConfig(k=4, apply_ffn=True),
+        phantom=PhantomConfig(k=4),
+        projections=phantom_projection_map(4, ffn=True),
         loss_chunk=64,
     )

@@ -5,7 +5,7 @@
 
 40 heads % 16 != 0 -> ring (sequence-sharded) attention (DESIGN.md §5).
 """
-from repro.configs.base import ModelConfig, PhantomConfig
+from repro.configs.base import phantom_projection_map, ModelConfig, PhantomConfig
 
 
 def config() -> ModelConfig:
@@ -20,7 +20,8 @@ def config() -> ModelConfig:
         vocab_size=152064,
         attn_shard="ring",
         qkv_bias=True,
-        phantom=PhantomConfig(k=16, apply_ffn=True),
+        phantom=PhantomConfig(k=16),
+        projections=phantom_projection_map(16, ffn=True),
         optimizer="adamw",
     )
 
@@ -37,6 +38,7 @@ def smoke_config() -> ModelConfig:
         vocab_size=256,
         attn_shard="ring",
         qkv_bias=True,
-        phantom=PhantomConfig(k=4, apply_ffn=True),
+        phantom=PhantomConfig(k=4),
+        projections=phantom_projection_map(4, ffn=True),
         loss_chunk=64,
     )

@@ -7,7 +7,7 @@ Backbone only (per spec): vision frontend stubbed; ``input_specs()`` yields
 patch embeddings merged at fixed positions plus 3-axis M-RoPE position ids.
 FSDP over the data axis on top of TP (72B does not fit TP-only).
 """
-from repro.configs.base import ModelConfig, PhantomConfig
+from repro.configs.base import phantom_projection_map, ModelConfig, PhantomConfig
 
 
 def config() -> ModelConfig:
@@ -24,7 +24,8 @@ def config() -> ModelConfig:
         rope="mrope",
         qkv_bias=True,
         frontend="vision",
-        phantom=PhantomConfig(k=32, apply_ffn=True),
+        phantom=PhantomConfig(k=32),
+        projections=phantom_projection_map(32, ffn=True),
         fsdp=True,
         optimizer="adafactor",
         param_dtype="bfloat16",   # 72B: fp32 params would not fit
@@ -46,6 +47,7 @@ def smoke_config() -> ModelConfig:
         rope="mrope",
         qkv_bias=True,
         frontend="vision",
-        phantom=PhantomConfig(k=4, apply_ffn=True),
+        phantom=PhantomConfig(k=4),
+        projections=phantom_projection_map(4, ffn=True),
         loss_chunk=64,
     )

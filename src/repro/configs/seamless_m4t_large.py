@@ -7,7 +7,7 @@ Backbone only (per spec): the audio frontend is a stub — ``input_specs()``
 yields precomputed frame embeddings ``[B, S, d]``.  "24L" is read as 24
 encoder + 24 decoder layers (DESIGN.md §5).
 """
-from repro.configs.base import ModelConfig, PhantomConfig
+from repro.configs.base import phantom_projection_map, ModelConfig, PhantomConfig
 
 
 def config() -> ModelConfig:
@@ -23,7 +23,8 @@ def config() -> ModelConfig:
         vocab_size=256206,
         frontend="audio",
         attn_shard="head",
-        phantom=PhantomConfig(k=8, apply_ffn=True),
+        phantom=PhantomConfig(k=8),
+        projections=phantom_projection_map(8, ffn=True),
         norm="layernorm",
         mlp="gelu",
         rope="none",              # seamless uses learned/relative positions;
@@ -44,7 +45,8 @@ def smoke_config() -> ModelConfig:
         vocab_size=256,
         frontend="audio",
         attn_shard="head",
-        phantom=PhantomConfig(k=4, apply_ffn=True),
+        phantom=PhantomConfig(k=4),
+        projections=phantom_projection_map(4, ffn=True),
         norm="layernorm",
         mlp="gelu",
         rope="none",

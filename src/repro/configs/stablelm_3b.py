@@ -5,7 +5,7 @@
 
 StableLM-2 style: partial rotary (25%), LayerNorm, SwiGLU MLP.
 """
-from repro.configs.base import ModelConfig, PhantomConfig
+from repro.configs.base import phantom_projection_map, ModelConfig, PhantomConfig
 
 
 def config() -> ModelConfig:
@@ -22,7 +22,8 @@ def config() -> ModelConfig:
         norm="layernorm",
         rope="partial",
         rope_fraction=0.25,
-        phantom=PhantomConfig(k=8, apply_ffn=True),
+        phantom=PhantomConfig(k=8),
+        projections=phantom_projection_map(8, ffn=True),
     )
 
 
@@ -40,6 +41,7 @@ def smoke_config() -> ModelConfig:
         norm="layernorm",
         rope="partial",
         rope_fraction=0.25,
-        phantom=PhantomConfig(k=4, apply_ffn=True),
+        phantom=PhantomConfig(k=4),
+        projections=phantom_projection_map(4, ffn=True),
         loss_chunk=64,
     )

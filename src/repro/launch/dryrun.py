@@ -38,16 +38,14 @@ def make_cfg(arch: str, impl: str, variant: str | None = None,
               for k in list(extra) if k.startswith("phantom.")}
     cfg = get_config(arch, **extra)
     if nested:
-        cfg = cfg.replace(phantom=dataclasses.replace(cfg.phantom,
-                                                      **nested))
+        from repro.configs.base import with_phantom_overrides
+        cfg = with_phantom_overrides(cfg, **nested)
     if impl == "dense":
-        from repro.configs.base import ProjectionMap
-        cfg = cfg.replace(phantom=dataclasses.replace(
-            cfg.phantom, apply_ffn=False, apply_attn_proj=False),
-            projections=ProjectionMap())
+        from repro.configs.base import dense_projection_map
+        cfg = cfg.replace(projections=dense_projection_map())
     elif variant:
-        cfg = cfg.replace(phantom=dataclasses.replace(
-            cfg.phantom, variant=variant))
+        from repro.configs.base import with_phantom_overrides
+        cfg = with_phantom_overrides(cfg, variant=variant)
     return cfg
 
 

@@ -30,6 +30,7 @@ _OP_RE = re.compile(
     r"(-start|-done)?\(")
 _GROUPS_RE = re.compile(r"replica_groups=\{(\{[0-9, ]+\})")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{([0-9,{} ]+)\}")
 
 
 def _shape_bytes(text: str) -> int:
@@ -51,14 +52,48 @@ def _group_size(line: str, default: int) -> int:
     if m:
         # replica_groups=[G,S]<=[N]: G groups of size S
         return int(m.group(2))
+    m = _PAIRS_RE.search(line)
+    if m:
+        # collective-permute carries source_target_pairs, not
+        # replica_groups; the devices a permute chains together trace
+        # out the mesh axis it shifts (a ring or 1F1B hop over an axis
+        # of size S connects S devices), so the group is the largest
+        # connected component of the pair graph
+        pairs = [(int(a), int(b))
+                 for a, b in re.findall(r"\{(\d+),(\d+)\}", m.group(1))]
+        if pairs:
+            adj = defaultdict(set)
+            for a, b in pairs:
+                adj[a].add(b)
+                adj[b].add(a)
+            best, seen = 1, set()
+            for start in adj:
+                if start in seen:
+                    continue
+                comp, stack = 0, [start]
+                seen.add(start)
+                while stack:
+                    comp += 1
+                    for nb in adj[stack.pop()]:
+                        if nb not in seen:
+                            seen.add(nb)
+                            stack.append(nb)
+                best = max(best, comp)
+            return best
     return default
 
 
 def collective_bytes(hlo_text: str, default_group: int = 16):
     """Returns (per_device_wire_bytes_total, breakdown dict with per-op
-    counts and bytes)."""
+    counts and bytes).  Each per-op record also carries ``m_floats``,
+    the paper Eqn. 26 per-rank message total computed with each op's
+    OWN replica-group size, and ``groups`` — a ``{group_size: {count,
+    m_floats, wire_bytes}}`` map — so the static audit can match
+    collectives by mesh axis, which the aggregate ``default_group``
+    conversion can't express."""
     out = defaultdict(lambda: {"count": 0, "result_bytes": 0,
-                               "wire_bytes": 0.0})
+                               "wire_bytes": 0.0, "m_floats": 0.0,
+                               "groups": {}})
     for line in hlo_text.splitlines():
         m = _OP_RE.match(line)
         if not m:
@@ -86,6 +121,14 @@ def collective_bytes(hlo_text: str, default_group: int = 16):
         rec["count"] += 1
         rec["result_bytes"] += rb
         rec["wire_bytes"] += wb
+        # all-gather RESULT = m*g; everything else's result = m
+        mf = rb / 4.0 / g if op == "all-gather" else rb / 4.0
+        rec["m_floats"] += mf
+        grec = rec["groups"].setdefault(
+            g, {"count": 0, "m_floats": 0.0, "wire_bytes": 0.0})
+        grec["count"] += 1
+        grec["m_floats"] += mf
+        grec["wire_bytes"] += wb
     total = sum(r["wire_bytes"] for r in out.values())
     return total, dict(out)
 
@@ -102,10 +145,15 @@ def count_op(hlo_text: str, opname: str) -> int:
 # is what the Table III fits and the energy model price.)
 def collective_m_floats(breakdown: dict, group: int) -> float:
     """Total per-rank message floats across a ``collective_bytes``
-    breakdown, in the paper's Eqn. 26 units."""
+    breakdown, in the paper's Eqn. 26 units.  Records carrying their own
+    per-op ``m_floats`` (computed with each op's actual replica-group
+    size) are preferred; ``group`` is the legacy aggregate fallback."""
     g = max(group, 1)
     total = 0.0
     for op, rec in breakdown.items():
+        if "m_floats" in rec:
+            total += rec["m_floats"]
+            continue
         rb = rec["result_bytes"]
         total += rb / 4.0 / g if op == "all-gather" else rb / 4.0
     return total

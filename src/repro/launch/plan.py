@@ -60,6 +60,11 @@ def build_parser():
     ap.add_argument("--compiled-hbm-check", action="store_true",
                     help="verify the frontier's HBM fit against the "
                          "lowered probe step (cached analysis)")
+    ap.add_argument("--no-audit", dest="audit", action="store_false",
+                    help="skip the static sharding/energy audit of the "
+                         "frontier (on by default: a plan whose lowered "
+                         "collectives don't match its priced account is "
+                         "moved to rejected)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=DEFAULT_OUT)
     return ap
@@ -156,8 +161,8 @@ def plan(args, ledger=None, calib_rows=None) -> dict:
     # ground-truth the frontier's HBM fit against the lowered probe
     # step (cached analysis); an over-budget plan is dropped and the
     # frontier recomputed so newly-exposed plans get checked too
+    mesh_cache = {}
     if args.compiled_hbm_check:
-        mesh_cache = {}
         checked = set()
         while True:
             over = []
@@ -182,6 +187,36 @@ def plan(args, ledger=None, calib_rows=None) -> dict:
                 scored_kept.remove(s)
             frontier = make_frontier(scored_kept)
 
+    # static sharding & energy audit of the frontier: lower each
+    # candidate's probe (through the shared telemetry caches — nothing
+    # the HBM check compiled is re-lowered) and reject any plan whose
+    # collectives don't reconcile with its priced CommEvent account.
+    # Same recheck-loop shape as above: dropping a plan exposes new
+    # frontier members, which must be audited too.
+    audit_results = {}
+    if getattr(args, "audit", True):
+        from repro.analysis import audit_plans
+        while True:
+            todo = [s for s in frontier
+                    if s.plan.name not in audit_results]
+            if todo:
+                audit_results.update(audit_plans(
+                    [s.plan for s in todo], mesh_cache=mesh_cache))
+            bad = [s for s in frontier
+                   if not audit_results[s.plan.name]["ok"]]
+            if not bad:
+                break
+            for s in bad:
+                errs = audit_results[s.plan.name]["errors"]
+                thr_rejected.append(
+                    (s, f"static audit: {len(errs)} error(s), first: "
+                        f"{errs[0] if errs else 'unlowerable'}"))
+                scored_kept.remove(s)
+            frontier = make_frontier(scored_kept)
+        n_bad = sum(1 for r in audit_results.values() if not r["ok"])
+        print(f"# audit: {len(audit_results)} frontier plans checked, "
+              f"{n_bad} rejected")
+
     comparison = matched_loss_comparison(scored_kept, args.devices)
     if iso is not None and not comparison.get("matched_plans"):
         reachable = min(iso.final_loss.values(), default=float("nan"))
@@ -197,6 +232,8 @@ def plan(args, ledger=None, calib_rows=None) -> dict:
         throughput_rejected=thr_rejected, iso=iso, comparison=comparison,
         meta={"argv": vars(args), "target_loss": args.target_loss,
               "devices": args.devices})
+    if audit_results:
+        report["audit"] = audit_results
     if ledger is not None:
         record_frontier(ledger, frontier, calib)
     write_plan_report(report, args.out)

@@ -107,8 +107,6 @@ def main():
             f"--xla_force_host_platform_device_count={ndev} "
             + os.environ.get("XLA_FLAGS", ""))
 
-    import dataclasses
-
     from repro.configs.base import ShapeConfig, get_config
     from repro.data.synthetic import LMDataset
     from repro.launch.mesh import make_local_mesh, make_production_mesh
@@ -122,10 +120,8 @@ def main():
     if args.plan:
         cfg, args.dp, args.tp, args.pp = _apply_plan(args, cfg)
     elif args.impl == "dense":
-        from repro.configs.base import ProjectionMap
-        cfg = cfg.replace(phantom=dataclasses.replace(
-            cfg.phantom, apply_ffn=False, apply_attn_proj=False),
-            projections=ProjectionMap())
+        from repro.configs.base import dense_projection_map
+        cfg = cfg.replace(projections=dense_projection_map())
     mesh = (make_local_mesh(args.dp, args.tp, args.pp) if args.smoke
             else make_production_mesh(pp=args.pp))
     axes = MeshAxes.from_mesh(mesh)

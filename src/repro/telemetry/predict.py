@@ -156,6 +156,25 @@ def serve_overhead_events(cfg, p: int, rows: int, phase: str,
     return per_layer, per_step
 
 
+def serve_step_events(cfg, p: int, rows: int, phase: str,
+                      sequences: int = 0, dp: int = 1):
+    """The full per-step serving collective account: the projection
+    strategies' own events plus the ``serve_overhead_events`` terms,
+    as ``(CommEvent, repeats)`` pairs (all on the model axis — the
+    serving path issues no data-axis collectives).  Shared by
+    ``serve_step_prediction`` and the static audit's collective-
+    accounting rule, so the audit checks exactly the account the
+    ledger prices."""
+    sts = serve_site_strategies(cfg, p, dp)
+    ov_layer, ov_step = serve_overhead_events(cfg, p, rows, phase,
+                                              sequences)
+    events = [(ev, cfg.num_layers)
+              for ev in events_for(sts, rows, training=False)]
+    events += [(ev, cfg.num_layers) for ev in ov_layer]
+    events += [(ev, 1) for ev in ov_step]
+    return events
+
+
 def serve_step_prediction(cfg, p: int, rows: int, *, phase: str = "decode",
                           ctx_tokens: float = 0.0, sequences: int = 0,
                           dp: int = 1,
@@ -192,12 +211,7 @@ def serve_step_prediction(cfg, p: int, rows: int, *, phase: str = "decode",
     head_flops = 2.0 * cfg.d_model * cfg.vocab_size * head_rows / max(p, 1)
     alpha_s += (attn_flops + head_flops) / peak_flops
     alpha_s *= alpha_scale
-    ov_layer, ov_step = serve_overhead_events(cfg, p, rows, phase,
-                                              sequences)
-    events = [(ev, cfg.num_layers)
-              for ev in events_for(sts, rows, training=False)]
-    events += [(ev, cfg.num_layers) for ev in ov_layer]
-    events += [(ev, 1) for ev in ov_step]
+    events = serve_step_events(cfg, p, rows, phase, sequences, dp)
     wire = sum(event_wire_bytes(ev, p, itemsize) * n for ev, n in events)
     m_floats = sum(ev.m_floats * n for ev, n in events)
     comm_us = sum(comm_time_us(ev.collective, ev.m_floats, p, fits) * n
@@ -267,6 +281,56 @@ def measured_energy_fields(costs, p: int, *, fits=None,
     }
 
 
+def pipeline_ffn_step_events(cfg, pp: int, tp: int, dp: int,
+                             global_batch: int, *,
+                             executed: bool = True) -> dict:
+    """The per-step collective account of the pipelined paper-FFN step
+    as ``(CommEvent, group, repeats)`` triples, with the schedule /
+    strategy context the prediction needs.  ``group`` is the mesh-axis
+    size each event runs over (permute -> pp, gradient all-reduce ->
+    dp, layer collectives -> tp).  Shared by
+    ``pipeline_ffn_step_prediction`` and the static audit's
+    collective-accounting rule."""
+    from repro.core.ffn import ffn_stage_strategies
+    from repro.train.pipeline import PipelineSchedule
+
+    if cfg.pipeline.mixed:
+        raise ValueError("per-device prediction needs homogeneous stages "
+                         "(mixed stages run different per-rank programs)")
+    M = max(cfg.microbatches, 1)
+    sched = PipelineSchedule(stages=pp, microbatches=M)
+    st = ffn_stage_strategies(cfg, tp)[0]
+    L_loc = cfg.num_layers // max(pp, 1)
+    rows_mb = global_batch / max(dp, 1) / M
+    reps = sched.num_ticks if executed else M
+
+    layer_events = [(ev, reps * L_loc) for ev in st.comm_events(rows_mb)]
+    m_boundary = rows_mb * cfg.ffn_width / max(tp, 1)
+    p2p = sched.p2p_events(m_boundary, executed=executed)
+    events = layer_events + [(ev, 1) for ev in p2p]
+    if dp > 1:
+        # dp gradient sync of this device's stage-local (tp-sharded)
+        # param grads — once per step (the probe psums after the
+        # wavefront, like the train step)
+        m_grads = L_loc * st.param_count() / max(tp, 1)
+        events.append((CommEvent("all_reduce", m_grads, "bwd"), 1))
+
+    def group(ev):
+        if ev.collective in ("collective_permute", "p2p"):
+            return pp
+        return dp if ev.collective == "all_reduce" else tp
+
+    return {
+        "events": [(ev, group(ev), n) for ev, n in events],
+        "p2p": p2p,
+        "schedule": sched,
+        "strategy": st,
+        "rows_mb": rows_mb,
+        "L_loc": L_loc,
+        "reps": reps,
+    }
+
+
 def pipeline_ffn_step_prediction(cfg, pp: int, tp: int, dp: int,
                                  global_batch: int, *,
                                  executed: bool = True,
@@ -290,42 +354,21 @@ def pipeline_ffn_step_prediction(cfg, pp: int, tp: int, dp: int,
     carries the same shard but pays k-wide layer collectives, which is
     how phantom shrinks total boundary-adjacent traffic.
     """
-    from repro.core.ffn import ffn_stage_strategies
-    from repro.train.pipeline import PipelineSchedule
+    acct = pipeline_ffn_step_events(cfg, pp, tp, dp, global_batch,
+                                    executed=executed)
+    sched, st = acct["schedule"], acct["strategy"]
+    M = sched.microbatches
 
-    if cfg.pipeline.mixed:
-        raise ValueError("per-device prediction needs homogeneous stages "
-                         "(mixed stages run different per-rank programs)")
-    M = max(cfg.microbatches, 1)
-    sched = PipelineSchedule(stages=pp, microbatches=M)
-    st = ffn_stage_strategies(cfg, tp)[0]
-    L_loc = cfg.num_layers // max(pp, 1)
-    rows_mb = global_batch / max(dp, 1) / M
-    reps = sched.num_ticks if executed else M
-
-    alpha_s = (3.0 * reps * L_loc * st.flops(rows_mb)) / peak_flops
-    layer_events = [(ev, reps * L_loc) for ev in st.comm_events(rows_mb)]
-    m_boundary = rows_mb * cfg.ffn_width / max(tp, 1)
-    p2p = sched.p2p_events(m_boundary, executed=executed)
-    events = layer_events + [(ev, 1) for ev in p2p]
-    if dp > 1:
-        # dp gradient sync of this device's stage-local (tp-sharded)
-        # param grads — once per step (the probe psums after the
-        # wavefront, like the train step)
-        m_grads = L_loc * st.param_count() / max(tp, 1)
-        events.append((CommEvent("all_reduce", m_grads, "bwd"), 1))
-
-    def group(ev):
-        if ev.collective in ("collective_permute", "p2p"):
-            return pp
-        return dp if ev.collective == "all_reduce" else tp
-
-    wire = sum(event_wire_bytes(ev, group(ev), itemsize) * nrep
-               for ev, nrep in events)
-    boundary_wire = sum(event_wire_bytes(ev, pp, itemsize) for ev in p2p)
-    m_floats = sum(ev.m_floats * nrep for ev, nrep in events)
-    comm_us = sum(comm_time_us(ev.collective, ev.m_floats, group(ev), fits)
-                  * nrep for ev, nrep in events)
+    alpha_s = (3.0 * acct["reps"] * acct["L_loc"]
+               * st.flops(acct["rows_mb"])) / peak_flops
+    events = acct["events"]
+    wire = sum(event_wire_bytes(ev, g, itemsize) * nrep
+               for ev, g, nrep in events)
+    boundary_wire = sum(event_wire_bytes(ev, pp, itemsize)
+                        for ev in acct["p2p"])
+    m_floats = sum(ev.m_floats * nrep for ev, _, nrep in events)
+    comm_us = sum(comm_time_us(ev.collective, ev.m_floats, g, fits)
+                  * nrep for ev, g, nrep in events)
     beta_s = comm_us * 1e-6
     devices = pp * dp * tp
     return {

@@ -1,0 +1,302 @@
+"""Seeded-violation fixtures: every audit rule must demonstrably fire.
+
+Each test plants one violation — an intentionally unpriced psum, a
+reshard over a non-mesh group, a bf16->f32 upcast, an unhashable static
+arg — and asserts the matching rule reports it at the right severity.
+The collective fixtures feed synthetic HLO through the REAL parser
+(``collective_bytes`` -> ``CompiledCosts``), so the rule is exercised
+end-to-end, not against hand-built buckets; the headline fixture lowers
+a real shard_map psum and proves the accounting rule catches it
+unpriced.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis import (ERROR, INFO, WARNING, AuditUnit, Baseline,
+                            Finding, PricedCollective, apply_baseline,
+                            load_baseline, run_audit, run_rules)
+from repro.analysis.rules import (rule_collective_accounting,
+                                  rule_dtype_drift,
+                                  rule_recompilation_hazard,
+                                  rule_sharding_hygiene)
+from repro.launch.hlo_analysis import collective_bytes
+from repro.telemetry.compiled import CompiledCosts
+from helpers import smap
+
+
+def _unit_from_hlo(hlo_text, predicted, *, default_group=8, axes=None,
+                   **kw):
+    """Build an AuditUnit whose measured side comes from the REAL HLO
+    collective parser."""
+    _, breakdown = collective_bytes(hlo_text, default_group=default_group)
+    costs = CompiledCosts(collectives=breakdown)
+    return AuditUnit(name="fixture", kind="fixture", hlo_text=hlo_text,
+                     costs=costs, predicted=predicted,
+                     axes=axes or {"dp": 1, "tp": 8}, **kw)
+
+
+def _findings(fs, rule=None, severity=None):
+    return [f for f in fs
+            if (rule is None or f.rule == rule)
+            and (severity is None or f.severity == severity)]
+
+
+# ---------------------------------------------------------------------------
+# R1 collective-accounting
+# ---------------------------------------------------------------------------
+
+def test_unpriced_psum_is_caught(mesh18):
+    """The headline fixture: lower a REAL shard_map step containing a
+    psum nothing prices, and the accounting rule must flag it as an
+    error."""
+    def step(x):
+        return jax.lax.psum(x * 2.0, "model")       # 8192-float AR
+
+    fn = smap(step, mesh18, P(None, None), P(None, None))
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    hlo = fn.lower(x).compile().as_text()
+    unit = _unit_from_hlo(hlo, predicted=[])        # nothing priced
+    errs = _findings(rule_collective_accounting(unit),
+                     severity=ERROR)
+    assert errs, "an unpriced 8192-float psum must be an error"
+    assert "unpriced" in errs[0].message
+    assert "all_reduce" in errs[0].message
+
+
+def test_priced_psum_is_clean(mesh18):
+    """Control for the fixture above: price the same psum correctly and
+    the rule goes quiet."""
+    def step(x):
+        return jax.lax.psum(x * 2.0, "model")
+
+    fn = smap(step, mesh18, P(None, None), P(None, None))
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    hlo = fn.lower(x).compile().as_text()
+    unit = _unit_from_hlo(
+        hlo, predicted=[PricedCollective("all_reduce", 64 * 128, 8)])
+    assert not _findings(rule_collective_accounting(unit),
+                         severity=ERROR)
+
+
+_AR_BIG = ("  %ar = f32[64,512]{1,0} all-reduce(f32[64,512] %x), "
+           "replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add\n")
+
+
+def test_phantom_prediction_is_caught():
+    """Pricing a collective the lowered HLO never issues is the dual
+    error (the account bills energy that never flows)."""
+    unit = _unit_from_hlo(
+        _AR_BIG, predicted=[
+            PricedCollective("all_reduce", 64 * 512, 8),
+            PricedCollective("reduce_scatter", 32_768, 8)])
+    errs = _findings(rule_collective_accounting(unit), severity=ERROR)
+    assert len(errs) == 1
+    assert "phantom prediction" in errs[0].message
+    assert "reduce_scatter" in errs[0].message
+
+
+def test_mispriced_bytes_and_count_only_mismatch():
+    # bytes off by 2x -> error; counts off with bytes agreeing -> info
+    unit = _unit_from_hlo(
+        _AR_BIG, predicted=[PricedCollective("all_reduce",
+                                             2 * 64 * 512, 8)])
+    errs = _findings(rule_collective_accounting(unit), severity=ERROR)
+    assert len(errs) == 1 and "mispriced" in errs[0].message
+
+    unit2 = _unit_from_hlo(
+        _AR_BIG, predicted=[PricedCollective("all_reduce",
+                                             64 * 512 / 4, 8, count=4)])
+    fs = rule_collective_accounting(unit2)
+    assert not _findings(fs, severity=ERROR)
+    infos = _findings(fs, severity=INFO)
+    assert len(infos) == 1 and "fusion/splitting" in infos[0].message
+
+
+def test_small_messages_and_loose_units_demote():
+    hlo_small = ("  %ar = f32[16]{0} all-reduce(f32[16] %x), "
+                 "replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add\n")
+    unit = _unit_from_hlo(hlo_small, predicted=[])
+    fs = rule_collective_accounting(unit)
+    assert _findings(fs, severity=INFO) and not _findings(fs,
+                                                          severity=ERROR)
+    # the same big unpriced AR on a loose (serving) unit demotes to
+    # warning instead of error
+    loose = _unit_from_hlo(_AR_BIG, predicted=[], strict=False)
+    fs = rule_collective_accounting(loose)
+    assert _findings(fs, severity=WARNING) and not _findings(
+        fs, severity=ERROR)
+
+
+def test_wrong_mesh_axis_same_kind_is_two_findings():
+    """Matching is by (kind, group): pricing the right kind on the
+    wrong mesh axis must NOT reconcile."""
+    unit = _unit_from_hlo(
+        _AR_BIG, predicted=[PricedCollective("all_reduce", 64 * 512, 4)],
+        axes={"dp": 2, "tp": 4})
+    errs = _findings(rule_collective_accounting(unit), severity=ERROR)
+    kinds = sorted(e.message.split(":")[0] for e in errs)
+    assert kinds == ["phantom prediction", "unpriced collective"]
+
+
+def test_degenerate_group_of_one_collectives_ignored():
+    """XLA lowers axis-size-1 psums as {{0},{1},..} collectives that
+    move nothing; they must not show up as unpriced traffic."""
+    hlo = ("  %ag = f32[64,512]{1,0} all-gather(f32[64,512] %x), "
+           "replica_groups={{0},{1},{2},{3},{4},{5},{6},{7}}, "
+           "dimensions={0}\n")
+    unit = _unit_from_hlo(hlo, predicted=[])
+    assert unit.measured_buckets() == {}
+    assert rule_collective_accounting(unit) == []
+
+
+# ---------------------------------------------------------------------------
+# R2 sharding-hygiene
+# ---------------------------------------------------------------------------
+
+def test_reshard_over_non_mesh_group_warns():
+    hlo = ("  %ar = f32[64,512]{1,0} all-reduce(f32[64,512] %x), "
+           "replica_groups={{0,1,2},{3,4,5}}, to_apply=%add\n")
+    unit = _unit_from_hlo(hlo, predicted=[], axes={"dp": 2, "tp": 4})
+    ws = _findings(rule_sharding_hygiene(unit), severity=WARNING)
+    assert len(ws) == 1
+    assert "group of 3" in ws[0].message
+    # mesh-legal groups (1, 2, 4, 8) raise nothing
+    ok = _unit_from_hlo(_AR_BIG, predicted=[], axes={"dp": 1, "tp": 8})
+    assert rule_sharding_hygiene(ok) == []
+
+
+def test_memory_blowup_vs_napkin_warns():
+    costs = CompiledCosts(memory={"argument_bytes": 9e6,
+                                  "temp_bytes": 0.0,
+                                  "output_bytes": 0.0})
+    unit = AuditUnit(name="fixture", kind="fixture", costs=costs,
+                     axes={"tp": 8}, napkin_bytes=1e6)
+    ws = _findings(rule_sharding_hygiene(unit), severity=WARNING)
+    assert len(ws) == 1 and "blowup" in ws[0].message
+    unit.napkin_bytes = 5e6                 # within 8x: fine
+    assert rule_sharding_hygiene(unit) == []
+
+
+# ---------------------------------------------------------------------------
+# R3 dtype-drift
+# ---------------------------------------------------------------------------
+
+def test_bf16_upcast_flagged_scalars_exempt():
+    def f(x, s):
+        big = x.astype(jnp.float32) * 2.0           # 512*512 upcast
+        small = s.astype(jnp.float32)               # scalar: exempt
+        return big.sum() + small
+
+    jaxpr = jax.make_jaxpr(f)(
+        jax.ShapeDtypeStruct((512, 512), jnp.bfloat16),
+        jax.ShapeDtypeStruct((), jnp.bfloat16))
+    unit = AuditUnit(name="fixture", kind="fixture", jaxpr=jaxpr,
+                     compute_dtype="bfloat16")
+    ws = _findings(rule_dtype_drift(unit), severity=WARNING)
+    assert len(ws) == 1
+    assert "(512, 512)" in ws[0].message
+    # f32 units don't run the rule at all
+    unit_f32 = AuditUnit(name="fixture", kind="fixture", jaxpr=jaxpr,
+                         compute_dtype="float32")
+    assert rule_dtype_drift(unit_f32) == []
+
+
+def test_dtype_drift_descends_into_scan_bodies():
+    def body(c, x):
+        return c, x.astype(jnp.float32).sum()
+
+    def f(xs):
+        return jax.lax.scan(body, 0.0, xs)
+
+    jaxpr = jax.make_jaxpr(f)(
+        jax.ShapeDtypeStruct((4, 512, 512), jnp.bfloat16))
+    unit = AuditUnit(name="fixture", kind="fixture", jaxpr=jaxpr,
+                     compute_dtype="bfloat16")
+    assert _findings(rule_dtype_drift(unit), severity=WARNING)
+
+
+# ---------------------------------------------------------------------------
+# R4 recompilation-hazard
+# ---------------------------------------------------------------------------
+
+class _UnstableHash:
+    def __hash__(self):
+        return id(self)             # deepcopy changes id -> cache miss
+
+    def __eq__(self, other):
+        return isinstance(other, _UnstableHash)
+
+
+def test_unhashable_and_hash_unstable_static_args():
+    unit = AuditUnit(name="fixture", kind="fixture",
+                     static_args={"cfg": [1, 2, 3]})
+    errs = _findings(rule_recompilation_hazard(unit), severity=ERROR)
+    assert len(errs) == 1 and "unhashable" in errs[0].message
+
+    unit2 = AuditUnit(name="fixture", kind="fixture",
+                      static_args={"cfg": _UnstableHash()})
+    errs = _findings(rule_recompilation_hazard(unit2), severity=ERROR)
+    assert len(errs) == 1 and "hash-unstable" in errs[0].message
+
+    # frozen hashable config objects pass
+    from repro.configs.base import get_config
+    unit3 = AuditUnit(name="fixture", kind="fixture",
+                      static_args={"cfg": get_config("paper-ffn-4k",
+                                                     smoke=True)})
+    assert rule_recompilation_hazard(unit3) == []
+
+
+# ---------------------------------------------------------------------------
+# baseline ratchet
+# ---------------------------------------------------------------------------
+
+def test_baseline_suppresses_and_reports_stale(tmp_path):
+    f1 = Finding("collective-accounting", ERROR, "u", "msg",
+                 key="all_reduce@g8")
+    f2 = Finding("sharding-hygiene", WARNING, "u", "msg2", key="group3")
+    base = Baseline(suppressions={f1.fingerprint: "known",
+                                  "dtype-drift:u:gone": "stale entry"})
+    active, suppressed, stale = apply_baseline([f1, f2], base)
+    assert [f.key for f in active] == ["group3"]
+    assert [f.key for f in suppressed] == ["all_reduce@g8"]
+    assert stale == ["dtype-drift:u:gone"]
+
+    # run_audit's ok gate looks at ACTIVE errors only
+    unit = _unit_from_hlo(_AR_BIG, predicted=[])
+    res = run_audit([unit])
+    assert not res.ok
+    fp = res.findings[0].fingerprint
+    res2 = run_audit([unit], baseline=Baseline(suppressions={fp: "ok"}))
+    assert res2.ok and len(res2.suppressed) == 1
+
+    # baseline files round-trip; a missing file is an empty baseline
+    from repro.analysis.findings import write_baseline
+    path = tmp_path / "AUDIT_baseline.json"
+    write_baseline([f1], str(path))
+    loaded = load_baseline(str(path))
+    assert loaded.reason(f1.fingerprint)
+    assert load_baseline(str(tmp_path / "nope.json")).suppressions == {}
+
+
+def test_fingerprints_have_no_volatile_numbers():
+    unit = _unit_from_hlo(_AR_BIG, predicted=[])
+    for f in run_rules(unit):
+        assert "32768" not in f.fingerprint     # 64*512 floats
+        assert f.fingerprint.count(":") == 2
+
+
+def test_report_dict_schema(tmp_path):
+    import json
+    unit = _unit_from_hlo(_AR_BIG, predicted=[])
+    res = run_audit([unit])
+    rec = res.as_dict()
+    assert rec["schema"] == "audit-report/v1"
+    assert rec["ok"] is False
+    assert rec["counts"]["error"] == 1
+    assert rec["units"][0]["collectives"] == {
+        "all_reduce@g8": {"count": 1, "m_floats": 64 * 512.0}}
+    out = tmp_path / "AUDIT_report.json"
+    res.write(str(out))
+    assert json.load(open(out))["schema"] == "audit-report/v1"

@@ -1,0 +1,95 @@
+"""End-to-end audit: real lowered entrypoints must reconcile.
+
+The seeded fixtures in test_audit_rules.py prove each rule FIRES; these
+prove the shipped accounts PASS them — the audit's two-sided acceptance.
+Also covers the planner gate (``audit_plans``) and the ``--source-only``
+CLI path.
+"""
+import json
+
+from repro.analysis import run_audit
+from repro.configs.base import get_config, phantom_projection_map
+
+
+def _small_ffn(width=512, phantom=True):
+    cfg = get_config("paper-ffn-4k", smoke=True).replace(
+        d_model=width, ffn_width=width)
+    if phantom:
+        cfg = cfg.replace(projections=phantom_projection_map(
+            4, ffn_layer=True, ffn=True))
+    return cfg
+
+
+def test_ffn_train_unit_reconciles(mesh18):
+    from repro.analysis import ffn_train_unit
+    unit = ffn_train_unit(_small_ffn(), mesh18, 64)
+    res = run_audit([unit])
+    assert res.ok, "\n".join(res.summary_lines())
+    # the probe really lowered collectives and the account priced them
+    assert unit.measured_buckets(), "probe must issue collectives"
+    assert unit.predicted_buckets()
+
+
+def test_ffn_train_unit_dp_mesh_reconciles(mesh24):
+    """dp>1: layer collectives run at per-shard rows and the grad psum
+    joins the account — the exact bucket the audit once caught
+    mispriced."""
+    from repro.analysis import ffn_train_unit
+    unit = ffn_train_unit(_small_ffn(), mesh24, 64)
+    res = run_audit([unit])
+    assert res.ok, "\n".join(res.summary_lines())
+    assert ("all_reduce", 2) in unit.predicted_buckets()  # dp grad sync
+
+
+def test_pipeline_unit_reconciles(mesh222):
+    from repro.analysis import pipeline_unit
+    cfg = _small_ffn().replace(microbatches=4)
+    cfg = cfg.replace(pipeline=cfg.pipeline.__class__(stages=2))
+    unit = pipeline_unit(cfg, mesh222, 64)
+    res = run_audit([unit])
+    assert res.ok, "\n".join(res.summary_lines())
+    # the 1F1B p2p hops are priced AND lowered on the pp axis
+    assert ("collective_permute", 2) in unit.predicted_buckets()
+    assert ("collective_permute", 2) in unit.measured_buckets()
+
+
+def test_audit_plans_gates_candidates():
+    from repro.analysis import audit_plans
+    from repro.planner.space import PlanCandidate
+    good = PlanCandidate(dp=1, tp=2, strategy="phantom", width=256,
+                         depth=2, batch=64, k=4)
+    res = audit_plans([good])
+    assert res[good.name]["ok"], res[good.name]["errors"]
+
+    # an unlowerable candidate is an audit error, not a crash
+    bad = PlanCandidate(dp=1, tp=3, strategy="phantom", width=256,
+                        depth=2, batch=64, k=4)   # 256 % 3 != 0
+    res = audit_plans([bad])
+    assert not res[bad.name]["ok"]
+    assert "could not lower" in res[bad.name]["errors"][0]
+
+
+def test_audit_cli_source_only(tmp_path):
+    from repro.launch import audit as audit_cli
+    out = tmp_path / "AUDIT_report.json"
+    rc = audit_cli.main(["--source-only", "--out", str(out),
+                         "--baseline", str(tmp_path / "absent.json")])
+    assert rc == 0, "repo source must be lint-clean"
+    rec = json.load(open(out))
+    assert rec["schema"] == "audit-report/v1"
+    assert rec["ok"] is True
+    assert rec["counts"]["error"] == 0
+
+
+def test_audit_cli_update_baseline_ratchet(tmp_path, monkeypatch):
+    """--update-baseline accepts today's findings; the re-run suppresses
+    exactly those and nothing new."""
+    from repro.analysis import Finding, load_baseline, run_audit
+    from repro.analysis.findings import write_baseline
+    f = Finding("collective-accounting", "error", "u", "m", key="k")
+    path = tmp_path / "AUDIT_baseline.json"
+    write_baseline([f], str(path))
+    base = load_baseline(str(path))
+    res = run_audit([], baseline=base)
+    assert res.ok
+    assert res.stale_suppressions == [f.fingerprint]

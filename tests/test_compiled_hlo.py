@@ -1,0 +1,129 @@
+"""HLO-parsing edge cases for the measured half of the energy ledger.
+
+``collective_bytes`` / ``analyze_*`` must stay correct on the shapes
+XLA actually emits: modules with no collectives at all, fused variadic
+all-reduces whose result is a tuple, async ``-start``/``-done`` pairs
+(one transfer, two HLO lines), degenerate single-member groups, and
+collective-permutes whose group is spelled as ``source_target_pairs``
+rather than ``replica_groups``.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import collective_bytes
+from repro.telemetry.compiled import (analyze_lowerable, clear_analysis_cache,
+                                      collective_m_floats)
+
+
+def test_zero_collective_module():
+    """A purely local computation prices no collective traffic."""
+    fn = jax.jit(lambda x: jnp.sin(x) @ x.T)
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    costs = analyze_lowerable(fn, x, default_group=8)
+    assert costs.collectives == {}
+    assert costs.collective_wire_bytes == 0.0
+    assert costs.collective_m_floats == 0.0
+    assert costs.flops > 0
+
+
+def test_fused_variadic_all_reduce_tuple_result():
+    """XLA fuses independent psums into one variadic all-reduce whose
+    result is a TUPLE; bytes must sum over every element."""
+    hlo = ("  %ar = (f32[64,128]{1,0}, f32[256]{0}) "
+           "all-reduce(f32[64,128] %a, f32[256] %b), "
+           "replica_groups={{0,1,2,3}}, to_apply=%add\n")
+    _, breakdown = collective_bytes(hlo, default_group=8)
+    rec = breakdown["all-reduce"]
+    rb = (64 * 128 + 256) * 4
+    assert rec["count"] == 1
+    assert rec["result_bytes"] == rb
+    assert abs(rec["wire_bytes"] - 2 * rb * 3 / 4) < 1
+    # groups map keyed by the op's OWN replica group, not the default
+    assert set(rec["groups"]) == {4}
+    assert rec["groups"][4]["m_floats"] == 64 * 128 + 256
+
+
+def test_async_start_done_counted_once():
+    """An async pair is ONE transfer: count the -start, skip the
+    -done."""
+    hlo = (
+        "  %ags = (f32[16,128], f32[128,128]) all-gather-start("
+        "f32[16,128] %x), replica_groups={{0,1,2,3,4,5,6,7}}, "
+        "dimensions={0}\n"
+        "  %agd = f32[128,128] all-gather-done("
+        "(f32[16,128], f32[128,128]) %ags)\n")
+    _, breakdown = collective_bytes(hlo, default_group=8)
+    assert set(breakdown) == {"all-gather"}
+    assert breakdown["all-gather"]["count"] == 1
+
+
+def test_bf16_counts_half_a_float():
+    hlo = ("  %ar = bf16[1024]{0} all-reduce(bf16[1024] %x), "
+           "replica_groups={{0,1}}, to_apply=%add\n")
+    _, breakdown = collective_bytes(hlo, default_group=2)
+    # paper units are 4-byte floats: 1024 bf16 = 512 float units
+    assert breakdown["all-reduce"]["m_floats"] == 512.0
+    assert collective_m_floats(breakdown, 2) == 512.0
+
+
+def test_permute_group_from_source_target_pairs_ring():
+    """A ring rotation over a 4-member axis has no replica_groups; the
+    pair graph's connected component is the axis."""
+    hlo = ("  %cp = f32[64,32]{1,0} collective-permute(f32[64,32] %x), "
+           "source_target_pairs={{0,1},{1,2},{2,3},{3,0}}\n")
+    _, breakdown = collective_bytes(hlo, default_group=16)
+    rec = breakdown["collective-permute"]
+    assert set(rec["groups"]) == {4}
+    # permute wire = result, independent of the inferred group
+    assert rec["wire_bytes"] == 64 * 32 * 4
+
+
+def test_permute_group_from_pairs_1f1b_hop():
+    """A 1F1B stage boundary is an OPEN hop (no wraparound): stage 0
+    sends to stage 1 across dp=2 x tp=2 replicas — components of size
+    2, the pp axis."""
+    hlo = ("  %cp = f32[8,64]{1,0} collective-permute(f32[8,64] %x), "
+           "source_target_pairs={{0,4},{1,5},{2,6},{3,7}}\n")
+    _, breakdown = collective_bytes(hlo, default_group=8)
+    assert set(breakdown["collective-permute"]["groups"]) == {2}
+
+
+def test_degenerate_group_of_one_has_zero_wire():
+    hlo = ("  %ag = f32[4,64]{1,0} all-gather(f32[4,64] %x), "
+           "replica_groups={{0},{1},{2},{3}}, dimensions={0}\n")
+    total, breakdown = collective_bytes(hlo, default_group=4)
+    assert total == 0.0
+    assert breakdown["all-gather"]["groups"][1]["count"] == 1
+
+
+def test_mixed_groups_bucketed_separately():
+    """One module using two mesh axes must keep per-axis buckets (the
+    audit matches collectives by axis, the aggregate can't)."""
+    hlo = (
+        "  %a = f32[1024]{0} all-reduce(f32[1024] %x), "
+        "replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add\n"
+        "  %b = f32[2048]{0} all-reduce(f32[2048] %y), "
+        "replica_groups={{0,4},{1,5},{2,6},{3,7}}, to_apply=%add\n")
+    _, breakdown = collective_bytes(hlo, default_group=8)
+    groups = breakdown["all-reduce"]["groups"]
+    assert set(groups) == {2, 4}
+    assert groups[4]["m_floats"] == 1024.0
+    assert groups[2]["m_floats"] == 2048.0
+    assert breakdown["all-reduce"]["count"] == 2
+
+
+def test_analysis_cache_hit_same_module(mesh18):
+    """Analyzing the same lowered module twice returns the SAME memoized
+    record (one parse per process, the planner/audit contract)."""
+    from jax.sharding import PartitionSpec as P
+    from helpers import smap
+    clear_analysis_cache()
+
+    def f(x):
+        return jax.lax.psum(x, "model")
+
+    fn = smap(f, mesh18, P(None, None), P(None, None))
+    x = jax.ShapeDtypeStruct((8, 128), jnp.float32)
+    c1 = analyze_lowerable(fn, x, default_group=8)
+    c2 = analyze_lowerable(fn, x, default_group=8)
+    assert c1 is c2

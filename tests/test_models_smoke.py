@@ -60,11 +60,10 @@ def test_arch_fsdp_variant(mesh24, arch):
 
 def test_dense_vs_phantom_param_counts():
     """The phantom variant of an arch is a smaller model (paper Table I)."""
-    import dataclasses
+    from repro.configs.base import dense_projection_map
     from repro.models.model import count_params
     cfg = get_config("qwen2.5-14b")
-    dense = cfg.replace(phantom=dataclasses.replace(
-        cfg.phantom, apply_ffn=False, apply_attn_proj=False))
+    dense = cfg.replace(projections=dense_projection_map())
     assert count_params(cfg, tp=16) < count_params(dense, tp=16)
 
 
@@ -83,10 +82,9 @@ def test_full_config_geometries():
         "jamba-1.5-large-398b": (300e9, 480e9),
         "seamless-m4t-large-v2": (1e9, 4e9),
     }
-    import dataclasses
+    from repro.configs.base import dense_projection_map
     for arch, (lo, hi) in expected_order.items():
         cfg = get_config(arch)
-        dense = cfg.replace(phantom=dataclasses.replace(
-            cfg.phantom, apply_ffn=False, apply_attn_proj=False))
+        dense = cfg.replace(projections=dense_projection_map())
         n = count_params(dense, tp=16)
         assert lo < n < hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"

@@ -134,21 +134,28 @@ def test_lowrank_distill_init_reconstructs_teacher(mesh24):
 def test_ffn_impl_shim_decls_and_params_identical(mesh24):
     from repro.core.ffn import ffn_decls
     axes = MeshAxes.from_mesh(mesh24)
-    old = get_config("paper-ffn-4k", smoke=True)        # ffn_impl="phantom"
-    assert old.ffn_impl == "phantom"
-    new = old.replace(
-        ffn_impl="dense",
+    shipped = get_config("paper-ffn-4k", smoke=True)
+    # a legacy external caller's config: the deprecated ffn_impl=
+    # selector with a bare PhantomConfig and NO explicit ProjectionMap
+    # (shipped configs now carry explicit maps; the shim must keep
+    # expanding to the same thing)
+    old = shipped.replace(ffn_impl="phantom", projections=ProjectionMap())
+    new = shipped.replace(
         projections=ProjectionMap(ffn_layer=ProjectionSpec(
-            kind="phantom", k=old.phantom.k, variant=old.phantom.variant)))
+            kind="phantom", k=shipped.phantom.k,
+            variant=shipped.phantom.variant)))
     d_old, d_new = ffn_decls(old, axes), ffn_decls(new, axes)
     assert d_old == d_new
+    # the shipped explicit-map config expands identically to the legacy
+    # spelling it replaced
+    assert ffn_decls(shipped, axes) == d_old
     p_old = materialize(d_old, seed=0)
     p_new = materialize(d_new, seed=0)
     jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
                  p_old, p_new)
     # and the dense baseline == explicit tensor_col
-    dense = old.replace(ffn_impl="dense")
-    explicit = old.replace(ffn_impl="dense", projections=ProjectionMap(
+    dense = shipped.replace(ffn_impl="dense", projections=ProjectionMap())
+    explicit = shipped.replace(projections=ProjectionMap(
         ffn_layer=ProjectionSpec(kind="tensor_col")))
     assert ffn_decls(dense, axes) == ffn_decls(explicit, axes)
 
