@@ -1,0 +1,98 @@
+"""Elastic smoke: kill a simulated host mid-run, recover, price it.
+
+The paper's elastic story end-to-end: paper-FFN training starts on the
+baseline tensor plan pinned to the FULL 8-device budget; at step 25 a
+scripted fault kills one of the 4 simulated hosts (2 devices).  The
+heartbeat monitor detects the loss after the (virtual-clock) timeout,
+the planner re-solves dp×tp×pp×k over the 6 survivors — picking the
+paper-sanctioned downsize onto a phantom plan, SVD-distilling the
+tensor checkpoint into the phantom factor class — the re-planned mesh
+passes the static collective audit, training resumes from the latest
+checkpoint, and the run must still reach the target loss.
+
+The recovery energy account (``telemetry.recovery_account``) prices the
+whole episode: useful steps, replayed steps, checkpoint IO and restart
+(restore + re-plan + recompile) overhead.  The suite (and the CI
+``elastic-smoke`` job, re-checking from ``BENCH_report.json``) asserts
+the REPLAY overhead ratio — replayed-step joules over all-step joules,
+the one quantity independent of this host's wall-clock speed — lands in
+``REPLAY_BAND``: a kill at step 25 with checkpoint cadence 10 and a
+~2-3-step detection lag must replay a handful of steps, not zero (no
+actual recovery) and not a third of the run (checkpoint/detection
+regression).
+"""
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks.common import emit, get_ledger
+
+REPLAY_BAND = (0.02, 0.30)
+KILL_STEP = 25
+KILL_HOST = "host3"
+
+
+def run():
+    from repro.train.elastic import ElasticConfig, run_elastic
+    from repro.train.fault import FaultScript
+
+    cfg = ElasticConfig(
+        workdir=tempfile.mkdtemp(prefix="elastic_smoke_"),
+        devices=8, hosts=4, width=64, depth=2, batch=32,
+        target_loss=0.12, max_steps=300, checkpoint_every=10,
+        initial_strategy="tensor_col", heartbeat_timeout_s=2.5)
+    res = run_elastic(
+        cfg, ledger=get_ledger(),
+        fault_script=FaultScript(kills=((KILL_STEP, KILL_HOST),)))
+    acct = res.account
+
+    if res.aborted:
+        raise RuntimeError("elastic run aborted instead of recovering")
+    if not res.reached_target:
+        raise RuntimeError(
+            f"target loss {cfg.target_loss} missed: final "
+            f"{res.final_loss:.4f} at step {res.final_step}")
+    if len(res.recoveries) != 1:
+        raise RuntimeError(
+            f"expected exactly 1 recovery, got {len(res.recoveries)}")
+    rec = res.recoveries[0]
+    if rec["devices_after"] >= rec["devices_before"]:
+        raise RuntimeError(
+            f"re-plan did not downsize: {rec['devices_before']} -> "
+            f"{rec['devices_after']} devices")
+    if not rec["audit_ok"]:
+        raise RuntimeError("re-planned mesh did not pass the static audit")
+    ratio = acct["replay_overhead_ratio"]
+    if not (REPLAY_BAND[0] <= ratio <= REPLAY_BAND[1]):
+        raise RuntimeError(
+            f"replay overhead ratio {ratio:.4f} outside {REPLAY_BAND}")
+
+    emit("elastic_smoke_recovery",
+         acct["wall_s"] * 1e6,
+         f"plans={'>'.join(res.plan_names)};kill={KILL_STEP};"
+         f"restored={rec['restored_step']};"
+         f"replayed={rec['replayed_steps']};"
+         f"devices={rec['devices_before']}->{rec['devices_after']};"
+         f"distilled={rec['distilled']};"
+         f"replay_ratio={ratio:.4f};"
+         f"final_loss={res.final_loss:.4f}@{res.final_step}",
+         kind="elastic", arch=f"ffn{cfg.width}x{cfg.depth}",
+         impl=res.plan_names[-1], p=0,
+         measured={"final_loss": res.final_loss,
+                   "steps": res.final_step, "wall_s": acct["wall_s"],
+                   "replayed_steps": acct["replayed_steps"]},
+         predicted={"energy_j_total": acct["energy_j_total"],
+                    "energy_j_useful": acct["energy_j_useful"],
+                    "energy_j_replay": acct["energy_j_replay"],
+                    "energy_j_ckpt_io": acct["energy_j_ckpt_io"],
+                    "energy_j_restart": acct["energy_j_restart"]},
+         extra={"replay_band": list(REPLAY_BAND),
+                "replay_overhead_ratio": ratio,
+                "recovery_overhead_ratio":
+                    acct["recovery_overhead_ratio"],
+                "kill_step": KILL_STEP, "kill_host": KILL_HOST,
+                "recovery": rec, "target_loss": cfg.target_loss})
+
+
+if __name__ == "__main__":
+    run()

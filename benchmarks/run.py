@@ -35,6 +35,8 @@ SUITES = {
                   "iso-loss frontier -> PLAN_report.json",
     "serve_bench": "serving runtime: fixed trace through tensor + "
                    "phantom configs, SLO + joules-per-token ledger rows",
+    "elastic_smoke": "kill a simulated host mid-run: detect, re-plan "
+                     "onto survivors, restore, price the recovery",
     "fig5_comm": "paper Fig. 5a: TP vs PP communication per epoch",
     "fig5_exec": "paper Fig. 5b/c: TP vs PP execution time per epoch",
     "fig6_large": "paper Fig. 6: large-n projection + memory footprints",
@@ -54,16 +56,17 @@ def main(argv=None) -> int:
     names = list(sys.argv[1:] if argv is None else argv)
     if "--list" in names or "-l" in names:
         return list_suites()
-    from benchmarks import (comm_model, common, fig5_comm, fig5_exec,
-                            fig6_large, pipeline_smoke, plan_smoke,
-                            roofline, serve_bench, table1_energy,
-                            train_smoke)
+    from benchmarks import (comm_model, common, elastic_smoke, fig5_comm,
+                            fig5_exec, fig6_large, pipeline_smoke,
+                            plan_smoke, roofline, serve_bench,
+                            table1_energy, train_smoke)
     suites = {
         "comm_model": comm_model.run,
         "train_smoke": train_smoke.run,
         "pipeline_smoke": pipeline_smoke.run,
         "plan_smoke": plan_smoke.run,
         "serve_bench": serve_bench.run,
+        "elastic_smoke": elastic_smoke.run,
         "fig5_comm": fig5_comm.run,
         "fig5_exec": fig5_exec.run,
         "fig6_large": fig6_large.run,

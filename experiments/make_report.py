@@ -1,5 +1,5 @@
-"""Build the §Dry-run, §Roofline, §Energy-ledger and §Planner markdown
-tables in EXPERIMENTS.md from experiments/dryrun/*.json and the
+"""Build the §Dry-run, §Roofline, §Energy-ledger, §Planner and §Elastic
+markdown tables in EXPERIMENTS.md from experiments/dryrun/*.json and the
 repo-root BENCH_report.json / PLAN_report.json (written by
 ``python -m benchmarks.run`` and ``python -m repro.launch.plan``)."""
 import glob
@@ -152,6 +152,50 @@ def ledger_table(report):
     return "\n".join(lines)
 
 
+def elastic_table(report):
+    """The elastic recovery accounts from BENCH_report.json: every run
+    that survived a simulated host loss, with the replay/restart joules
+    broken out of the total (docs/elastic.md)."""
+    if report is None:
+        return ("*(no BENCH_report.json — run `python -m benchmarks.run "
+                "elastic_smoke` to generate the recovery account)*")
+    rows = [e for e in report.get("entries", [])
+            if e.get("kind") == "elastic"
+            and (e.get("extra") or {}).get("recovery", {}).get("schema")
+            == "recovery-account/v1"]
+    if not rows:
+        return ("*(no elastic rows in BENCH_report.json — run `python -m "
+                "benchmarks.run elastic_smoke`)*")
+    lines = [
+        "| run | plans | restarts | replayed steps | total J | "
+        "useful J | replay J | ckpt IO J | restart J | replay ratio | "
+        "recovery ratio | final loss |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for e in rows:
+        x = e["extra"]
+        a = x["recovery"]
+        m = e.get("measured") or {}
+        loss = m.get("final_loss")
+        loss_cell = (f"{loss:.4f}@{m.get('steps', '-')}"
+                     if loss is not None else "-")
+        lines.append(
+            f"| {e['name']} | {' → '.join(x.get('plans', []))} | "
+            f"{a['restarts']} | {a['replayed_steps']} | "
+            f"{a['energy_j_total']:.3g} | {a['energy_j_useful']:.3g} | "
+            f"{a['energy_j_replay']:.3g} | {a['energy_j_ckpt_io']:.3g} | "
+            f"{a['energy_j_restart']:.3g} | "
+            f"{a['replay_overhead_ratio']:.3f} | "
+            f"{a['recovery_overhead_ratio']:.3f} | {loss_cell} |")
+    lines.append("")
+    lines.append("Replay ratio = replayed-step joules / all-step joules "
+                 "(host-speed independent; the CI `elastic-smoke` job "
+                 "bands it).  Recovery ratio additionally counts "
+                 "checkpoint IO and restart (restore + re-plan + "
+                 "recompile) energy.  See docs/elastic.md.")
+    return "\n".join(lines)
+
+
 def load_plan(path=PLAN_PATH):
     if not os.path.exists(path):
         return None
@@ -224,3 +268,6 @@ if __name__ == "__main__":
     if which in ("all", "plan"):
         print("\n### configuration planner (iso-loss frontier)\n")
         print(plan_table(load_plan()))
+    if which in ("all", "elastic"):
+        print("\n### elastic recovery (fault -> re-plan -> restore)\n")
+        print(elastic_table(load_ledger()))

@@ -17,9 +17,24 @@ doesn't exist yet) and applies the winning plan: its ``ProjectionSpec``
 becomes the config's default projection for every site, and the mesh
 becomes the winner's (dp, tp).  ``--plan <path>`` applies a specific
 report.  See docs/planner.md.
+
+``--elastic`` switches to the elastic fault-tolerant runtime
+(docs/elastic.md): paper-FFN training on a simulated multi-host cluster
+with async checkpointing, heartbeat failure detection, and energy-aware
+re-planning of dp×tp×pp×k over the survivors.  ``--kill-at-step N
+--kill-host hostK`` injects a deterministic device-loss event:
+
+  PYTHONPATH=src python -m repro.launch.train --elastic \
+      --devices 8 --hosts 4 --kill-at-step 25 --kill-host host3
+
+The run must survive the loss, re-plan onto an audit-clean surviving
+mesh, restore from the latest checkpoint and reach --target-loss; the
+recovery energy account (replayed steps, checkpoint IO, restart) lands
+in ``BENCH_report.json``.  Exit code reflects success.
 """
 import argparse
 import os
+import sys
 
 
 def _apply_plan(args, cfg):
@@ -77,13 +92,67 @@ def _apply_plan(args, cfg):
     return cfg, p["dp"], p["tp"], pp
 
 
+def run_elastic_cli(args) -> int:
+    """The --elastic entry point: paper-FFN elastic training with
+    scripted fault injection; returns a process exit code (0 iff the
+    run survived its faults and reached --target-loss)."""
+    import tempfile
+
+    from repro.telemetry import Ledger
+    from repro.train.elastic import ElasticConfig, run_elastic
+    from repro.train.fault import FaultScript
+
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    report_out = args.report_out or os.path.join(root, "BENCH_report.json")
+    jsonl = os.path.join(os.path.dirname(report_out) or ".",
+                         "BENCH_ledger.jsonl")
+
+    kills = []
+    steps = args.kill_at_step or []
+    names = args.kill_host or []
+    for i, s in enumerate(steps):
+        # unnamed kills default to the highest-numbered hosts first
+        host = (names[i] if i < len(names)
+                else f"host{args.hosts - 1 - i}")
+        kills.append((s, host))
+
+    cfg = ElasticConfig(
+        workdir=args.workdir or tempfile.mkdtemp(prefix="elastic_"),
+        devices=args.devices, hosts=args.hosts, width=args.width,
+        depth=args.depth, batch=args.batch, target_loss=args.target_loss,
+        max_steps=args.steps, checkpoint_every=args.ckpt_every)
+    ledger = Ledger(run="launch.train.elastic", jsonl_path=jsonl)
+    res = run_elastic(cfg, ledger=ledger,
+                      fault_script=FaultScript(kills=tuple(kills)))
+    ledger.write_report(report_out)
+    acct = res.account
+    print(f"[elastic] report -> {report_out}")
+    print(f"[elastic] energy_j_total {acct['energy_j_total']:.3e} "
+          f"(useful {acct['energy_j_useful']:.3e}, "
+          f"replay {acct['energy_j_replay']:.3e}, "
+          f"ckpt_io {acct['energy_j_ckpt_io']:.3e}, "
+          f"restart {acct['energy_j_restart']:.3e}); "
+          f"replay_overhead {acct['replay_overhead_ratio']:.3f}")
+    if res.aborted:
+        print("[elastic] FAILED: run aborted")
+        return 2
+    if not res.reached_target:
+        print(f"[elastic] FAILED: final loss {res.final_loss:.4f} > "
+              f"target {cfg.target_loss}")
+        return 1
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-14b")
     ap.add_argument("--impl", default="phantom",
                     choices=["dense", "phantom"])
-    ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=None,
+                    help="train steps (default 100; 300 with --elastic)")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="global batch (default 8; 32 with --elastic)")
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
@@ -99,13 +168,51 @@ def main():
                     help="'auto' or a PLAN_report.json path: apply the "
                          "energy planner's winning configuration "
                          "(projections + mesh)")
+    # --- elastic fault-tolerant runtime (docs/elastic.md) ---
+    ap.add_argument("--elastic", action="store_true",
+                    help="run the elastic fault-tolerant paper-FFN "
+                         "runtime with energy-aware re-planning")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="[elastic] total device budget")
+    ap.add_argument("--hosts", type=int, default=4,
+                    help="[elastic] simulated hosts (devices%%hosts==0)")
+    ap.add_argument("--kill-at-step", type=int, action="append",
+                    default=None, metavar="N",
+                    help="[elastic] inject a host loss at step N "
+                         "(repeatable)")
+    ap.add_argument("--kill-host", action="append", default=None,
+                    metavar="HOST",
+                    help="[elastic] which host dies at the matching "
+                         "--kill-at-step (default hostH, last first)")
+    ap.add_argument("--target-loss", type=float, default=0.12,
+                    help="[elastic] stop when teacher loss reaches this")
+    ap.add_argument("--width", type=int, default=64,
+                    help="[elastic] paper-FFN width")
+    ap.add_argument("--depth", type=int, default=2,
+                    help="[elastic] paper-FFN depth")
+    ap.add_argument("--ckpt-every", type=int, default=10,
+                    help="[elastic] checkpoint cadence (steps)")
+    ap.add_argument("--workdir", default=None,
+                    help="[elastic] checkpoint/heartbeat dir "
+                         "(default: a temp dir)")
+    ap.add_argument("--report-out", default=None,
+                    help="[elastic] write the energy ledger report here "
+                         "(default: repo-root BENCH_report.json)")
     args = ap.parse_args()
+    if args.steps is None:
+        args.steps = 300 if args.elastic else 100
+    if args.batch is None:
+        args.batch = 32 if args.elastic else 8
 
     if "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
-        ndev = args.dp * args.tp * max(args.pp, 1)
+        ndev = (args.devices if args.elastic
+                else args.dp * args.tp * max(args.pp, 1))
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={ndev} "
             + os.environ.get("XLA_FLAGS", ""))
+
+    if args.elastic:
+        sys.exit(run_elastic_cli(args))
 
     from repro.configs.base import ShapeConfig, get_config
     from repro.data.synthetic import LMDataset

@@ -25,6 +25,7 @@ from repro.telemetry.predict import (event_wire_bytes, events_for,
                                      ffn_step_prediction,
                                      measured_energy_fields,
                                      pipeline_ffn_step_prediction,
+                                     recovery_account,
                                      serve_site_strategies,
                                      serve_step_prediction,
                                      strategy_prediction)
@@ -39,7 +40,8 @@ __all__ = [
     "compile_lowered", "SCHEMA", "Ledger", "LedgerEntry", "load_report",
     "StepMeter", "measure", "event_wire_bytes", "events_for",
     "ffn_step_prediction", "measured_energy_fields",
-    "pipeline_ffn_step_prediction", "serve_site_strategies",
+    "pipeline_ffn_step_prediction", "recovery_account",
+    "serve_site_strategies",
     "serve_step_prediction", "strategy_prediction",
     "make_ffn_pipeline_probe_step", "make_ffn_probe_step",
     "measure_ffn_pipeline_step", "measure_ffn_step",

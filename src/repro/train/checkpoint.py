@@ -3,24 +3,47 @@
 No orbax/tensorstore in this container, so the manager is self-contained:
 
 * **Sharded save** — each param leaf is written as a .npy blob under a
-  step directory, with an index (msgpack if available, else JSON) holding
-  the pytree structure, global shapes and logical PartitionSpecs.
-* **Async** — device->host transfer happens on the caller thread (cheap),
-  file IO on a background thread; ``wait()`` joins before exit.  A save is
-  atomic: written to ``step_N.tmp`` then renamed.
-* **Elastic restore** — blobs store GLOBAL arrays, so restore works on any
-  mesh shape/device count: arrays are re-sharded by device_put with the
-  target mesh's NamedSharding (tested by tests/test_checkpoint.py with
-  save-on-(2,4) -> restore-on-(1,2)).
-* **Fault tolerance** — ``restore_latest`` skips corrupt/partial
-  checkpoints (crash mid-save) and falls back to the previous one.
+  step directory, with a JSON index holding the pytree structure, global
+  shapes and an optional caller-supplied ``meta`` block (the elastic
+  runtime stores the executing plan there so restore knows the model
+  class it is converting FROM).
+* **Async** — device->host transfer happens on the caller thread
+  (cheap), file IO on a single serial background worker; ``save_async``
+  returns immediately and ``flush()`` (aliased ``wait()``) joins every
+  pending write.  A process-exit hook flushes all live managers, so a
+  trainer that crashes out of its loop never abandons a queued save.
+* **Atomic commits + the ``latest`` invariant** — a save writes to
+  ``step_N.tmp``, places the ``COMMITTED`` marker last, renames the
+  directory, and only THEN atomically updates the ``latest`` pointer
+  file.  ``latest`` therefore always names a complete checkpoint: a
+  crash mid-write leaves a ``.tmp`` orphan (swept on the next manager
+  construction) and an untouched ``latest``.  ``_gc`` runs after the
+  commit, never deletes the ``latest`` target, and keeps the newest
+  ``keep`` complete checkpoints.
+* **Elastic restore** — blobs store GLOBAL arrays, so restore works on
+  any mesh shape/device count: arrays are re-sharded by device_put with
+  the target mesh's NamedSharding.  ``load_host`` exposes the raw host
+  tree for model-class conversion (``train/elastic.py``).
+* **Fault tolerance** — ``restore_latest`` prefers the ``latest``
+  pointer, skips corrupt/partial checkpoints and falls back to the
+  previous one.  ``invalidate_after(step)`` truncates checkpoints from
+  an abandoned timeline after an elastic restore (without it, a later
+  crash would resume from post-fault state that was never trained
+  through).
+* **IO accounting** — ``io_stats()`` reports cumulative write seconds /
+  bytes / save count, the measured side of the recovery energy account
+  (``telemetry.recovery_account``).
 """
 from __future__ import annotations
 
+import atexit
 import json
 import os
+import queue
 import shutil
 import threading
+import time
+import weakref
 from typing import Optional
 
 import jax
@@ -28,7 +51,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.parallel.axes import MeshAxes, resolve_spec
-from repro.parallel.params import is_decl, specs as decl_specs
+from repro.parallel.params import is_decl
+
+_LATEST = "latest"
 
 
 def _flatten_with_paths(tree):
@@ -41,39 +66,84 @@ def _flatten_with_paths(tree):
     return out, treedef
 
 
+# all live managers, flushed once at interpreter exit so a queued save
+# can never be lost to the daemon worker dying with the process
+_MANAGERS: "weakref.WeakSet" = weakref.WeakSet()
+
+
+@atexit.register
+def _flush_all_managers():
+    for mgr in list(_MANAGERS):
+        try:
+            mgr.flush(raise_errors=False)
+        except Exception:
+            pass
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
-        self._thread: Optional[threading.Thread] = None
+        self._queue: "queue.Queue" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        self._errors: list = []
+        self.io_seconds = 0.0
+        self.io_bytes = 0
+        self.saves = 0
+        self._sweep_orphans()
+        _MANAGERS.add(self)
 
     # ----------------------------------------------------------------- save
-    def save_async(self, step: int, params, opt_state, extra=None):
-        """Snapshot to host, then write on a background thread."""
-        self.wait()
+    def save_async(self, step: int, params, opt_state, extra=None,
+                   meta: Optional[dict] = None):
+        """Snapshot to host NOW (so donated device buffers are safe to
+        reuse), then enqueue the file write — returns without blocking
+        on IO.  Writes are serialized on one background worker, so a
+        fast save cadence can queue several steps; ``flush()`` joins
+        them all."""
         host = jax.tree.map(lambda a: np.asarray(jax.device_get(a)),
                             {"params": params, "opt": opt_state,
                              "extra": extra if extra is not None else {}})
-        self._thread = threading.Thread(
-            target=self._write, args=(step, host), daemon=True)
-        self._thread.start()
+        self._ensure_worker()
+        self._queue.put((step, host, dict(meta or {})))
 
-    def save(self, step: int, params, opt_state, extra=None):
-        self.save_async(step, params, opt_state, extra)
-        self.wait()
+    def save(self, step: int, params, opt_state, extra=None,
+             meta: Optional[dict] = None):
+        self.save_async(step, params, opt_state, extra, meta)
+        self.flush()
 
-    def _write(self, step: int, host_tree):
+    def _ensure_worker(self):
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(
+                target=self._worker_loop, daemon=True,
+                name=f"ckpt-writer:{self.dir}")
+            self._worker.start()
+
+    def _worker_loop(self):
+        while True:
+            job = self._queue.get()
+            try:
+                self._write(*job)
+            except Exception as exc:    # surfaced at the next flush()
+                self._errors.append(exc)
+            finally:
+                self._queue.task_done()
+
+    def _write(self, step: int, host_tree, meta: dict):
+        t0 = time.perf_counter()
         tmp = os.path.join(self.dir, f"step_{step:010d}.tmp")
         final = os.path.join(self.dir, f"step_{step:010d}")
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
         flat, _ = _flatten_with_paths(host_tree)
-        index = {"step": step, "leaves": {}}
+        index = {"step": step, "leaves": {}, "meta": meta}
+        nbytes = 0
         for i, (key, leaf) in enumerate(flat):
             fn = f"leaf_{i:05d}.npy"
             np.save(os.path.join(tmp, fn), leaf)
+            nbytes += leaf.nbytes
             index["leaves"][key] = {"file": fn,
                                     "shape": list(leaf.shape),
                                     "dtype": str(leaf.dtype)}
@@ -82,17 +152,114 @@ class CheckpointManager:
         # marker written LAST: its presence == checkpoint is complete
         with open(os.path.join(tmp, "COMMITTED"), "w") as f:
             f.write(str(step))
+        if os.path.exists(final):
+            shutil.rmtree(final)
         os.replace(tmp, final)
+        # `latest` moves only AFTER the rename — it always names a
+        # complete checkpoint, and _gc never collects its target
+        self._set_latest(step)
         self._gc()
+        self.io_seconds += time.perf_counter() - t0
+        self.io_bytes += nbytes
+        self.saves += 1
 
+    def flush(self, raise_errors: bool = True):
+        """Join every pending write.  Write errors collected by the
+        worker are raised here (the save itself is non-blocking, so this
+        is the first point the caller can observe them)."""
+        self._queue.join()
+        if self._errors and raise_errors:
+            exc, self._errors = self._errors[0], []
+            raise exc
+
+    # back-compat alias (seed-era API)
     def wait(self):
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        self.flush()
+
+    def close(self):
+        self.flush()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc_info):
+        self.flush(raise_errors=exc_info[0] is None)
+        return False
+
+    def io_stats(self) -> dict:
+        return {"io_seconds": self.io_seconds, "io_bytes": self.io_bytes,
+                "saves": self.saves}
+
+    # ----------------------------------------------------- latest & hygiene
+    def _set_latest(self, step: int):
+        tmp = os.path.join(self.dir, _LATEST + ".tmp")
+        with open(tmp, "w") as f:
+            f.write(str(step))
+        os.replace(tmp, os.path.join(self.dir, _LATEST))
+
+    def latest_step(self) -> Optional[int]:
+        """The step the ``latest`` pointer names, verified complete;
+        falls back to the newest COMMITTED directory."""
+        path = os.path.join(self.dir, _LATEST)
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    step = int(f.read().strip())
+                marker = os.path.join(self.dir, f"step_{step:010d}",
+                                      "COMMITTED")
+                if os.path.exists(marker):
+                    return step
+            except (ValueError, OSError):
+                pass
+        steps = self.available_steps()
+        return steps[-1] if steps else None
+
+    def _sweep_orphans(self):
+        """Remove torn ``.tmp`` partials (crash mid-write) and repair a
+        ``latest`` pointer naming a missing/incomplete checkpoint."""
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
+        path = os.path.join(self.dir, _LATEST)
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    step = int(f.read().strip())
+                ok = os.path.exists(os.path.join(
+                    self.dir, f"step_{step:010d}", "COMMITTED"))
+            except (ValueError, OSError):
+                ok = False
+            if not ok:
+                steps = self.available_steps()
+                if steps:
+                    self._set_latest(steps[-1])
+                else:
+                    os.remove(path)
+
+    def invalidate_after(self, step: int):
+        """Drop checkpoints with step > ``step`` — the stale timeline
+        left behind when an elastic restore rewinds training.  Joins
+        pending writes first so an in-flight save of abandoned state
+        cannot commit afterwards."""
+        self.flush(raise_errors=False)
+        for s in self.available_steps():
+            if s > step:
+                shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                              ignore_errors=True)
+        remaining = self.available_steps()
+        path = os.path.join(self.dir, _LATEST)
+        if remaining:
+            self._set_latest(remaining[-1])
+        elif os.path.exists(path):
+            os.remove(path)
 
     def _gc(self):
         steps = self.available_steps()
+        latest = self.latest_step()
         for s in steps[:-self.keep]:
+            if s == latest:
+                continue
             shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
                           ignore_errors=True)
 
@@ -106,25 +273,40 @@ class CheckpointManager:
                 out.append(int(name.split("_")[1]))
         return out
 
-    def restore(self, step: int, decls, opt_decls, mesh=None):
-        """Rebuild (TrainState-like) from a step dir; reshards to `mesh`
-        (elastic: any device count)."""
+    def load_host(self, step: int):
+        """Raw access: ``(index, {key: np.ndarray})`` with keys the
+        ``/``-joined tree paths.  The elastic runtime converts this host
+        tree across model classes before placing it on the new mesh."""
         path = os.path.join(self.dir, f"step_{step:010d}")
         with open(os.path.join(path, "index.json")) as f:
             index = json.load(f)
+        leaves = {key: np.load(os.path.join(path, rec["file"]))
+                  for key, rec in index["leaves"].items()}
+        return index, leaves
+
+    def meta(self, step: int) -> dict:
+        with open(os.path.join(self.dir, f"step_{step:010d}",
+                               "index.json")) as f:
+            return json.load(f).get("meta", {})
+
+    def restore(self, step: int, decls, opt_decls, mesh=None):
+        """Rebuild (TrainState-like) from a step dir; reshards to `mesh`
+        (elastic: any device count)."""
+        index, leaves = self.load_host(step)
         skeleton = {"params": decls, "opt": opt_decls, "extra": {}}
         flat, treedef = _flatten_with_paths(skeleton)
-        leaves = []
-        for key, decl in flat:
-            meta = index["leaves"][key]
-            arr = np.load(os.path.join(path, meta["file"]))
-            leaves.append(self._place(arr, decl, mesh))
-        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        placed = [self._place(leaves[key], decl, mesh)
+                  for key, decl in flat]
+        tree = jax.tree_util.tree_unflatten(treedef, placed)
         from repro.train.trainer import TrainState
         return TrainState(tree["params"], tree["opt"], step)
 
     def restore_latest(self, decls, opt_decls, mesh=None):
-        for step in reversed(self.available_steps()):
+        steps = self.available_steps()
+        latest = self.latest_step()
+        order = ([latest] if latest is not None else []) \
+            + [s for s in reversed(steps) if s != latest]
+        for step in order:
             try:
                 return self.restore(step, decls, opt_decls, mesh)
             except Exception as e:  # corrupt checkpoint: fall back

@@ -3,32 +3,36 @@
 What a real multi-pod deployment needs, and what this module provides:
 
 1. **Checkpoint/restart** — delegated to ``CheckpointManager`` (atomic
-   commits, corrupt-checkpoint fallback, async writes).  The Trainer
-   checkpoints every N steps; on restart, ``restore_or_init`` resumes
-   bit-exact (tested).
+   commits, the `latest`-is-always-complete invariant, corrupt-checkpoint
+   fallback, truly-async writes with a flush-on-exit guarantee).  The
+   Trainer checkpoints every N steps; on restart, ``restore_or_init``
+   resumes bit-exact (tested).
 
 2. **Failure detection** — ``Heartbeat``: every worker bumps a per-host
    counter file (on real clusters: etcd/GCS object or jax coordination
    service KV); the elected monitor declares hosts dead after
    ``timeout_s`` and triggers a restart-from-checkpoint with the surviving
    host set.  Single-process containers exercise the same code path via
-   ``SimulatedCluster`` (tests/test_fault.py kills simulated hosts).
+   ``SimulatedCluster``; with ``virtual=True`` the cluster runs on a
+   manually-advanced ``VirtualClock`` so fault-injection tests are
+   deterministic and sleep-free.
 
 3. **Straggler mitigation** — ``StragglerDetector``: tracks per-step wall
    times; a step slower than ``threshold x`` the trailing median marks the
    step (on TPU pods the usual culprits are a host in thermal throttle or
-   an input-pipeline stall).  Policy hooks: log / checkpoint-now /
-   request-elastic-reshard.  Detection is cheap (host-side timestamps
-   around the donated step call, which blocks on the previous step's
-   completion — the jax dispatch model makes per-step host timing a good
-   proxy at scale).
+   an input-pipeline stall).  ``note_step_time`` is the wiring every
+   metered loop (Trainer, elastic runner) calls: a flagged straggler
+   emits a ledger event (kind ``fault``) and asks the ``RestartPolicy``
+   for a decision — checkpoint-now by default, so a wounded run leaves a
+   fresh restore point before it degrades further.
 
 4. **Elastic rescale** — checkpoints store GLOBAL arrays + logical specs,
-   so restore works on a different device count (e.g. drop from 2 pods to
-   1 after a pod loss, halving `dp`): ``CheckpointManager.restore`` simply
-   device_puts onto the new mesh's NamedShardings.  Batch schedule
-   adjusts: global batch stays fixed, per-device batch doubles (or
-   gradient accumulation doubles when memory-bound).
+   so restore works on a different device count; ``train/elastic.py``
+   goes further and RE-PLANS dp×tp×pp×k for the survivors (including the
+   paper-sanctioned downsize onto a phantom plan), converting the host
+   tree across model classes when the re-planned strategy differs.
+   ``FaultScript`` injects deterministic device-loss events into the
+   simulated cluster (the fault-injection campaign's driver).
 """
 from __future__ import annotations
 
@@ -36,27 +40,45 @@ import json
 import os
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class VirtualClock:
+    """Manually-advanced clock for deterministic fault tests."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = t0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float):
+        self.t += dt
 
 
 class Heartbeat:
-    """File-based heartbeat registry (stand-in for etcd/coordination-KV)."""
+    """File-based heartbeat registry (stand-in for etcd/coordination-KV).
 
-    def __init__(self, directory: str, host_id: str, timeout_s: float = 60.0):
+    ``clock`` is injectable (``VirtualClock`` in tests) so liveness is a
+    pure function of recorded beats, not wall-time sleeps."""
+
+    def __init__(self, directory: str, host_id: str, timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.time):
         self.dir = directory
         self.host_id = host_id
         self.timeout_s = timeout_s
+        self.clock = clock
         os.makedirs(directory, exist_ok=True)
 
     def beat(self, step: int):
         path = os.path.join(self.dir, f"{self.host_id}.hb")
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump({"t": time.time(), "step": step}, f)
+            json.dump({"t": self.clock(), "step": step}, f)
         os.replace(tmp, path)
 
     def alive_hosts(self) -> Dict[str, dict]:
-        now = time.time()
+        now = self.clock()
         out = {}
         for name in os.listdir(self.dir):
             if not name.endswith(".hb"):
@@ -99,6 +121,7 @@ class StragglerDetector:
 class RestartPolicy:
     """What the monitor does when a failure/straggler fires."""
     max_restarts: int = 100
+    checkpoint_on_straggler: bool = True
     restarts: int = 0
 
     def on_host_failure(self, dead: List[str], trainer) -> str:
@@ -109,21 +132,85 @@ class RestartPolicy:
         # (possibly smaller) mesh; here: restore-from-checkpoint.
         return "restore"
 
+    def on_straggler(self, step: int, dt: float,
+                     median: Optional[float] = None) -> str:
+        """A straggler is a warning, not a failure: it does not consume
+        the restart budget.  Checkpoint-now (the default) banks a restore
+        point while the run is still healthy enough to produce one."""
+        return "checkpoint" if self.checkpoint_on_straggler else "log"
+
+
+def note_step_time(detector: Optional[StragglerDetector],
+                   policy: Optional[RestartPolicy], step: int, dt_s: float,
+                   ledger=None, *, name: str = "straggler", arch: str = "",
+                   impl: str = "", p: int = 0) -> Optional[str]:
+    """The metered-loop straggler wiring (Trainer + elastic runner).
+
+    Records the step time; when the detector flags a straggler, emits a
+    ledger event (kind ``fault``) and returns the policy's decision
+    (``checkpoint`` | ``log``) for the caller to act on.  Returns None
+    on healthy steps or when no detector is installed."""
+    if detector is None or not detector.record(step, dt_s):
+        return None
+    _, _, median = detector.flagged[-1]
+    decision = (policy.on_straggler(step, dt_s, median)
+                if policy is not None else "log")
+    if ledger is not None:
+        from repro.telemetry import LedgerEntry
+        ledger.record(LedgerEntry(
+            name=f"{name}_step{step}", suite="fault", kind="fault",
+            arch=arch, impl=impl, p=p,
+            measured={"step": step, "dt_s": dt_s, "median_s": median,
+                      "slowdown": dt_s / median if median else 0.0},
+            extra={"event": "straggler", "decision": decision,
+                   "threshold": detector.threshold}))
+    return decision
+
+
+@dataclass(frozen=True)
+class FaultScript:
+    """Deterministic device-loss injection: ``kills`` is a tuple of
+    ``(step, host)`` pairs — at the start of ``step``, ``host`` stops
+    heartbeating.  The monitor then detects the loss after the heartbeat
+    timeout elapses (virtual clock: timeout_s / dt ticks later), which is
+    exactly the detection lag a real deployment pays."""
+    kills: Tuple[Tuple[int, str], ...] = ()
+
+    def hosts_at(self, step: int) -> List[str]:
+        return [h for s, h in self.kills if s == step]
+
+    @property
+    def kill_steps(self) -> List[int]:
+        return sorted({s for s, _ in self.kills})
+
 
 class SimulatedCluster:
     """Drives the fault path in a single process (used by tests):
-    N simulated hosts heartbeat; killing one makes the monitor restore."""
+    N simulated hosts heartbeat; killing one makes the monitor restore.
 
-    def __init__(self, tmpdir: str, hosts: int = 4, timeout_s: float = 0.5):
+    ``virtual=True`` gives the cluster a ``VirtualClock`` shared by all
+    heartbeats — ``advance(dt)`` moves simulated time, so a killed
+    host's staleness (and hence detection latency) is deterministic."""
+
+    def __init__(self, tmpdir: str, hosts: int = 4, timeout_s: float = 0.5,
+                 virtual: bool = False):
+        self.clock: Callable[[], float] = (VirtualClock() if virtual
+                                           else time.time)
         self.hosts = [f"host{i}" for i in range(hosts)]
-        self.hbs = {h: Heartbeat(tmpdir, h, timeout_s) for h in self.hosts}
-        self.monitor = Heartbeat(tmpdir, "monitor", timeout_s)
+        self.hbs = {h: Heartbeat(tmpdir, h, timeout_s, clock=self.clock)
+                    for h in self.hosts}
+        self.monitor = Heartbeat(tmpdir, "monitor", timeout_s,
+                                 clock=self.clock)
         self.killed = set()
 
     def tick(self, step: int):
         for h, hb in self.hbs.items():
             if h not in self.killed:
                 hb.beat(step)
+
+    def advance(self, dt: float):
+        if isinstance(self.clock, VirtualClock):
+            self.clock.advance(dt)
 
     def kill(self, host: str):
         self.killed.add(host)

@@ -188,7 +188,8 @@ class Trainer:
                  batch_spec=None, checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 100, keep_checkpoints: int = 3,
                  log_every: int = 10, log_fn: Callable = print,
-                 meter: Optional[StepMeter] = None, ledger=None):
+                 meter: Optional[StepMeter] = None, ledger=None,
+                 straggler=None, restart_policy=None):
         self.cfg, self.mesh, self.optimizer = cfg, mesh, optimizer
         self.dataset = dataset
         self.log_every, self.log_fn = log_every, log_fn
@@ -197,6 +198,8 @@ class Trainer:
         self.keep_checkpoints = keep_checkpoints
         self.meter = meter or StepMeter(f"train_{cfg.name}", warmup=1)
         self.ledger = ledger
+        self.straggler = straggler          # StragglerDetector | None
+        self.restart_policy = restart_policy  # RestartPolicy | None
         self._ledger_window = 0
         self.step_fn, self.decls, self.opt_decls = make_train_step(
             cfg, mesh, optimizer, microbatches=microbatches,
@@ -221,28 +224,46 @@ class Trainer:
         return self.init_state(seed)
 
     def run(self, state: TrainState, num_steps: int) -> TrainState:
+        from repro.train.fault import note_step_time
         params, opt_state = state.params, state.opt_state
         step = state.step
         losses = []
-        while step < num_steps:
-            batch = self.dataset(step)
-            params, opt_state, metrics = self.meter.call(
-                self.step_fn, params, opt_state, jnp.int32(step), batch)
-            step += 1
-            losses.append(metrics)
-            if step % self.log_every == 0:
-                m = jax.tree.map(lambda *xs: float(sum(map(float, xs)))
-                                 / len(xs), *losses)
-                recent = self.meter.times_us[-self.log_every:]
-                dt_ms = sum(recent) / len(recent) / 1e3
-                self.log_fn(f"[trainer] step {step} loss {m['loss']:.4f} "
-                            f"gnorm {m['grad_norm']:.3f} {dt_ms:.0f} ms/it")
-                losses = []
-            if (self._ckpt is not None
-                    and step % self.checkpoint_every == 0):
-                self._ckpt.save_async(step, params, opt_state)
+        axes = MeshAxes.from_mesh(self.mesh)
+        impl = ("phantom" if self.cfg.uses_phantom_sites() else "dense")
+        try:
+            while step < num_steps:
+                batch = self.dataset(step)
+                params, opt_state, metrics = self.meter.call(
+                    self.step_fn, params, opt_state, jnp.int32(step), batch)
+                step += 1
+                losses.append(metrics)
+                # straggler wiring: a flagged slow step emits a ledger
+                # event and may ask for an out-of-cadence checkpoint
+                decision = note_step_time(
+                    self.straggler, self.restart_policy, step,
+                    self.meter.times_us[-1] * 1e-6, self.ledger,
+                    name=f"straggler_{self.cfg.name}", arch=self.cfg.name,
+                    impl=impl, p=axes.tp)
+                if step % self.log_every == 0:
+                    m = jax.tree.map(lambda *xs: float(sum(map(float, xs)))
+                                     / len(xs), *losses)
+                    recent = self.meter.times_us[-self.log_every:]
+                    dt_ms = sum(recent) / len(recent) / 1e3
+                    self.log_fn(
+                        f"[trainer] step {step} loss {m['loss']:.4f} "
+                        f"gnorm {m['grad_norm']:.3f} {dt_ms:.0f} ms/it")
+                    losses = []
+                if self._ckpt is not None and (
+                        step % self.checkpoint_every == 0
+                        or decision == "checkpoint"):
+                    self._ckpt.save_async(step, params, opt_state)
+        finally:
+            # a crash mid-loop must not abandon a queued async save —
+            # errors already in flight take precedence over flush errors
+            if self._ckpt is not None:
+                self._ckpt.flush(raise_errors=False)
         if self._ckpt is not None:
-            self._ckpt.wait()
+            self._ckpt.flush()
         if self.ledger is not None:
             self.record_to(self.ledger)
         return TrainState(params, opt_state, step)

@@ -1,6 +1,10 @@
-"""Checkpointing: bitwise roundtrip, async atomicity, corrupt fallback,
-ELASTIC restore onto a different mesh."""
+"""Checkpointing: bitwise roundtrip, truly-async lifecycle (non-blocking
+save, flush-on-exit, torn-write atomicity, the latest-is-always-complete
+invariant), corrupt fallback, stale-timeline truncation, and ELASTIC
+restore onto a different mesh."""
 import os
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +31,130 @@ def _setup(mesh, tmp, arch="stablelm-3b"):
     params = materialize(decls, 0)
     return cfg, opt, step_fn, decls, opt_decls, params
 
+
+def _tiny_tree(scale=1.0):
+    return {"layers": {"w": np.full((2, 4, 4), scale, np.float32),
+                       "b": np.zeros((2, 4), np.float32)}}
+
+
+# ---------------------------------------------------------------------------
+# async lifecycle (host-tree only: no mesh needed)
+# ---------------------------------------------------------------------------
+
+def test_save_async_nonblocking(tmp_path, monkeypatch):
+    """save_async returns while the write is still in flight; flush
+    joins it and the checkpoint is then complete."""
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    gate = threading.Event()
+    orig = mgr._write
+
+    def slow_write(step, host, meta):
+        gate.wait(timeout=10.0)
+        orig(step, host, meta)
+
+    monkeypatch.setattr(mgr, "_write", slow_write)
+    t0 = time.perf_counter()
+    mgr.save_async(1, _tiny_tree(), {})
+    assert time.perf_counter() - t0 < 1.0      # did not wait on the gate
+    assert mgr.available_steps() == []         # write still gated
+    gate.set()
+    mgr.flush()
+    assert mgr.available_steps() == [1]
+    assert mgr.latest_step() == 1
+
+
+def test_flush_raises_worker_error(tmp_path, monkeypatch):
+    """Write failures surface at flush(), not silently in the worker."""
+    mgr = CheckpointManager(str(tmp_path))
+
+    def boom(step, host, meta):
+        raise IOError("disk on fire")
+
+    monkeypatch.setattr(mgr, "_write", boom)
+    mgr.save_async(1, _tiny_tree(), {})
+    with pytest.raises(IOError, match="disk on fire"):
+        mgr.flush()
+    # errors are consumed: a later healthy flush is clean
+    mgr.flush()
+
+
+def test_torn_write_leaves_latest_complete(tmp_path):
+    """A crash mid-save leaves a .tmp orphan and an untouched `latest`;
+    the next manager sweeps the orphan."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tiny_tree(), {})
+    # simulate a torn step-2 write: partial dir, no COMMITTED marker
+    torn = os.path.join(str(tmp_path), "step_0000000002.tmp")
+    os.makedirs(torn)
+    with open(os.path.join(torn, "leaf_00000.npy"), "wb") as f:
+        f.write(b"partial")
+    assert mgr.latest_step() == 1              # invariant holds
+    mgr2 = CheckpointManager(str(tmp_path))    # fresh process
+    assert not os.path.exists(torn)            # orphan swept
+    assert mgr2.latest_step() == 1
+    assert mgr2.available_steps() == [1]
+
+
+def test_latest_pointer_repair(tmp_path):
+    """A `latest` pointer naming a missing checkpoint (e.g. GC'd by an
+    older buggy manager) is repaired to the newest complete one."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tiny_tree(), {})
+    with open(os.path.join(str(tmp_path), "latest"), "w") as f:
+        f.write("99")
+    mgr2 = CheckpointManager(str(tmp_path))
+    assert mgr2.latest_step() == 1
+
+
+def test_invalidate_after_truncates_stale_timeline(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=10)
+    for s in (1, 2, 3):
+        mgr.save(s, _tiny_tree(float(s)), {})
+    mgr.invalidate_after(1)
+    assert mgr.available_steps() == [1]
+    assert mgr.latest_step() == 1
+    _, flat = mgr.load_host(1)
+    np.testing.assert_array_equal(flat["params/layers/w"],
+                                  np.full((2, 4, 4), 1.0, np.float32))
+
+
+def test_meta_roundtrip(tmp_path):
+    """The caller's meta block (the elastic runtime stores the executing
+    plan) survives the roundtrip."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, _tiny_tree(), {}, meta={"plan": {"name": "t", "tp": 2}})
+    assert mgr.meta(5) == {"plan": {"name": "t", "tp": 2}}
+    index, _ = mgr.load_host(5)
+    assert index["meta"]["plan"]["tp"] == 2
+
+
+def test_gc_respects_keep_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tiny_tree(), {})
+    assert mgr.available_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_context_manager_flushes(tmp_path):
+    with CheckpointManager(str(tmp_path)) as mgr:
+        mgr.save_async(1, _tiny_tree(), {})
+    assert mgr.available_steps() == [1]
+
+
+def test_io_stats_accumulate(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.io_stats() == {"io_seconds": 0.0, "io_bytes": 0, "saves": 0}
+    mgr.save(1, _tiny_tree(), {})
+    st = mgr.io_stats()
+    assert st["saves"] == 1
+    assert st["io_bytes"] >= _tiny_tree()["layers"]["w"].nbytes
+    assert st["io_seconds"] > 0
+
+
+# ---------------------------------------------------------------------------
+# sharded roundtrips (mesh-placed state)
+# ---------------------------------------------------------------------------
 
 def test_roundtrip_bitwise(mesh24, tmp_path):
     cfg, opt, step_fn, decls, opt_decls, params = _setup(mesh24, tmp_path)
@@ -74,7 +202,7 @@ def test_corrupt_checkpoint_fallback(mesh24, tmp_path):
     mgr = CheckpointManager(str(tmp_path), keep=5)
     mgr.save(1, params, opt_state)
     mgr.save(2, params, opt_state)
-    # corrupt the newer one (simulates a crash mid-write)
+    # corrupt the newer one (simulates post-commit disk damage)
     step2 = os.path.join(str(tmp_path), "step_0000000002")
     for f in os.listdir(step2):
         if f.startswith("leaf_00000"):
@@ -83,15 +211,6 @@ def test_corrupt_checkpoint_fallback(mesh24, tmp_path):
             break
     state = mgr.restore_latest(decls, opt_decls, mesh24)
     assert state is not None and state.step == 1
-
-
-def test_gc_keeps_latest(mesh24, tmp_path):
-    cfg, opt, step_fn, decls, opt_decls, params = _setup(mesh24, tmp_path)
-    opt_state = opt.init(params)
-    mgr = CheckpointManager(str(tmp_path), keep=2)
-    for s in (1, 2, 3, 4):
-        mgr.save(s, params, opt_state)
-    assert mgr.available_steps() == [3, 4]
 
 
 def test_resume_equals_uninterrupted(mesh24, tmp_path):

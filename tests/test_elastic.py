@@ -1,0 +1,192 @@
+"""Elastic runtime: deterministic seeded-fault fixtures.
+
+Every scenario the fault-injection campaign needs pinned down, each on
+a virtual clock (no sleeps), tiny widths and the audit gate off (the
+audit's own behavior is covered by test_analysis; the smoke suite runs
+it end-to-end)."""
+import numpy as np
+import pytest
+
+from repro.train.elastic import ElasticConfig, run_elastic
+from repro.train.fault import FaultScript
+
+
+def _cfg(tmp_path, **kw):
+    base = dict(workdir=str(tmp_path / "elastic"), devices=8, hosts=4,
+                width=32, depth=2, batch=16, target_loss=1e-9,
+                max_steps=24, checkpoint_every=5, ks=(4,),
+                audit_replan=False, heartbeat_timeout_s=2.5,
+                initial_strategy="tensor_col")
+    base.update(kw)
+    return ElasticConfig(**base)
+
+
+def _quiet(*a, **k):
+    pass
+
+
+def test_no_faults_runs_clean(tmp_path):
+    res = run_elastic(_cfg(tmp_path, max_steps=12), log_fn=_quiet)
+    assert not res.aborted
+    assert res.final_step == 12
+    assert res.recoveries == []
+    assert len(res.phases) == 1
+    assert res.account["replay_overhead_ratio"] == 0.0
+    assert res.account["steps_total"] == 12
+    assert len(res.losses) == 12
+
+
+def test_recovery_resumes_from_checkpoint(tmp_path):
+    """Kill at 12: latest complete checkpoint is 10, detection lands a
+    few (timeout/dt) steps later, the gap is replayed."""
+    res = run_elastic(_cfg(tmp_path),
+                      fault_script=FaultScript(kills=((12, "host3"),)),
+                      log_fn=_quiet)
+    assert not res.aborted
+    assert res.final_step == 24
+    assert len(res.recoveries) == 1
+    rec = res.recoveries[0]
+    assert rec["restored_step"] == 10
+    assert rec["detect_step"] > 12          # detection lag, not instant
+    assert rec["replayed_steps"] == rec["detect_step"] - 10
+    assert not rec["from_scratch"]
+    assert rec["dead_hosts"] == ["host3"]
+    assert len(res.phases) == 2
+    assert res.phases[1]["restart"]
+    assert res.account["replayed_steps"] == rec["replayed_steps"]
+    assert res.account["restarts"] == 1
+
+
+def test_kill_during_warmup_restarts_from_scratch(tmp_path):
+    """A fault before the first checkpoint cadence leaves nothing to
+    restore — the recovery restarts from step 0 and still completes."""
+    res = run_elastic(_cfg(tmp_path, max_steps=14),
+                      fault_script=FaultScript(kills=((2, "host1"),)),
+                      log_fn=_quiet)
+    assert not res.aborted
+    assert res.final_step == 14
+    assert len(res.recoveries) == 1
+    rec = res.recoveries[0]
+    assert rec["from_scratch"]
+    assert rec["restored_step"] == 0
+    assert rec["replayed_steps"] == rec["detect_step"]
+
+
+def test_double_fault(tmp_path):
+    """Two separate host losses: two recoveries, both survived, and the
+    account counts both restarts."""
+    res = run_elastic(
+        _cfg(tmp_path, max_steps=30),
+        fault_script=FaultScript(kills=((7, "host1"), (18, "host2"))),
+        log_fn=_quiet)
+    assert not res.aborted
+    assert res.final_step == 30
+    assert len(res.recoveries) == 2
+    assert res.recoveries[0]["dead_hosts"] == ["host1"]
+    assert res.recoveries[1]["dead_hosts"] == ["host1", "host2"]
+    assert len(res.phases) == 3
+    assert res.account["restarts"] == 2
+
+
+def test_all_hosts_dead_aborts(tmp_path):
+    res = run_elastic(
+        _cfg(tmp_path),
+        fault_script=FaultScript(kills=tuple(
+            (3, f"host{i}") for i in range(4))),
+        log_fn=_quiet)
+    assert res.aborted
+    assert not res.reached_target
+
+
+def test_max_restarts_exhausted_aborts(tmp_path):
+    res = run_elastic(_cfg(tmp_path, max_restarts=0),
+                      fault_script=FaultScript(kills=((6, "host2"),)),
+                      log_fn=_quiet)
+    assert res.aborted
+    assert res.recoveries == []
+
+
+def test_phantom_downsize_distills(tmp_path):
+    """The paper-sanctioned downsize: tensor on the full budget, fault,
+    re-plan restricted to the phantom family — the checkpoint is
+    SVD-distilled into the (k, tp) factor class on fewer devices."""
+    res = run_elastic(
+        _cfg(tmp_path, strategies=("phantom",),
+             initial_strategy="tensor_col"),
+        fault_script=FaultScript(kills=((12, "host3"),)),
+        log_fn=_quiet)
+    assert not res.aborted
+    rec = res.recoveries[0]
+    assert rec["distilled"]
+    assert rec["devices_after"] < rec["devices_before"]
+    assert res.phases[0]["strategy"] == "tensor_col"
+    assert res.phases[1]["strategy"] == "phantom"
+    # training continued and improved after the class change
+    assert res.losses[-1] < res.losses[0]
+
+
+def test_kill_during_async_save(tmp_path, monkeypatch):
+    """Fault detected while a save is still in the write queue: the
+    recovery path flushes first, so the in-flight checkpoint commits and
+    is what training restores from."""
+    import time as _time
+
+    from repro.train.checkpoint import CheckpointManager
+    orig = CheckpointManager._write
+
+    def slow_write(self, step, host, meta):
+        _time.sleep(0.25)
+        orig(self, step, host, meta)
+
+    monkeypatch.setattr(CheckpointManager, "_write", slow_write)
+    res = run_elastic(_cfg(tmp_path, max_steps=18),
+                      fault_script=FaultScript(kills=((10, "host0"),)),
+                      log_fn=_quiet)
+    assert not res.aborted
+    rec = res.recoveries[0]
+    # the step-10 save was in flight at detection; flush committed it
+    assert rec["restored_step"] == 10
+    assert not rec["from_scratch"]
+
+
+def test_account_consistency(tmp_path):
+    res = run_elastic(_cfg(tmp_path),
+                      fault_script=FaultScript(kills=((12, "host3"),)),
+                      log_fn=_quiet)
+    a = res.account
+    np.testing.assert_allclose(
+        a["energy_j_total"],
+        a["energy_j_useful"] + a["energy_j_replay"]
+        + a["energy_j_ckpt_io"] + a["energy_j_restart"], rtol=1e-9)
+    assert a["steps_total"] == sum(p["steps"] for p in res.phases)
+    assert a["replayed_steps"] == sum(p["replayed_steps"]
+                                      for p in res.phases)
+    step_j = a["energy_j_useful"] + a["energy_j_replay"]
+    np.testing.assert_allclose(a["replay_overhead_ratio"],
+                               a["energy_j_replay"] / step_j, rtol=1e-9)
+    assert 0.0 < a["replay_overhead_ratio"] < 1.0
+    assert a["restarts"] == 1
+    assert a["schema"] == "recovery-account/v1"
+
+
+def test_ledger_entry_recorded(tmp_path):
+    from repro.telemetry import Ledger
+    ledger = Ledger(run="test")
+    res = run_elastic(_cfg(tmp_path, max_steps=12),
+                      fault_script=FaultScript(kills=((6, "host1"),)),
+                      ledger=ledger, log_fn=_quiet)
+    rows = [e for e in ledger.entries if e.kind == "elastic"]
+    assert len(rows) == 1
+    e = rows[0]
+    assert e.suite == "elastic"
+    assert e.name == "elastic_ffn32"
+    assert set(e.predicted) == {"energy_j_total", "energy_j_useful",
+                                "energy_j_replay"}
+    assert e.extra["recovery"]["schema"] == "recovery-account/v1"
+    assert len(e.extra["recoveries"]) == 1
+    assert e.extra["plans"] == res.plan_names
+
+
+def test_devices_must_divide_hosts(tmp_path):
+    with pytest.raises(ValueError, match="divide"):
+        run_elastic(_cfg(tmp_path, devices=6, hosts=4), log_fn=_quiet)

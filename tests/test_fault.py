@@ -1,22 +1,48 @@
-"""Fault tolerance: heartbeat failure detection, straggler flagging,
-restart policy, end-to-end kill-and-restore."""
-import time
-
+"""Fault tolerance: virtual-clock heartbeat detection, straggler
+flagging + metered-loop wiring, restart policy, fault scripting, and the
+end-to-end kill-and-restore equivalence — all deterministic, no sleeps."""
 import jax.numpy as jnp
 import numpy as np
 
-from repro.train.fault import (Heartbeat, RestartPolicy, SimulatedCluster,
-                               StragglerDetector)
+from repro.train.fault import (FaultScript, RestartPolicy,
+                               SimulatedCluster, StragglerDetector,
+                               VirtualClock, note_step_time)
 
 
-def test_heartbeat_detects_dead_host(tmp_path):
-    cl = SimulatedCluster(str(tmp_path), hosts=4, timeout_s=0.3)
+def test_heartbeat_detects_dead_host_virtual(tmp_path):
+    cl = SimulatedCluster(str(tmp_path), hosts=4, timeout_s=2.5,
+                          virtual=True)
     cl.tick(step=1)
     assert cl.check() == []
     cl.kill("host2")
-    time.sleep(0.4)
+    # staleness is a pure function of the virtual clock: just under the
+    # timeout the host is still considered alive...
+    cl.advance(2.5)
     cl.tick(step=2)
+    assert cl.check() == []
+    # ...one more tick past it, dead — exactly the detection lag a real
+    # deployment pays
+    cl.advance(1.0)
+    cl.tick(step=3)
     assert cl.check() == ["host2"]
+
+
+def test_virtual_clock_is_shared(tmp_path):
+    cl = SimulatedCluster(str(tmp_path), hosts=2, timeout_s=1.0,
+                          virtual=True)
+    assert isinstance(cl.clock, VirtualClock)
+    assert cl.monitor.clock is cl.clock
+    assert all(hb.clock is cl.clock for hb in cl.hbs.values())
+
+
+def test_all_hosts_dead(tmp_path):
+    cl = SimulatedCluster(str(tmp_path), hosts=3, timeout_s=1.0,
+                          virtual=True)
+    cl.tick(0)
+    for h in list(cl.hosts):
+        cl.kill(h)
+    cl.advance(2.0)
+    assert cl.check() == ["host0", "host1", "host2"]
 
 
 def test_straggler_detector():
@@ -28,6 +54,44 @@ def test_straggler_detector():
     assert len(det.flagged) == 1
 
 
+def test_straggler_needs_history():
+    """No flags until the trailing window has >= 10 samples — a slow
+    compile-adjacent early step must not fire the policy."""
+    det = StragglerDetector(window=20, threshold=2.0)
+    for s in range(9):
+        det.record(s, 0.1)
+    assert not det.record(9, 99.0)
+    assert det.flagged == []
+
+
+def test_note_step_time_wiring():
+    """The shared metered-loop hook: healthy steps return None; a flagged
+    straggler emits a ledger event (kind ``fault``) and returns the
+    policy decision."""
+    from repro.telemetry import Ledger
+    det = StragglerDetector(window=20, threshold=2.0)
+    pol = RestartPolicy(checkpoint_on_straggler=True)
+    ledger = Ledger(run="test")
+    for s in range(15):
+        assert note_step_time(det, pol, s, 0.1, ledger) is None
+    decision = note_step_time(det, pol, 15, 1.0, ledger,
+                              name="unit", arch="ffn", impl="tensor", p=2)
+    assert decision == "checkpoint"
+    faults = [e for e in ledger.entries if e.kind == "fault"]
+    assert len(faults) == 1
+    e = faults[0]
+    assert e.name == "unit_step15"
+    assert e.extra["event"] == "straggler"
+    assert e.extra["decision"] == "checkpoint"
+    assert e.measured["slowdown"] > 2.0
+    # stragglers warn, they don't consume the restart budget
+    assert pol.restarts == 0
+
+
+def test_note_step_time_no_detector():
+    assert note_step_time(None, RestartPolicy(), 0, 1.0) is None
+
+
 def test_restart_policy_limits():
     pol = RestartPolicy(max_restarts=2)
     assert pol.on_host_failure(["h1"], None) == "restore"
@@ -35,9 +99,24 @@ def test_restart_policy_limits():
     assert pol.on_host_failure(["h1"], None) == "abort"
 
 
+def test_restart_policy_straggler_decision():
+    assert RestartPolicy().on_straggler(3, 1.0) == "checkpoint"
+    assert RestartPolicy(
+        checkpoint_on_straggler=False).on_straggler(3, 1.0) == "log"
+
+
+def test_fault_script():
+    fs = FaultScript(kills=((5, "host1"), (5, "host2"), (9, "host0")))
+    assert fs.hosts_at(5) == ["host1", "host2"]
+    assert fs.hosts_at(6) == []
+    assert fs.kill_steps == [5, 9]
+    assert FaultScript().hosts_at(0) == []
+
+
 def test_kill_restore_end_to_end(mesh24, tmp_path):
-    """Simulated failure mid-training: detect, restore from checkpoint,
-    continue — final state identical to an uninterrupted run."""
+    """Simulated failure mid-training: detect (virtual clock), restore
+    from checkpoint, continue — final loss identical to an uninterrupted
+    run."""
     from repro.configs.base import ShapeConfig, get_config
     from repro.launch.specs import input_specs
     from repro.optim import make_optimizer
@@ -54,7 +133,8 @@ def test_kill_restore_end_to_end(mesh24, tmp_path):
     step_fn, decls, opt_decls = make_train_step(cfg, mesh24, opt,
                                                 batch_spec=spec)
     mgr = CheckpointManager(str(tmp_path))
-    cl = SimulatedCluster(str(tmp_path / "hb"), hosts=2, timeout_s=0.2)
+    cl = SimulatedCluster(str(tmp_path / "hb"), hosts=2, timeout_s=0.5,
+                          virtual=True)
 
     # run A: uninterrupted
     pA = materialize(decls, 0)
@@ -68,11 +148,12 @@ def test_kill_restore_end_to_end(mesh24, tmp_path):
     oB = opt.init(pB)
     for s in range(2):
         cl.tick(s)
+        cl.advance(0.1)
         pB, oB, _ = step_fn(pB, oB, jnp.int32(s),
                             make_batch(cfg, 8, 64, seed=s))
     mgr.save(2, pB, oB)
     cl.kill("host1")
-    time.sleep(0.3)
+    cl.advance(1.0)
     cl.tick(2)
     dead = cl.check()
     assert dead == ["host1"]
