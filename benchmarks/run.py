@@ -95,17 +95,20 @@ def main(argv=None) -> int:
             continue
         common.set_suite(name)
         print(f"# === {name} ===", flush=True)
-        t0 = time.time()
+        # perf_counter at µs resolution: the analytic suites (fig6_large,
+        # roofline) finish in well under the 0.1 s that time.time()
+        # rounding could resolve, and used to report 0.0 seconds
+        t0 = time.perf_counter()
         try:
             fn()
-            ledger.suite_ok(name, round(time.time() - t0, 1))
+            ledger.suite_ok(name, round(time.perf_counter() - t0, 6))
         except Exception as exc:
             traceback.print_exc()
             ledger.suite_failed(name, f"{type(exc).__name__}: {exc}",
-                                round(time.time() - t0, 1))
+                                round(time.perf_counter() - t0, 6))
             failed.append(name)
             print(f"{name}_FAILED,0.0,{type(exc).__name__}")
-        print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
+        print(f"# {name} took {time.perf_counter()-t0:.3f}s", flush=True)
 
     ledger.write_report(REPORT_PATH)
     print(f"# wrote {REPORT_PATH} ({len(ledger)} entries, "

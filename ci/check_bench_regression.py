@@ -1,0 +1,132 @@
+#!/usr/bin/env python3
+"""Band the benchmark report against a checked-in baseline.
+
+Usage:
+  python ci/check_bench_regression.py [--report BENCH_report.json]
+      [--baseline ci/bench_baseline.json] [--update-baseline]
+
+Two guards over a fresh ``BENCH_report.json``:
+
+* **suite seconds** — each suite's wall time must stay under
+  ``max(baseline, BENCH_SECONDS_FLOOR) * BENCH_SECONDS_FACTOR``
+  (defaults 1.0 s and 2.5: cross-machine wall clocks are noisy, and
+  the analytic suites finish in milliseconds where a multiplicative
+  band alone would trip on scheduler jitter).
+* **measured/predicted ratios** — every joined entry's ratio, keyed
+  ``entry_name/ratio_key``, must stay inside
+  ``[baseline / BENCH_RATIO_FACTOR, baseline * BENCH_RATIO_FACTOR]``
+  (default 1.5).  A drifting ratio means the energy model and the
+  measurement disagree in a new way — exactly the regression the
+  ledger exists to catch.
+
+Only keys present in BOTH views are compared (new suites/entries are
+reported, not failed); a suite marked failed in the report always
+fails the check.  ``--update-baseline`` rewrites the baseline from the
+report — do that deliberately, with the cause in the commit message.
+"""
+import argparse
+import json
+import os
+import sys
+
+SCHEMA = "bench-baseline/v1"
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+DEFAULT_REPORT = os.path.join(ROOT, "BENCH_report.json")
+DEFAULT_BASELINE = os.path.join(HERE, "bench_baseline.json")
+
+
+def extract(report: dict) -> dict:
+    """The comparable view of a BENCH_report.json."""
+    suites = {name: float(rec.get("seconds", 0.0))
+              for name, rec in (report.get("suites") or {}).items()
+              if rec.get("status") == "ok"}
+    ratios = {}
+    for e in report.get("entries", []):
+        for key, val in (e.get("ratios") or {}).items():
+            ratios[f"{e['name']}/{key}"] = float(val)
+    return {"schema": SCHEMA, "suites": suites, "ratios": ratios}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--report", default=DEFAULT_REPORT)
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from the report")
+    args = ap.parse_args(argv)
+
+    with open(args.report) as f:
+        report = json.load(f)
+    got = extract(report)
+
+    if args.update_baseline:
+        with open(args.baseline, "w") as f:
+            json.dump(got, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.baseline}: {len(got['suites'])} suites, "
+              f"{len(got['ratios'])} ratios")
+        return 0
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    if base.get("schema") != SCHEMA:
+        print(f"{args.baseline}: unknown schema {base.get('schema')!r}",
+              file=sys.stderr)
+        return 2
+
+    sec_factor = float(os.environ.get("BENCH_SECONDS_FACTOR", "2.5"))
+    sec_floor = float(os.environ.get("BENCH_SECONDS_FLOOR", "1.0"))
+    ratio_factor = float(os.environ.get("BENCH_RATIO_FACTOR", "1.5"))
+    failures = []
+
+    bad = {name: rec for name, rec in
+           (report.get("suites") or {}).items()
+           if rec.get("status") != "ok"}
+    for name, rec in sorted(bad.items()):
+        failures.append(f"suite {name} status={rec.get('status')}: "
+                        f"{rec.get('error', '')}")
+
+    base_suites = base.get("suites") or {}
+    common = sorted(set(base_suites) & set(got["suites"]))
+    for name in common:
+        b, g = base_suites[name], got["suites"][name]
+        limit = max(b, sec_floor) * sec_factor
+        mark = "FAIL" if g > limit else "ok"
+        print(f"suite {name:<16} {g:8.3f}s  (baseline {b:.3f}s, "
+              f"limit {limit:.3f}s) {mark}")
+        if g > limit:
+            failures.append(f"suite {name} wall {g:.3f}s > "
+                            f"limit {limit:.3f}s")
+    for name in sorted(set(got["suites"]) - set(base_suites)):
+        print(f"suite {name:<16} {got['suites'][name]:8.3f}s  "
+              f"(no baseline — run --update-baseline)")
+
+    base_ratios = base.get("ratios") or {}
+    common_r = sorted(set(base_ratios) & set(got["ratios"]))
+    n_ok = 0
+    for key in common_r:
+        b, g = base_ratios[key], got["ratios"][key]
+        lo, hi = b / ratio_factor, b * ratio_factor
+        if not (lo <= g <= hi):
+            failures.append(f"ratio {key} = {g:.4f} outside "
+                            f"[{lo:.4f}, {hi:.4f}] "
+                            f"(baseline {b:.4f} x{ratio_factor})")
+            print(f"ratio {key} = {g:.4f} vs baseline {b:.4f} FAIL")
+        else:
+            n_ok += 1
+    print(f"ratios: {n_ok}/{len(common_r)} within x{ratio_factor} "
+          f"of baseline "
+          f"({len(set(got['ratios']) - set(base_ratios))} new, "
+          f"{len(set(base_ratios) - set(got['ratios']))} absent)")
+
+    if failures:
+        for msg in failures:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        return 1
+    print("bench regression check: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -67,6 +67,8 @@ def build_parser():
                          "moved to rejected)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=DEFAULT_OUT)
+    from repro.launch.obs import add_obs_args
+    add_obs_args(ap)
     return ap
 
 
@@ -91,49 +93,61 @@ def plan(args, ledger=None, calib_rows=None) -> dict:
                                plan_summary_lines, record_frontier,
                                run_pilots, score_plans, write_plan_report)
 
+    from repro.obs import get_tracer
+    tracer = get_tracer()
     strategies = tuple(s for s in args.strategies.split(",") if s)
     ks = _csv_ints(args.ks)
     mbs = _csv_ints(args.microbatches)
 
     # 1. calibrate
-    if calib_rows is not None:
-        from repro.planner import calibrate_from_rows
-        calib = calibrate_from_rows(calib_rows)
-        print(f"# calibration: {calib.source} (in-process ledger rows)")
-    else:
-        ledger_path = args.ledger if os.path.exists(args.ledger) else None
-        calib = calibrate_from_ledger(jsonl_path=ledger_path)
-        print(f"# calibration: {calib.source}"
-              + (f" ({ledger_path})" if ledger_path else ""))
+    with tracer.span("plan/calibrate", cat="plan") as sp:
+        if calib_rows is not None:
+            from repro.planner import calibrate_from_rows
+            calib = calibrate_from_rows(calib_rows)
+            print(f"# calibration: {calib.source} "
+                  f"(in-process ledger rows)")
+        else:
+            ledger_path = (args.ledger if os.path.exists(args.ledger)
+                           else None)
+            calib = calibrate_from_ledger(jsonl_path=ledger_path)
+            print(f"# calibration: {calib.source}"
+                  + (f" ({ledger_path})" if ledger_path else ""))
+        sp.annotate(source=calib.source)
 
     # 2. enumerate + resource-filter
     constraints = Constraints(
         max_devices=args.devices,
         hbm_bytes_per_device=args.hbm_gb * 2 ** 30,
         min_throughput_rows_s=args.min_throughput)
-    candidates = enumerate_plans(
-        args.devices, width=args.width, depth=args.depth,
-        batch=args.batch, strategies=strategies, ks=ks,
-        microbatch_options=mbs, pps=_csv_ints(args.pps) or (1,))
-    feasible, rejected = filter_feasible(candidates, constraints)
+    with tracer.span("plan/enumerate", cat="plan",
+                     devices=args.devices) as sp:
+        candidates = enumerate_plans(
+            args.devices, width=args.width, depth=args.depth,
+            batch=args.batch, strategies=strategies, ks=ks,
+            microbatch_options=mbs, pps=_csv_ints(args.pps) or (1,))
+        feasible, rejected = filter_feasible(candidates, constraints)
+        sp.annotate(candidates=len(candidates), feasible=len(feasible))
     print(f"# {len(candidates)} candidates, {len(feasible)} feasible, "
           f"{len(rejected)} rejected")
 
     # 3. pilots -> iso-loss normalization
     iso = None
     if args.no_pilots:
-        scored = score_plans(feasible, calib,
-                             iterations=float(args.pilot_steps))
+        with tracer.span("plan/score", cat="plan"):
+            scored = score_plans(feasible, calib,
+                                 iterations=float(args.pilot_steps))
         for s in scored:
             s.predicted_loss = args.target_loss
             s.notes["iso_loss"] = False
     else:
         pilot_mesh = make_local_mesh(1, min(args.pilot_tp, args.devices))
-        iso = run_pilots(strategies, pilot_mesh, width=args.width,
-                         depth=args.depth, batch=args.batch,
-                         steps=args.pilot_steps,
-                         target_loss=args.target_loss, ks=ks,
-                         seed=args.seed, ledger=ledger)
+        with tracer.span("plan/pilots", cat="plan",
+                         strategies=list(strategies)):
+            iso = run_pilots(strategies, pilot_mesh, width=args.width,
+                             depth=args.depth, batch=args.batch,
+                             steps=args.pilot_steps,
+                             target_loss=args.target_loss, ks=ks,
+                             seed=args.seed, ledger=ledger)
         for key, nu in sorted(iso.nu.items()):
             fl = iso.final_loss.get(key)
             print(f"# pilot {key}: nu={nu} final_loss="
@@ -248,7 +262,10 @@ def main(argv=None) -> int:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices} "
             + os.environ.get("XLA_FLAGS", ""))
-    report = plan(args)
+    from repro.launch.obs import obs_session
+    with obs_session(args.trace_out, args.metrics_out,
+                     meta={"run": "launch.plan"}):
+        report = plan(args)
     return 0 if report["frontier"] else 1
 
 

@@ -105,6 +105,8 @@ def build_parser():
                     help="PLAN_report.json with fitted constants "
                          "(falls back to BENCH_ledger.jsonl, then "
                          "paper defaults)")
+    from repro.launch.obs import add_obs_args
+    add_obs_args(ap)
     return ap
 
 
@@ -128,6 +130,13 @@ def main(argv=None):
             f"--xla_force_host_platform_device_count={args.dp * args.tp} "
             + os.environ.get("XLA_FLAGS", ""))
 
+    from repro.launch.obs import obs_session
+    with obs_session(args.trace_out, args.metrics_out,
+                     meta={"run": "launch.serve", "arch": args.arch}):
+        return _main(args)
+
+
+def _main(args):
     from repro.planner import load_calibration
     from repro.serve.router import (ServeConfig, candidate_configs, route,
                                     run_config)

@@ -98,6 +98,7 @@ def run_elastic_cli(args) -> int:
     run survived its faults and reached --target-loss)."""
     import tempfile
 
+    from repro.obs import EnergyDriftWatchdog
     from repro.telemetry import Ledger
     from repro.train.elastic import ElasticConfig, run_elastic
     from repro.train.fault import FaultScript
@@ -121,9 +122,17 @@ def run_elastic_cli(args) -> int:
         workdir=args.workdir or tempfile.mkdtemp(prefix="elastic_"),
         devices=args.devices, hosts=args.hosts, width=args.width,
         depth=args.depth, batch=args.batch, target_loss=args.target_loss,
-        max_steps=args.steps, checkpoint_every=args.ckpt_every)
+        max_steps=args.steps, checkpoint_every=args.ckpt_every,
+        slow_steps=tuple(args.slow_step or ()),
+        slow_factor=args.slow_factor)
     ledger = Ledger(run="launch.train.elastic", jsonl_path=jsonl)
-    res = run_elastic(cfg, ledger=ledger,
+    profile_dir = args.profile_dir
+    if profile_dir is None and cfg.slow_steps:
+        profile_dir = os.path.join(cfg.workdir, "profile")
+    watchdog = EnergyDriftWatchdog(
+        ledger=ledger, profile_dir=profile_dir,
+        name=f"elastic_ffn{cfg.width}", arch=f"ffn{cfg.width}")
+    res = run_elastic(cfg, ledger=ledger, watchdog=watchdog,
                       fault_script=FaultScript(kills=tuple(kills)))
     ledger.write_report(report_out)
     acct = res.account
@@ -134,6 +143,11 @@ def run_elastic_cli(args) -> int:
           f"ckpt_io {acct['energy_j_ckpt_io']:.3e}, "
           f"restart {acct['energy_j_restart']:.3e}); "
           f"replay_overhead {acct['replay_overhead_ratio']:.3f}")
+    wd = watchdog.summary()
+    print(f"[obs] watchdog: {len(wd['trips'])} trip(s) over "
+          f"{wd['observations']} observation(s)"
+          + (f", profiler capture -> {wd['captures'][-1]}"
+             if wd["captures"] else ""))
     if res.aborted:
         print("[elastic] FAILED: run aborted")
         return 2
@@ -198,6 +212,18 @@ def main():
     ap.add_argument("--report-out", default=None,
                     help="[elastic] write the energy ledger report here "
                          "(default: repo-root BENCH_report.json)")
+    # --- observability (docs/observability.md) ---
+    from repro.launch.obs import add_obs_args, obs_session
+    add_obs_args(ap)
+    ap.add_argument("--slow-step", type=int, action="append",
+                    default=None, metavar="N",
+                    help="[elastic] inject a watchdog-visible slow step "
+                         "at step N (repeatable)")
+    ap.add_argument("--slow-factor", type=float, default=6.0,
+                    help="[elastic] slowdown factor for --slow-step")
+    ap.add_argument("--profile-dir", default=None,
+                    help="watchdog jax.profiler capture dir (default: "
+                         "<workdir>/profile when --slow-step is given)")
     args = ap.parse_args()
     if args.steps is None:
         args.steps = 300 if args.elastic else 100
@@ -212,7 +238,10 @@ def main():
             + os.environ.get("XLA_FLAGS", ""))
 
     if args.elastic:
-        sys.exit(run_elastic_cli(args))
+        with obs_session(args.trace_out, args.metrics_out,
+                         meta={"run": "launch.train.elastic"}):
+            rc = run_elastic_cli(args)
+        sys.exit(rc)
 
     from repro.configs.base import ShapeConfig, get_config
     from repro.data.synthetic import LMDataset
@@ -241,11 +270,19 @@ def main():
                          warmup_cosine(3e-4, 20, args.steps),
                          weight_decay=0.1)
     ds = LMDataset(cfg.vocab_size, args.batch, args.seq + 1)
-    trainer = Trainer(cfg, mesh, opt, ds, batch_spec=bspec,
-                      microbatches=args.microbatches,
-                      checkpoint_dir=args.ckpt_dir)
-    state = trainer.restore_or_init()
-    trainer.run(state, args.steps)
+    with obs_session(args.trace_out, args.metrics_out,
+                     meta={"run": "launch.train", "arch": args.arch}):
+        from repro.obs import EnergyDriftWatchdog
+        watchdog = (EnergyDriftWatchdog(profile_dir=args.profile_dir,
+                                        name=f"train_{cfg.name}",
+                                        arch=cfg.name)
+                    if args.profile_dir else None)
+        trainer = Trainer(cfg, mesh, opt, ds, batch_spec=bspec,
+                          microbatches=args.microbatches,
+                          checkpoint_dir=args.ckpt_dir,
+                          watchdog=watchdog)
+        state = trainer.restore_or_init()
+        trainer.run(state, args.steps)
 
 
 if __name__ == "__main__":

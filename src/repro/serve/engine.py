@@ -42,6 +42,7 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.launch.specs import cache_specs, input_specs
 from repro.models.model import (forward_decode, forward_prefill,
                                 model_decls)
+from repro.obs import get_metrics, get_tracer
 from repro.parallel.axes import MeshAxes, resolve_spec
 from repro.parallel.params import specs
 from repro.parallel.compat import shard_map
@@ -251,9 +252,15 @@ class ServeEngine:
             toks[i, :len(req.prompt)] = req.prompt
         batch = {"tokens": jnp.asarray(toks)}
         batch = _add_modality_stubs(self.cfg, batch, self.slots, S)
-        logits, fresh_full = self._timed(self.prefill_meter,
-                                         self.prefill_fn, self.params,
-                                         batch)
+        with get_tracer().span("serve/prefill", cat="serve", bucket=S,
+                               group=len(group)):
+            logits, fresh_full = self._timed(self.prefill_meter,
+                                             self.prefill_fn,
+                                             self.params, batch)
+        get_metrics().counter(
+            "serve_prefill_tokens_total",
+            "real (unpadded) prompt tokens prefilled").inc(
+                sum(len(r.prompt) for r in group))
         # prefill used seq S; splice into the max_len cache rows
         fresh = jax.tree.map(
             lambda f, c: _pad_cache_seq(f, c), fresh_full, self.cache)
@@ -297,9 +304,16 @@ class ServeEngine:
             self._fill_slots()
             if not self.has_active():
                 return
-        logits, self.cache = self._timed(
-            self.decode_meter, self.decode_fn, self.params, self.cache,
-            jnp.asarray(self.last_tok), jnp.asarray(self.pos))
+        n_active = sum(r is not None for r in self.active)
+        with get_tracer().span("serve/decode", cat="serve",
+                               active=n_active):
+            logits, self.cache = self._timed(
+                self.decode_meter, self.decode_fn, self.params,
+                self.cache, jnp.asarray(self.last_tok),
+                jnp.asarray(self.pos))
+        get_metrics().counter(
+            "serve_decode_tokens_total",
+            "tokens produced by decode steps").inc(n_active)
         logits = np.asarray(logits)
         for i, req in enumerate(self.active):
             if req is None:
@@ -341,9 +355,10 @@ class ServeEngine:
         if self._closed:
             return
         self._closed = True
-        if self.ledger is not None and (self.prefill_meter.calls
-                                        or self.decode_meter.calls):
-            self.record_to(self.ledger)
+        if self.ledger is not None:
+            if self.prefill_meter.calls or self.decode_meter.calls:
+                self.record_to(self.ledger)
+            self.ledger.flush()
 
     def __enter__(self) -> "ServeEngine":
         return self

@@ -21,14 +21,30 @@ suite.
 """
 from __future__ import annotations
 
+import atexit
 import dataclasses
 import json
 import os
 import time
+import weakref
 from dataclasses import dataclass, field
 from typing import List, Optional
 
 SCHEMA = "bench-ledger/v1"
+
+# all live ledgers, flushed once at interpreter exit so JSONL tails
+# (and a configured report) survive crashes/interrupts — the same
+# guarantee CheckpointManager gives queued saves
+_LEDGERS: "weakref.WeakSet" = weakref.WeakSet()
+
+
+@atexit.register
+def _flush_all_ledgers():
+    for led in list(_LEDGERS):
+        try:
+            led.close()
+        except Exception:
+            pass
 
 # measured keys ratioed against same-named predicted keys
 _RATIO_KEYS = (
@@ -78,28 +94,75 @@ class LedgerEntry:
 
 
 class Ledger:
-    """Collects LedgerEntry rows; one instance per process/run."""
+    """Collects LedgerEntry rows; one instance per process/run.
+
+    Tail-write guarantees: the JSONL stream is held open and flushed
+    after every row, ``close()`` (idempotent; also the context-manager
+    exit and an atexit hook) fsyncs the tail and writes the aggregate
+    report when ``report_path`` is configured — so a crash or interrupt
+    mid-run loses at most the row being serialized, never the stream.
+    ``ServeEngine.close()`` and the ``Trainer`` finally-path flush
+    through here.
+    """
 
     def __init__(self, run: str = "", jsonl_path: Optional[str] = None,
-                 meta: Optional[dict] = None):
+                 meta: Optional[dict] = None,
+                 report_path: Optional[str] = None):
         self.run = run
         self.meta = dict(meta or {})
         self.entries: List[LedgerEntry] = []
         self.suite_status: dict = {}       # suite -> ok|failed: <error>
         self._jsonl_path = jsonl_path
+        self.report_path = report_path
+        self._jsonl_f = None
+        self._closed = False
         if jsonl_path:
             os.makedirs(os.path.dirname(os.path.abspath(jsonl_path)),
                         exist_ok=True)
-            # truncate: one JSONL stream per run
-            open(jsonl_path, "w").close()
+            # truncate: one JSONL stream per run; the handle stays open
+            # (line-flushed per record) so tails survive interrupts
+            self._jsonl_f = open(jsonl_path, "w")
+        _LEDGERS.add(self)
 
     # --- recording -------------------------------------------------------
     def record(self, entry: LedgerEntry) -> LedgerEntry:
         self.entries.append(entry)
         if self._jsonl_path:
-            with open(self._jsonl_path, "a") as f:
-                f.write(json.dumps(entry.as_dict()) + "\n")
+            if self._jsonl_f is None or self._jsonl_f.closed:
+                self._jsonl_f = open(self._jsonl_path, "a")
+                self._closed = False    # re-arm close() for the new tail
+            self._jsonl_f.write(json.dumps(entry.as_dict()) + "\n")
+            self._jsonl_f.flush()
         return entry
+
+    # --- durability ------------------------------------------------------
+    def flush(self):
+        """Push the JSONL tail to the OS and fsync it to disk."""
+        if self._jsonl_f is not None and not self._jsonl_f.closed:
+            self._jsonl_f.flush()
+            try:
+                os.fsync(self._jsonl_f.fileno())
+            except OSError:
+                pass
+
+    def close(self):
+        """Flush + close the stream; write ``report_path`` if set.
+        Idempotent — safe from finally-paths AND the atexit sweep."""
+        if self._closed:
+            return
+        self._closed = True
+        self.flush()
+        if self._jsonl_f is not None and not self._jsonl_f.closed:
+            self._jsonl_f.close()
+        if self.report_path:
+            self.write_report(self.report_path)
+
+    def __enter__(self) -> "Ledger":
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.close()
+        return False
 
     def entry(self, name: str, **kw) -> LedgerEntry:
         return self.record(LedgerEntry(name=name, **kw))

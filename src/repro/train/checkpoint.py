@@ -131,7 +131,11 @@ class CheckpointManager:
                 self._queue.task_done()
 
     def _write(self, step: int, host_tree, meta: dict):
+        from repro.obs import get_metrics, get_tracer
         t0 = time.perf_counter()
+        # emitted from the writer thread: the span lands on its own
+        # trace row, showing save IO overlapping the training steps
+        span = get_tracer().begin("ckpt/save", cat="ckpt", step=step)
         tmp = os.path.join(self.dir, f"step_{step:010d}.tmp")
         final = os.path.join(self.dir, f"step_{step:010d}")
         if os.path.exists(tmp):
@@ -159,9 +163,19 @@ class CheckpointManager:
         # complete checkpoint, and _gc never collects its target
         self._set_latest(step)
         self._gc()
-        self.io_seconds += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.io_seconds += dt
         self.io_bytes += nbytes
         self.saves += 1
+        get_tracer().end(span.annotate(bytes=nbytes))
+        get_metrics().counter("ckpt_saves_total",
+                              "committed checkpoint saves").inc()
+        get_metrics().counter("ckpt_bytes_total",
+                              "bytes written by checkpoint saves").inc(
+                                  nbytes)
+        get_metrics().histogram("ckpt_write_seconds",
+                                "checkpoint write wall seconds").observe(
+                                    dt)
 
     def flush(self, raise_errors: bool = True):
         """Join every pending write.  Write errors collected by the
@@ -292,12 +306,14 @@ class CheckpointManager:
     def restore(self, step: int, decls, opt_decls, mesh=None):
         """Rebuild (TrainState-like) from a step dir; reshards to `mesh`
         (elastic: any device count)."""
-        index, leaves = self.load_host(step)
-        skeleton = {"params": decls, "opt": opt_decls, "extra": {}}
-        flat, treedef = _flatten_with_paths(skeleton)
-        placed = [self._place(leaves[key], decl, mesh)
-                  for key, decl in flat]
-        tree = jax.tree_util.tree_unflatten(treedef, placed)
+        from repro.obs import get_tracer
+        with get_tracer().span("ckpt/restore", cat="ckpt", step=step):
+            index, leaves = self.load_host(step)
+            skeleton = {"params": decls, "opt": opt_decls, "extra": {}}
+            flat, treedef = _flatten_with_paths(skeleton)
+            placed = [self._place(leaves[key], decl, mesh)
+                      for key, decl in flat]
+            tree = jax.tree_util.tree_unflatten(treedef, placed)
         from repro.train.trainer import TrainState
         return TrainState(tree["params"], tree["opt"], step)
 

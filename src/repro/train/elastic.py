@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import PHANTOM_KINDS
+from repro.obs import get_metrics, get_tracer
 from repro.parallel.axes import MeshAxes, resolve_spec
 from repro.planner.space import PlanCandidate
 from repro.telemetry import LedgerEntry, StepMeter, recovery_account
@@ -90,6 +91,11 @@ class ElasticConfig:
     audit_replan: bool = True          # PR-6 static audit gate
     straggler_window: int = 50
     straggler_threshold: float = 4.0
+    # watchdog fixtures: sleep inside the metered call at these steps so
+    # the step runs ~slow_factor x its healthy wall time (the injected
+    # anomaly the energy-drift watchdog must trip on)
+    slow_steps: Tuple[int, ...] = ()
+    slow_factor: float = 6.0
 
 
 @dataclass
@@ -374,7 +380,8 @@ def _build_runtime(plan: PlanCandidate, cfg: ElasticConfig, mesh_cache,
 
 def run_elastic(cfg: ElasticConfig, *, ledger=None,
                 fault_script: Optional[FaultScript] = None,
-                calibration=None, log_fn=print) -> ElasticResult:
+                calibration=None, watchdog=None,
+                log_fn=print) -> ElasticResult:
     """Train to ``cfg.target_loss`` through scripted device losses.
 
     Detection → policy → flush → re-plan (audited) → restore/convert →
@@ -402,14 +409,25 @@ def run_elastic(cfg: ElasticConfig, *, ledger=None,
     meter = StepMeter(f"elastic_ffn{cfg.width}", warmup=1)
     mesh_cache: dict = {}
     fault_script = fault_script or FaultScript()
+    tracer = get_tracer()
+    metrics = get_metrics()
 
-    scored, _ = solve_plan(
-        cfg.devices, cfg, calib, mesh_cache=mesh_cache,
-        strategies=((cfg.initial_strategy,) if cfg.initial_strategy
-                    else None))
+    run_span = tracer.begin("elastic/run", cat="elastic",
+                            devices=cfg.devices, width=cfg.width)
+    with tracer.span("elastic/plan", cat="elastic",
+                     devices=cfg.devices) as sp:
+        scored, _ = solve_plan(
+            cfg.devices, cfg, calib, mesh_cache=mesh_cache,
+            strategies=((cfg.initial_strategy,) if cfg.initial_strategy
+                        else None))
+        sp.annotate(plan=scored.plan.name)
     log_fn(f"[elastic] initial plan {scored.plan.name} "
            f"({scored.plan.devices} devices)")
-    rt, compile_s = _build_runtime(scored.plan, cfg, mesh_cache)
+    # every _build_runtime is an elastic/compile span: the recovery
+    # account's compile_s sums phase-0 AND restart builds
+    with tracer.span("elastic/compile", cat="elastic",
+                     plan=scored.plan.name):
+        rt, compile_s = _build_runtime(scored.plan, cfg, mesh_cache)
     phases: List[_Phase] = [_Phase(scored, 0, 0, compile_s,
                                    restart=False)]
     recoveries: List[dict] = []
@@ -419,6 +437,7 @@ def run_elastic(cfg: ElasticConfig, *, ledger=None,
     losses: List[float] = []
     reached = False
     aborted = False
+    replay_until = 0               # steps below this re-run lost work
     phases[-1].io0 = (mgr.io_seconds, mgr.io_bytes)
 
     fired: set = set()
@@ -434,6 +453,12 @@ def run_elastic(cfg: ElasticConfig, *, ledger=None,
         new_dead = [h for h in cluster.check() if h not in handled_dead]
         if new_dead:
             handled_dead.update(new_dead)
+            tracer.instant("elastic/detect", cat="elastic", step=step,
+                           dead_hosts=sorted(new_dead))
+            metrics.counter(
+                "elastic_host_failures_total",
+                "hosts declared dead by the heartbeat monitor").inc(
+                    len(new_dead))
             mgr.flush(raise_errors=False)   # join any in-flight save
             phases[-1].close(mgr)
             decision = policy.on_host_failure(new_dead, None)
@@ -444,29 +469,39 @@ def run_elastic(cfg: ElasticConfig, *, ledger=None,
                        f" ({len(handled_dead)}/{cfg.hosts} hosts dead)")
                 aborted = True
                 break
-            t_replan = time.perf_counter()
-            new_scored, _ = solve_plan(alive, cfg, calib,
-                                       mesh_cache=mesh_cache)
-            replan_s = time.perf_counter() - t_replan
-            t_restore = time.perf_counter()
-            latest = mgr.latest_step()
-            params_host = opt_host = None
-            distilled = False
-            restored_step = 0
-            if latest is not None:
-                index, flat = mgr.load_host(latest)
-                restored_step = int(index["step"])
-                nested = _nest(flat)
-                meta_plan = index.get("meta", {}).get("plan")
-                plan_old = (plan_from_dict(meta_plan) if meta_plan
-                            else phases[-1].plan)
-                params_host, opt_host, distilled = convert_ffn_params(
-                    plan_old, new_scored.plan, nested.get("params", {}),
-                    nested.get("opt") or None)
-                mgr.invalidate_after(restored_step)
-            restore_s = time.perf_counter() - t_restore
-            rt, compile_s = _build_runtime(
-                new_scored.plan, cfg, mesh_cache, params_host, opt_host)
+            with tracer.span("elastic/replan", cat="elastic",
+                             alive_devices=alive) as sp:
+                t_replan = time.perf_counter()
+                new_scored, _ = solve_plan(alive, cfg, calib,
+                                           mesh_cache=mesh_cache)
+                replan_s = time.perf_counter() - t_replan
+                sp.annotate(plan=new_scored.plan.name)
+            with tracer.span("elastic/restore", cat="elastic") as sp:
+                t_restore = time.perf_counter()
+                latest = mgr.latest_step()
+                params_host = opt_host = None
+                distilled = False
+                restored_step = 0
+                if latest is not None:
+                    index, flat = mgr.load_host(latest)
+                    restored_step = int(index["step"])
+                    nested = _nest(flat)
+                    meta_plan = index.get("meta", {}).get("plan")
+                    plan_old = (plan_from_dict(meta_plan) if meta_plan
+                                else phases[-1].plan)
+                    params_host, opt_host, distilled = convert_ffn_params(
+                        plan_old, new_scored.plan,
+                        nested.get("params", {}),
+                        nested.get("opt") or None)
+                    mgr.invalidate_after(restored_step)
+                restore_s = time.perf_counter() - t_restore
+                sp.annotate(distilled=distilled,
+                            restored_step=restored_step)
+            with tracer.span("elastic/compile", cat="elastic",
+                             plan=new_scored.plan.name):
+                rt, compile_s = _build_runtime(
+                    new_scored.plan, cfg, mesh_cache, params_host,
+                    opt_host)
             replayed = max(step - restored_step, 0)
             recoveries.append({
                 "detect_step": step, "restored_step": restored_step,
@@ -488,21 +523,62 @@ def run_elastic(cfg: ElasticConfig, *, ledger=None,
                    f"step {restored_step}"
                    + (" [distilled]" if distilled else "")
                    + f", replaying {replayed} step(s)")
+            metrics.counter(
+                "elastic_recoveries_total",
+                "elastic re-plan/restore/resume cycles").inc(
+                    distilled=str(distilled).lower())
             phases.append(_Phase(new_scored, restored_step, replayed,
                                  compile_s, restart=True))
             phases[-1].io0 = (mgr.io_seconds, mgr.io_bytes)
+            replay_until = step
             step = restored_step
             continue
 
         x, y = ds(step)
-        rt["params"], rt["opt_state"], loss_dev = meter.call(
-            rt["step_fn"], rt["params"], rt["opt_state"],
-            jnp.int32(step), x, y)
+        step_fn = rt["step_fn"]
+        if step in cfg.slow_steps:
+            base = (watchdog.reference_s()
+                    if watchdog is not None else None)
+            if not base:
+                base = meter.median_us() * 1e-6 or 0.02
+            delay = base * max(cfg.slow_factor - 1.0, 0.0)
+
+            def step_fn(p, o, s, xx, yy, _inner=rt["step_fn"],
+                        _delay=delay):
+                out = _inner(p, o, s, xx, yy)
+                jax.block_until_ready(out[2])
+                time.sleep(_delay)   # the injected anomaly
+                return out
+
+        def run_metered(_fn=step_fn, _step=step, _x=x, _y=y):
+            return meter.call(_fn, rt["params"], rt["opt_state"],
+                              jnp.int32(_step), _x, _y)
+
+        with tracer.span("elastic/step", cat="train", step=step,
+                         plan=phases[-1].plan.name,
+                         replay=step < replay_until):
+            if watchdog is not None and watchdog.capture_pending():
+                out = watchdog.capture(run_metered)
+            else:
+                out = run_metered()
+        rt["params"], rt["opt_state"], loss_dev = out
         loss = float(loss_dev)
         losses.append(loss)
         phases[-1].steps += 1
         step += 1
         dt_s = meter.times_us[-1] / 1e6
+        metrics.counter("train_steps_total",
+                        "executed training steps").inc(
+                            suite="elastic")
+        metrics.histogram("train_step_seconds",
+                          "metered train step wall seconds").observe(
+                              dt_s, suite="elastic")
+        metrics.gauge("train_loss", "last observed training loss").set(
+            loss, suite="elastic")
+        if watchdog is not None:
+            # step already advanced: the anomaly row must name the
+            # step that actually ran (the one --slow-step injects at)
+            watchdog.observe(step - 1, dt_s)
         straggle = note_step_time(
             detector, policy, step, dt_s, ledger,
             name="elastic_straggler", arch=f"ffn{cfg.width}",
@@ -528,9 +604,10 @@ def run_elastic(cfg: ElasticConfig, *, ledger=None,
         final_step=step, phases=phase_dicts, recoveries=recoveries,
         account=account, plan_names=[p.plan.name for p in phases],
         losses=losses)
+    entry = None
     if ledger is not None:
         last = phases[-1].plan
-        ledger.record(LedgerEntry(
+        entry = ledger.record(LedgerEntry(
             name=f"elastic_ffn{cfg.width}", suite="elastic",
             kind="elastic", arch=f"ffn{cfg.width}x{cfg.depth}",
             impl=last.strategy, p=last.tp,
@@ -545,6 +622,12 @@ def run_elastic(cfg: ElasticConfig, *, ledger=None,
                    "reached_target": reached, "aborted": aborted,
                    "target_loss": cfg.target_loss,
                    "straggler_flags": len(detector.flagged)}))
+        ledger.flush()
+    if entry is not None:
+        run_span.link_ledger(entry)
+    run_span.annotate(final_step=step, reached_target=reached,
+                      recoveries=len(recoveries))
+    tracer.end(run_span)
     log_fn(f"[elastic] done: step {step} loss {loss:.4f} "
            f"target {'REACHED' if reached else 'missed'}, "
            f"{len(recoveries)} recovery(ies), replay ratio "

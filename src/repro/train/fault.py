@@ -155,6 +155,14 @@ def note_step_time(detector: Optional[StragglerDetector],
     _, _, median = detector.flagged[-1]
     decision = (policy.on_straggler(step, dt_s, median)
                 if policy is not None else "log")
+    from repro.obs import get_metrics, get_tracer
+    get_metrics().counter(
+        "straggler_events_total",
+        "steps flagged slower than threshold x trailing median").inc(
+            decision=decision)
+    get_tracer().instant(
+        "fault/straggler", cat="fault", step=step, dt_s=dt_s,
+        median_s=median, decision=decision)
     if ledger is not None:
         from repro.telemetry import LedgerEntry
         ledger.record(LedgerEntry(

@@ -55,6 +55,12 @@ class PipelineSchedule:
         if self.stages < 1 or self.microbatches < 1:
             raise ValueError(f"need stages >= 1 and microbatches >= 1, "
                              f"got {self.stages}/{self.microbatches}")
+        from repro.obs import get_metrics
+        get_metrics().gauge(
+            "pipeline_bubble_fraction",
+            "idle fraction of the 1F1B timeline, (S-1)/(M+S-1)").set(
+                self.bubble_fraction, stages=str(self.stages),
+                microbatches=str(self.microbatches))
 
     # --- wavefront geometry ------------------------------------------------
 

@@ -25,6 +25,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.models.model import (AUX_LOSS_WEIGHT, forward_train,
                                 forward_train_pipeline, model_decls)
+from repro.obs import get_metrics, get_tracer
 from repro.parallel.axes import MeshAxes, resolve_spec
 from repro.parallel.compat import shard_map
 from repro.parallel.grads import reduce_grads
@@ -189,7 +190,7 @@ class Trainer:
                  checkpoint_every: int = 100, keep_checkpoints: int = 3,
                  log_every: int = 10, log_fn: Callable = print,
                  meter: Optional[StepMeter] = None, ledger=None,
-                 straggler=None, restart_policy=None):
+                 straggler=None, restart_policy=None, watchdog=None):
         self.cfg, self.mesh, self.optimizer = cfg, mesh, optimizer
         self.dataset = dataset
         self.log_every, self.log_fn = log_every, log_fn
@@ -200,6 +201,7 @@ class Trainer:
         self.ledger = ledger
         self.straggler = straggler          # StragglerDetector | None
         self.restart_policy = restart_policy  # RestartPolicy | None
+        self.watchdog = watchdog            # EnergyDriftWatchdog | None
         self._ledger_window = 0
         self.step_fn, self.decls, self.opt_decls = make_train_step(
             cfg, mesh, optimizer, microbatches=microbatches,
@@ -230,13 +232,39 @@ class Trainer:
         losses = []
         axes = MeshAxes.from_mesh(self.mesh)
         impl = ("phantom" if self.cfg.uses_phantom_sites() else "dense")
+        tracer = get_tracer()
+        mx = get_metrics()
+        steps_c = mx.counter("train_steps_total",
+                             "executed training steps")
+        step_h = mx.histogram("train_step_seconds",
+                              "metered train step wall seconds")
+        loss_g = mx.gauge("train_loss", "last observed training loss")
+        run_span = tracer.begin("train/run", cat="train",
+                                arch=self.cfg.name, impl=impl,
+                                start_step=step, num_steps=num_steps)
         try:
             while step < num_steps:
                 batch = self.dataset(step)
-                params, opt_state, metrics = self.meter.call(
-                    self.step_fn, params, opt_state, jnp.int32(step), batch)
+                with tracer.span("train/step", cat="train", step=step,
+                                 arch=self.cfg.name):
+                    if self.watchdog is not None and \
+                            self.watchdog.capture_pending():
+                        params, opt_state, metrics = self.watchdog.capture(
+                            self.meter.call, self.step_fn, params,
+                            opt_state, jnp.int32(step), batch)
+                    else:
+                        params, opt_state, metrics = self.meter.call(
+                            self.step_fn, params, opt_state,
+                            jnp.int32(step), batch)
                 step += 1
                 losses.append(metrics)
+                dt_s = self.meter.times_us[-1] * 1e-6
+                steps_c.inc(suite="trainer")
+                step_h.observe(dt_s, suite="trainer")
+                loss_g.set(float(metrics["loss"]), suite="trainer")
+                if self.watchdog is not None:
+                    # step already advanced: name the step that ran
+                    self.watchdog.observe(step - 1, dt_s)
                 # straggler wiring: a flagged slow step emits a ledger
                 # event and may ask for an out-of-cadence checkpoint
                 decision = note_step_time(
@@ -262,10 +290,14 @@ class Trainer:
             # errors already in flight take precedence over flush errors
             if self._ckpt is not None:
                 self._ckpt.flush(raise_errors=False)
+            if self.ledger is not None:
+                self.ledger.flush()
         if self._ckpt is not None:
             self._ckpt.flush()
         if self.ledger is not None:
-            self.record_to(self.ledger)
+            # link BEFORE end(): the event dict is copied at end time
+            run_span.link_ledger(self.record_to(self.ledger))
+        tracer.end(run_span.annotate(final_step=step))
         return TrainState(params, opt_state, step)
 
     # --- telemetry -------------------------------------------------------
@@ -355,6 +387,9 @@ def pilot_ffn_run(cfg: ModelConfig, mesh, *, steps: int, batch: int,
 
     losses = []
     iters_to_target = None
+    pilot_span = get_tracer().begin(
+        "plan/pilot", cat="plan", arch=cfg.name, strategy=st.kind,
+        width=cfg.ffn_width, tp=axes.tp, k=getattr(st, "k", 0))
     for s in range(steps):
         x, y = ds(s)
         params, opt_state, loss = meter.call(
@@ -365,6 +400,9 @@ def pilot_ffn_run(cfg: ModelConfig, mesh, *, steps: int, batch: int,
             iters_to_target = s + 1
             if stop_at_target:
                 break
+    get_metrics().counter("plan_pilot_steps_total",
+                          "training steps spent in planner pilots").inc(
+                              len(losses), arch=cfg.name)
 
     res = PilotResult(
         name=f"pilot_{cfg.name}", strategy=st.kind, width=cfg.ffn_width,
@@ -373,12 +411,15 @@ def pilot_ffn_run(cfg: ModelConfig, mesh, *, steps: int, batch: int,
         target_loss=target_loss, iters_to_target=iters_to_target,
         wall_us_median=meter.median_us())
     if ledger is not None:
-        ledger.record(LedgerEntry(
+        pilot_span.link_ledger(ledger.record(LedgerEntry(
             name=res.name, suite="planner", kind="pilot", arch=cfg.name,
             impl=st.kind, p=axes.tp, measured=dict(
                 meter.summary(), final_loss=res.final_loss,
                 iterations=iters_to_target or len(losses)),
             extra={"width": res.width, "k": res.k,
                    "target_loss": target_loss,
-                   "censored": iters_to_target is None}))
+                   "censored": iters_to_target is None})))
+    get_tracer().end(pilot_span.annotate(
+        steps_run=res.steps_run, final_loss=res.final_loss,
+        iters_to_target=iters_to_target))
     return res
