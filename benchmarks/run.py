@@ -35,6 +35,8 @@ SUITES = {
                   "iso-loss frontier -> PLAN_report.json",
     "serve_bench": "serving runtime: fixed trace through tensor + "
                    "phantom configs, SLO + joules-per-token ledger rows",
+    "fleet": "disaggregated prefill/decode fleet vs colocated baseline "
+             "on one bursty trace (KV wire band + J/token)",
     "elastic_smoke": "kill a simulated host mid-run: detect, re-plan "
                      "onto survivors, restore, price the recovery",
     "fig5_comm": "paper Fig. 5a: TP vs PP communication per epoch",
@@ -57,15 +59,16 @@ def main(argv=None) -> int:
     if "--list" in names or "-l" in names:
         return list_suites()
     from benchmarks import (comm_model, common, elastic_smoke, fig5_comm,
-                            fig5_exec, fig6_large, pipeline_smoke,
-                            plan_smoke, roofline, serve_bench,
-                            table1_energy, train_smoke)
+                            fig5_exec, fig6_large, fleet_bench,
+                            pipeline_smoke, plan_smoke, roofline,
+                            serve_bench, table1_energy, train_smoke)
     suites = {
         "comm_model": comm_model.run,
         "train_smoke": train_smoke.run,
         "pipeline_smoke": pipeline_smoke.run,
         "plan_smoke": plan_smoke.run,
         "serve_bench": serve_bench.run,
+        "fleet": fleet_bench.run,
         "elastic_smoke": elastic_smoke.run,
         "fig5_comm": fig5_comm.run,
         "fig5_exec": fig5_exec.run,

@@ -28,6 +28,8 @@ ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__)))))
 DEFAULT_LEDGER_SRC = os.path.join(ROOT, "BENCH_ledger.jsonl")
 DEFAULT_PLAN = os.path.join(ROOT, "PLAN_report.json")
+DEFAULT_ROUTE_OUT = os.path.join(ROOT, "SERVE_route.json")
+DEFAULT_REPORT = os.path.join(ROOT, "BENCH_report.json")
 
 
 def parse_slo_ms(text):
@@ -71,7 +73,9 @@ def build_parser():
         description="continuous-batching serving with paged KV cache, "
                     "traffic/SLO harness and joules-per-token routing")
     ap.add_argument("--arch", default="chatglm3-6b")
-    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="trace length (default 8; fleet mode defaults "
+                         "to 100000 modeled / 64 executed)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
@@ -87,8 +91,10 @@ def build_parser():
                     choices=["", "poisson", "bursty", "closed"],
                     help="synthetic workload; empty = legacy closed "
                          "batch of --requests equal prompts")
-    ap.add_argument("--rate", type=float, default=4.0,
-                    help="trace arrival rate (requests/s)")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="trace arrival rate in requests/s (default "
+                         "4.0; fleet mode auto-sizes to the decode "
+                         "pool's modeled capacity)")
     ap.add_argument("--slo", type=parse_slo_ms, default=0.0,
                     help="TTFT/TPOT SLO, e.g. 200ms")
     ap.add_argument("--deadline-ms", type=float, default=0.0,
@@ -105,6 +111,31 @@ def build_parser():
                     help="PLAN_report.json with fitted constants "
                          "(falls back to BENCH_ledger.jsonl, then "
                          "paper defaults)")
+    ap.add_argument("--route-out", default=DEFAULT_ROUTE_OUT,
+                    help="persist the --route auto candidate J/token "
+                         "table here as serve-route/v1 JSON "
+                         "('' disables)")
+    fleet = ap.add_argument_group("fleet (disaggregated serving)")
+    fleet.add_argument("--fleet", action="store_true",
+                       help="disaggregated prefill/decode fleet replay "
+                            "with J/token autoscaling (modeled "
+                            "discrete-event run by default)")
+    fleet.add_argument("--executed", action="store_true",
+                       help="fleet with real jitted engines (small "
+                            "traces; proves token-exactness)")
+    fleet.add_argument("--colocated", action="store_true",
+                       help="run the single-engine baseline through "
+                            "the fleet simulator instead")
+    fleet.add_argument("--prefill-replicas", type=int, default=1,
+                       help="initial prefill pool size")
+    fleet.add_argument("--decode-replicas", type=int, default=1,
+                       help="initial decode pool size")
+    fleet.add_argument("--route-table", default=DEFAULT_ROUTE_OUT,
+                       help="serve-route/v1 JSON the fleet planner "
+                            "consumes when present (else it prices "
+                            "candidates fresh)")
+    fleet.add_argument("--report-out", default=DEFAULT_REPORT,
+                       help="fleet mode: write the ledger report here")
     from repro.launch.obs import add_obs_args
     add_obs_args(ap)
     return ap
@@ -143,14 +174,22 @@ def _main(args):
     from repro.serve.traffic import make_trace, TraceItem
     from repro.telemetry import Ledger
 
+    calib = load_calibration(plan_report_path=args.calibration,
+                             ledger_path=DEFAULT_LEDGER_SRC)
+    sampling = parse_sampling(args.sample)
+
+    if args.fleet:
+        return _fleet_main(args, calib, sampling)
+
     ledger = None
     if args.ledger:
         ledger = Ledger(run="launch.serve", jsonl_path=args.ledger)
 
-    sampling = parse_sampling(args.sample)
+    n_requests = args.requests if args.requests is not None else 8
+    rate = args.rate if args.rate is not None else 4.0
     if args.trace:
-        trace = make_trace(args.trace, n=args.requests,
-                           rate_rps=args.rate,
+        trace = make_trace(args.trace, n=n_requests,
+                           rate_rps=rate,
                            prompt_len_range=(4, min(48, args.max_len - 1)),
                            new_tokens_range=(4, args.new_tokens),
                            deadline_ms=args.deadline_ms, seed=args.seed)
@@ -159,10 +198,7 @@ def _main(args):
         trace = [TraceItem(arrival_s=0.0, prompt_len=16,
                            max_new_tokens=args.new_tokens,
                            deadline_ms=args.deadline_ms, seed=args.seed)
-                 for _ in range(args.requests)]
-
-    calib = load_calibration(plan_report_path=args.calibration,
-                             ledger_path=DEFAULT_LEDGER_SRC)
+                 for _ in range(n_requests)]
 
     if args.route == "auto":
         cands = candidate_configs(args.arch, args.dp * args.tp,
@@ -181,6 +217,16 @@ def _main(args):
         sc = winner.config
         print(f"# routed -> {sc.name} "
               f"(predicted {winner.j_per_token:.3e} J/token)")
+        if args.route_out:
+            from repro.serve.fleet import write_route_table
+            from repro.serve.router import trace_stats
+            write_route_table(
+                args.route_out, args.arch, winner, priced,
+                calibration=calib.source,
+                stats=trace_stats(trace, args.page_size),
+                slo_ms=args.slo)
+            print(f"# route table ({len(priced)} candidates) -> "
+                  f"{args.route_out}")
     else:
         impl = "phantom" if "phantom" in args.arch else "tensor"
         sc = ServeConfig(args.arch, impl, args.dp, args.tp, args.slots,
@@ -205,6 +251,93 @@ def _main(args):
           f"fragmentation={pages['fragmentation']:.2f}")
     if ledger is not None:
         print(f"# wrote {len(ledger)} ledger rows to {args.ledger}")
+    return 0
+
+
+def _fleet_main(args, calib, sampling):
+    """Disaggregated fleet replay (docs/serving.md, "Fleet")."""
+    from repro.serve.fleet import (FleetConfig, FleetRouter,
+                                   auto_rate_rps, baseline_config,
+                                   load_route_table, plan_pools)
+    from repro.serve.traffic import make_trace
+    from repro.telemetry import Ledger
+
+    n = args.requests if args.requests is not None else \
+        (64 if args.executed else 100_000)
+    kind = args.trace or "bursty"
+    devices = args.dp * args.tp
+    len_kw = dict(prompt_len_range=(4, min(48, args.max_len - 1)),
+                  new_tokens_range=(4, args.new_tokens),
+                  deadline_ms=args.deadline_ms, seed=args.seed)
+
+    if args.colocated:
+        pre_sc = dec_sc = baseline_config(
+            args.arch, devices, slots=args.slots,
+            max_len=args.max_len, page_size=args.page_size)
+        print(f"# baseline (colocated single engine): {dec_sc.name}")
+    else:
+        # probe trace: the pool planner needs length statistics only
+        probe = make_trace(kind, n=min(n, 2000), rate_rps=10.0,
+                           **len_kw)
+        table = None
+        if args.route_table:
+            try:
+                table = load_route_table(args.route_table)
+            except ValueError as exc:
+                print(f"# ignoring route table: {exc}")
+        pre_sc, dec_sc, notes = plan_pools(
+            args.arch, devices, calib, probe, slo_ms=args.slo,
+            slots=args.slots, max_len=args.max_len,
+            page_size=args.page_size, route_table=table)
+        print(f"# pool plan ({notes['source']}, "
+              f"calibration: {calib.source}):")
+        print(f"#   prefill -> {pre_sc.name} "
+              f"({notes['prefill']['j_per_prompt']:.3e} J/prompt)")
+        print(f"#   decode  -> {dec_sc.name} "
+              f"({notes['decode']['j_per_token']:.3e} J/token)")
+
+    rate = args.rate if args.rate is not None else \
+        auto_rate_rps(dec_sc, calib, (4 + args.new_tokens) / 2,
+                      replicas=args.decode_replicas)
+    trace = make_trace(kind, n=n, rate_rps=rate, **len_kw)
+    print(f"# trace: {kind} n={n} rate={rate:.2f} rps "
+          f"slo={args.slo:.0f}ms "
+          f"mode={'executed' if args.executed else 'modeled'}")
+
+    ledger = Ledger(run="launch.serve.fleet",
+                    jsonl_path=args.ledger or None,
+                    meta={"arch": args.arch, "trace": kind,
+                          "requests": n},
+                    report_path=args.report_out or None)
+    fc = FleetConfig(prefill=pre_sc, decode=dec_sc, slo_ms=args.slo,
+                     executed=args.executed, colocated=args.colocated,
+                     prefill_replicas=args.prefill_replicas,
+                     decode_replicas=args.decode_replicas)
+    router = FleetRouter(fc, calib=calib, ledger=ledger,
+                         seed=args.seed)
+    report = router.run(trace, sampling=sampling)
+    ledger.close()
+
+    _print_slo(report["slo"])
+    pools = report["pools"]
+    print(f"scale events: {report['scale_ups']} up / "
+          f"{report['scale_downs']} down "
+          f"(decode peak {pools['decode']['replicas_peak']} replicas)")
+    for ev in report["scale_events"]:
+        print(f"  t={ev['t_s']:8.2f}s {ev['pool']:7s} {ev['action']:4s} "
+              f"-> {ev['replicas']} ({ev['reason']})")
+    jt = report["j_per_token"]
+    print(f"joules/token: prefill={jt['prefill']:.3e} "
+          f"decode={jt['decode']:.3e} transfer={jt['transfer']:.3e}")
+    print(f"joules/token [fleet]: {jt['fleet']:.3e}")
+    xfer = report["transfer"]
+    print(f"kv transfer: {xfer['measured']['migrations']:.0f} "
+          f"migrations, "
+          f"{xfer['measured']['transfer_wire_bytes']:.3e} bytes, "
+          f"measured/predicted wire ratio = "
+          f"{xfer['ratio_wire_bytes']:.4f}")
+    if args.report_out:
+        print(f"# wrote {len(ledger)} ledger rows -> {args.report_out}")
     return 0
 
 

@@ -131,7 +131,7 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, mesh, params, *, slots: int = 8,
                  max_len: int = 256, ledger=None, page_size: int = 16,
                  order: str = "fcfs", min_free_for_prefill: int = 1,
-                 scheduler: Optional[Scheduler] = None):
+                 scheduler: Optional[Scheduler] = None, serve_fns=None):
         self.cfg, self.mesh, self.params = cfg, mesh, params
         self.slots = slots
         self.max_len = max_len
@@ -157,9 +157,12 @@ class ServeEngine:
         # virtual clock: wall seconds of executed steps x clock_scale
         self.now_s = 0.0
         self.clock_scale = 1.0
+        # fleet decode pools pass one shared ``make_serve_fns`` tuple so
+        # every replica reuses the same jitted (compiled-once) steps
         shape = ShapeConfig("serve", max_len, slots, "decode")
         self.prefill_fn, self.decode_fn, self.cache_sds, self.cspecs = \
-            make_serve_fns(cfg, mesh, shape)
+            serve_fns if serve_fns is not None \
+            else make_serve_fns(cfg, mesh, shape)
         self.cache = jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype), self.cache_sds)
         self.pos = np.zeros((slots,), np.int32)
@@ -174,6 +177,16 @@ class ServeEngine:
             return jax.tree.map(m, cache, fresh)
 
         self._merge = jax.jit(merge)
+
+        def adopt_merge(cache, rows, slot):
+            def m(c, r):
+                start = (jnp.int32(0), jnp.int32(slot)) + \
+                    (jnp.int32(0),) * (c.ndim - 2)
+                return jax.lax.dynamic_update_slice(
+                    c, r.astype(c.dtype), start)
+            return jax.tree.map(m, cache, rows)
+
+        self._adopt_merge = jax.jit(adopt_merge)
 
     # --- clock -----------------------------------------------------------
 
@@ -290,6 +303,37 @@ class ServeEngine:
                 self.last_tok[i, 0] = req.prompt[s - 1]
                 self.pos[i] = s - 1
         self.cache = self._merge(self.cache, fresh, jnp.asarray(mask))
+
+    def adopt(self, req: Request, cache_rows, *, prefill_len: int,
+              pos: int, last_tok: int) -> int:
+        """Install a request whose KV cache was computed ELSEWHERE (a
+        fleet prefill pool) into a free slot: page admission, a jitted
+        dynamic-update of the slot's cache rows, and the decode state
+        (``pos`` / ``last_tok``) exactly as ``_prefill_group`` would
+        have left them — so the replay-last-token contract survives the
+        migration.  ``cache_rows`` is a pytree matching ``self.cache``
+        with batch axis 1 (seq may be the padded prefill length; it is
+        right-padded to ``max_len`` here).  Returns the slot id; raises
+        ``RuntimeError`` when no slot is free and ``CacheOverflow`` when
+        the request cannot fit a slot's frames."""
+        free = [i for i in range(self.slots) if self.active[i] is None]
+        if not free:
+            raise RuntimeError("adopt: no free slot")
+        if req.done:
+            raise RuntimeError(f"adopt: request {req.req_id} already done")
+        slot = free[0]
+        self.pages.alloc(slot, prefill_len)
+        if req._sampler is None:
+            req._sampler = Sampler(req.sampling, self.cfg.vocab_size)
+        rows = jax.tree.map(
+            lambda r, c: _pad_cache_seq(jnp.asarray(r), c[:, :1]),
+            cache_rows, self.cache)
+        self.cache = self._adopt_merge(self.cache, rows,
+                                       jnp.int32(slot))
+        self.active[slot] = req
+        self.pos[slot] = pos
+        self.last_tok[slot, 0] = last_tok
+        return slot
 
     def _finish(self, slot: int, req: Request):
         req.done = True

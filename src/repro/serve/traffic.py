@@ -45,12 +45,19 @@ def make_trace(kind: str = "poisson", *, n: int = 32,
                burst_fraction: float = 0.25,
                prompt_len_range=(4, 48), prompt_len_dist: str = "lognormal",
                new_tokens_range=(4, 24), deadline_ms: float = 0.0,
-               seed: int = 0) -> List[TraceItem]:
+               max_requests: int = 0, seed: int = 0) -> List[TraceItem]:
     """Draw ``n`` requests.  ``bursty`` alternates between a quiet
     Poisson phase at ``rate_rps`` and bursts at ``burst_factor x`` the
     rate (``burst_fraction`` of requests arrive in bursts); ``closed``
     is the degenerate all-at-once trace (arrival 0) the old launcher
-    effectively ran."""
+    effectively ran.
+
+    ``max_requests`` truncates the trace WITHOUT changing the draw: the
+    length/output arrays are still drawn at size ``n``, so
+    ``make_trace(n=N, max_requests=M)`` is exactly the first ``M`` items
+    of ``make_trace(n=N)`` (a prefix, seeded-deterministic — the
+    property the fleet's trace-capping relies on).  Note this is NOT
+    ``make_trace(n=M)``, whose vectorized draws differ."""
     if kind not in TRACE_KINDS:
         raise ValueError(f"unknown trace kind {kind!r}; "
                          f"known: {TRACE_KINDS}")
@@ -70,7 +77,8 @@ def make_trace(kind: str = "poisson", *, n: int = 32,
 
     t = 0.0
     items = []
-    for i in range(n):
+    stop = min(n, max_requests) if max_requests else n
+    for i in range(stop):
         if kind == "closed":
             gap = 0.0
         elif kind == "bursty" and rng.rand() < burst_fraction:

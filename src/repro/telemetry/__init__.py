@@ -23,6 +23,8 @@ from repro.telemetry.ledger import (SCHEMA, Ledger, LedgerEntry,
 from repro.telemetry.meter import StepMeter, measure
 from repro.telemetry.predict import (event_wire_bytes, events_for,
                                      ffn_step_prediction,
+                                     kv_cache_token_bytes,
+                                     kv_transfer_prediction,
                                      measured_energy_fields,
                                      pipeline_ffn_step_prediction,
                                      recovery_account,
@@ -39,7 +41,8 @@ __all__ = [
     "analyze_lowerable", "analyze_lowered", "clear_analysis_cache",
     "compile_lowered", "SCHEMA", "Ledger", "LedgerEntry", "load_report",
     "StepMeter", "measure", "event_wire_bytes", "events_for",
-    "ffn_step_prediction", "measured_energy_fields",
+    "ffn_step_prediction", "kv_cache_token_bytes",
+    "kv_transfer_prediction", "measured_energy_fields",
     "pipeline_ffn_step_prediction", "recovery_account",
     "serve_site_strategies",
     "serve_step_prediction", "strategy_prediction",

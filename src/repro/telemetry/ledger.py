@@ -52,6 +52,8 @@ _RATIO_KEYS = (
     "hbm_bytes_per_device",
     "collective_wire_bytes_per_device",
     "boundary_wire_bytes_per_device",   # pipeline stage-boundary p2p
+    "transfer_wire_bytes",              # fleet prefill->decode KV pages
+    "migrations",                       # fleet KV-page migration count
     "collective_m_floats",
     "energy_j_per_iter",
     "iterations",

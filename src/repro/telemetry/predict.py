@@ -392,6 +392,72 @@ def pipeline_ffn_step_prediction(cfg, pp: int, tp: int, dp: int,
     }
 
 
+def kv_cache_token_bytes(cfg) -> tuple:
+    """``(per_token_bytes, per_sequence_bytes)`` of ONE request's decode
+    cache rows at the model's true cache dtypes (bf16 k/v, fp32 SSD
+    state unless quantized) — the unit the fleet's KV-page transfer
+    channel is priced in (docs/energy_model.md §transfer wire term).
+
+    Computed by differencing ``cache_decls`` at two lengths, so
+    length-proportional leaves (attention k/v, encdec cross k/v) land in
+    the per-token term and fixed-size recurrent state (Mamba conv/SSD)
+    in the per-sequence term, with no per-family arithmetic to drift
+    out of sync with the real cache layout."""
+    import jax
+    from repro.models.model import cache_decls
+    from repro.parallel.axes import MeshAxes
+    axes = MeshAxes(tp=1, dp=1, dp_names=("data",))
+
+    def total_bytes(n_tokens: int) -> float:
+        sds, _ = cache_decls(cfg, axes, 1, n_tokens)
+        return float(sum(
+            leaf.size * leaf.dtype.itemsize
+            for leaf in jax.tree.leaves(sds)))
+
+    step = 16
+    b1, b2 = total_bytes(step), total_bytes(2 * step)
+    per_token = (b2 - b1) / step
+    per_seq = b1 - per_token * step
+    return per_token, max(per_seq, 0.0)
+
+
+def kv_transfer_prediction(cfg, migrations: int, mean_tokens: float, *,
+                           tp_src: int = 1, tp_dst: int = 1,
+                           fits=None, B: float = FRONTIER_B_W) -> dict:
+    """The ``predicted`` block for the fleet's prefill->decode KV-page
+    migrations: ``migrations`` requests, each carrying ``mean_tokens``
+    padded prompt rows of cache across the pool boundary.
+
+    The wire term is a point-to-point hop (Eqn. 26 ``c1 + c2·m``, the
+    same single-hop pricing as PR 5's pipeline stage boundaries); the
+    energy term bills the transfer seconds at static power ``B`` across
+    the endpoint devices of both pools (the accelerators sit idle from
+    the compute account's view while pages move).  The measured side is
+    the TransferChannel's actual byte count, and the fleet bench pins
+    the measured/predicted ``transfer_wire_bytes`` ratio to
+    [0.9, 1.1]."""
+    per_tok, per_seq = kv_cache_token_bytes(cfg)
+    bytes_each = per_seq + mean_tokens * per_tok
+    wire = migrations * bytes_each
+    hop_us = comm_time_us("collective_permute", bytes_each / FLOAT_BYTES,
+                          2, fits)
+    comm_us = migrations * hop_us
+    beta_s = comm_us * 1e-6
+    devices = max(tp_src, 1) + max(tp_dst, 1)
+    return {
+        "transfer_wire_bytes": wire,
+        "migrations": migrations,
+        "bytes_per_migration": bytes_each,
+        "cache_bytes_per_token": per_tok,
+        "cache_bytes_per_sequence": per_seq,
+        "comm_us": comm_us,
+        "beta_s": beta_s,
+        "energy_j": beta_s * B * devices,
+        "model": "E = B*(tp_src+tp_dst)*beta, p2p hop c1 + c2*m",
+        "B_w": B, "tp_src": tp_src, "tp_dst": tp_dst,
+    }
+
+
 # assumed checkpoint-store bandwidth for pricing ckpt IO seconds when a
 # measured duration is unavailable (local NVMe-class, docs/elastic.md)
 CKPT_DISK_BW_BPS = 1.0e9

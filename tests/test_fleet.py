@@ -1,0 +1,328 @@
+"""Disaggregated serving fleet (serve/fleet): autoscaler decision
+logic, pool planning + route-table round trip, the modeled DES replay
+(determinism, KV-transfer wire band, scale events, idle static power),
+the colocated single-engine baseline, and executed-mode token parity
+against a plain ServeEngine replay of the same trace."""
+import json
+
+import pytest
+
+from repro.planner.calibration import Calibration
+from repro.serve.fleet import (AutoscalePolicy, Autoscaler, FleetConfig,
+                               FleetRouter, PoolStats, auto_rate_rps,
+                               baseline_config, load_route_table,
+                               plan_pools, write_route_table)
+from repro.serve.router import ServeConfig, route, trace_stats
+from repro.serve.traffic import make_trace
+
+ARCH = "chatglm3-6b"
+
+
+def _sc(impl="phantom", tp=2, slots=4):
+    return ServeConfig(ARCH, impl, dp=1, tp=tp, slots=slots, max_len=64)
+
+
+def _fleet_fc(**kw):
+    kw.setdefault("prefill", _sc())
+    kw.setdefault("decode", _sc())
+    kw.setdefault("slo_ms", 200.0)
+    kw.setdefault("prefill_policy",
+                  AutoscalePolicy(min_replicas=1, max_replicas=1))
+    kw.setdefault("decode_policy",
+                  AutoscalePolicy(min_replicas=1, max_replicas=2))
+    return FleetConfig(**kw)
+
+
+def _overload_trace(n=4000, seed=0):
+    calib = Calibration()
+    probe = make_trace("bursty", n=500, rate_rps=10.0, seed=seed)
+    mean_new = trace_stats(probe)["mean_new_tokens"]
+    rate = auto_rate_rps(_sc(), calib, mean_new, replicas=1,
+                         utilization=0.9)
+    return make_trace("bursty", n=n, rate_rps=rate, seed=seed), calib
+
+
+# ---------------------------------------------------------------------------
+# autoscaler decision logic (pure, no simulation)
+# ---------------------------------------------------------------------------
+
+class TestAutoscaler:
+    POL = AutoscalePolicy(min_replicas=1, max_replicas=3, cooldown_s=1.0,
+                          idle_ticks=2, scale_down_util=0.35)
+
+    def _busy(self, depth=40, n=1):
+        return PoolStats(queue_depth=depth, n_active=n, n_warming=0,
+                         service_s_per_item=0.05, busy_fraction=1.0)
+
+    def _idle(self, n=2):
+        return PoolStats(queue_depth=0, n_active=n, n_warming=0,
+                         service_s_per_item=0.05, busy_fraction=0.0)
+
+    def test_scales_up_on_deep_queue(self):
+        sc = Autoscaler(self.POL, pool="decode", slo_ms=200.0)
+        # 40 items * 50ms / 1 replica = 2s wait >> 0.7 * 200ms budget
+        assert sc.evaluate(0.0, self._busy()) == "up"
+        assert sc.events[-1].action == "up"
+        assert sc.events[-1].replicas == 2
+
+    def test_cooldown_blocks_consecutive_decisions(self):
+        sc = Autoscaler(self.POL, pool="decode", slo_ms=200.0)
+        assert sc.evaluate(0.0, self._busy()) == "up"
+        assert sc.evaluate(0.5, self._busy(n=2)) is None
+        assert sc.evaluate(1.5, self._busy(n=2)) == "up"
+
+    def test_up_clamped_at_max(self):
+        sc = Autoscaler(self.POL, pool="decode", slo_ms=200.0)
+        assert sc.evaluate(0.0, self._busy(n=3)) is None
+
+    def test_warming_counts_as_capacity(self):
+        """A replica already ordered suppresses the next scale-up (no
+        thundering herd while one is warming)."""
+        sc = Autoscaler(self.POL, pool="decode", slo_ms=200.0)
+        st = PoolStats(queue_depth=4, n_active=1, n_warming=1,
+                       service_s_per_item=0.05, busy_fraction=1.0)
+        # 4 * 50ms / 2 = 100ms < 140ms budget
+        assert sc.evaluate(0.0, st) is None
+
+    def test_scales_down_after_idle_ticks(self):
+        sc = Autoscaler(self.POL, pool="decode", slo_ms=200.0)
+        assert sc.evaluate(0.0, self._idle()) is None
+        assert sc.evaluate(2.0, self._idle()) == "down"
+        assert sc.events[-1].replicas == 1
+
+    def test_down_clamped_at_min(self):
+        sc = Autoscaler(self.POL, pool="decode", slo_ms=200.0)
+        for t in range(10):
+            assert sc.evaluate(float(2 * t), self._idle(n=1)) is None
+
+    def test_busy_tick_resets_idle_streak(self):
+        sc = Autoscaler(self.POL, pool="decode", slo_ms=200.0)
+        assert sc.evaluate(0.0, self._idle()) is None
+        st = PoolStats(queue_depth=0, n_active=2, n_warming=0,
+                       service_s_per_item=0.05, busy_fraction=0.9)
+        assert sc.evaluate(2.0, st) is None      # streak broken
+        assert sc.evaluate(4.0, self._idle()) is None  # streak = 1 again
+
+    def test_no_slo_uses_default_wait_budget(self):
+        sc = Autoscaler(self.POL, pool="prefill", slo_ms=0.0)
+        # est wait 2s > default 0.5s budget
+        assert sc.evaluate(0.0, self._busy()) == "up"
+
+
+# ---------------------------------------------------------------------------
+# pool planning + route table
+# ---------------------------------------------------------------------------
+
+class TestPlanPools:
+    def test_plans_dp1_pools(self):
+        trace = make_trace("poisson", n=64, seed=0)
+        pre, dec, notes = plan_pools(ARCH, 8, Calibration(), trace,
+                                     slo_ms=200.0)
+        assert pre.dp == 1 and dec.dp == 1
+        assert notes["source"] == "priced"
+        assert notes["candidates"] > 0
+        assert notes["decode"]["j_per_token"] > 0
+
+    def test_route_table_round_trip(self, tmp_path):
+        trace = make_trace("poisson", n=64, seed=0)
+        calib = Calibration()
+        stats = trace_stats(trace)
+        configs = [_sc("tensor"), _sc("phantom")]
+        winner, priced = route(configs, calib, trace, slo_ms=200.0)
+        path = str(tmp_path / "route.json")
+        block = write_route_table(path, ARCH, winner, priced,
+                                  calibration=calib.source,
+                                  stats=stats, slo_ms=200.0)
+        assert block["schema"] == "serve-route/v1"
+        loaded = load_route_table(path)
+        assert loaded == json.load(open(path))
+        pre, dec, notes = plan_pools(ARCH, 8, calib, trace,
+                                     slo_ms=200.0, route_table=loaded)
+        assert notes["source"] == "route-table"
+        assert notes["candidates"] == len(priced)
+        assert pre.dp == 1 and dec.dp == 1
+
+    def test_missing_route_table_is_none(self, tmp_path):
+        assert load_route_table(str(tmp_path / "nope.json")) is None
+        assert load_route_table("") is None
+
+    def test_wrong_schema_fails_loudly(self, tmp_path):
+        path = tmp_path / "bad.json"
+        path.write_text('{"schema": "other/v9"}')
+        with pytest.raises(ValueError, match="serve-route/v1"):
+            load_route_table(str(path))
+
+    def test_mismatched_arch_falls_back_to_pricing(self):
+        trace = make_trace("poisson", n=64, seed=0)
+        table = {"schema": "serve-route/v1", "arch": "other-model",
+                 "candidates": [{"config": {}}]}
+        _, _, notes = plan_pools(ARCH, 8, Calibration(), trace,
+                                 route_table=table)
+        assert notes["source"] == "priced"
+
+    def test_baseline_config_is_full_node_tensor(self):
+        sc = baseline_config(ARCH, 8)
+        assert sc.impl == "tensor" and sc.dp == 1
+        assert sc.tp in (8, 4, 2) and sc.devices == sc.tp
+
+    def test_auto_rate_scales_with_replicas(self):
+        calib = Calibration()
+        r1 = auto_rate_rps(_sc(), calib, 14.0, replicas=1)
+        r2 = auto_rate_rps(_sc(), calib, 14.0, replicas=2)
+        assert r1 > 0
+        assert r2 == pytest.approx(2 * r1)
+
+
+# ---------------------------------------------------------------------------
+# modeled DES replay
+# ---------------------------------------------------------------------------
+
+class TestModeledFleet:
+    @pytest.fixture(scope="class")
+    def run(self):
+        trace, calib = _overload_trace()
+        router = FleetRouter(_fleet_fc(), calib=calib)
+        return router, router.run(trace), trace
+
+    def test_completes_all_admitted(self, run):
+        _, rep, trace = run
+        req = rep["requests"]
+        assert rep["mode"] == "modeled"
+        assert req["trace"] == len(trace)
+        assert req["finished"] == req["trace"] - req["rejected"]
+        assert rep["slo"]["generated_tokens"] > 0
+
+    def test_scales_up_and_down(self, run):
+        _, rep, _ = run
+        assert rep["scale_ups"] >= 1
+        assert rep["scale_downs"] >= 1
+        assert rep["pools"]["decode"]["replicas_peak"] >= 2
+        for ev in rep["scale_events"]:
+            assert ev["pool"] in ("prefill", "decode")
+            assert ev["action"] in ("up", "down")
+
+    def test_transfer_wire_band(self, run):
+        _, rep, _ = run
+        x = rep["transfer"]
+        assert x["measured"]["migrations"] > 0
+        assert 0.9 <= x["ratio_wire_bytes"] <= 1.1
+        assert x["ratio_migrations"] == pytest.approx(1.0)
+
+    def test_idle_static_power_billed(self, run):
+        """Every powered device-second not spent stepping is billed at
+        B watts — what makes over-provisioning visible in J/token."""
+        _, rep, _ = run
+        for phase in ("prefill", "decode"):
+            p = rep["pools"][phase]
+            assert p["device_s"] > 0
+            assert p["idle_j"] >= 0
+            assert p["j_per_token"] > 0
+        j = rep["j_per_token"]
+        assert j["fleet"] == pytest.approx(
+            j["prefill"] + j["decode"] + j["transfer"])
+
+    def test_deterministic_replay(self):
+        trace, calib = _overload_trace(n=1500)
+        a = FleetRouter(_fleet_fc(), calib=calib).run(trace)
+        b = FleetRouter(_fleet_fc(), calib=calib).run(trace)
+        assert json.dumps(a, sort_keys=True) == \
+            json.dumps(b, sort_keys=True)
+
+    def test_oversize_requests_rejected(self):
+        trace = make_trace("poisson", n=32, prompt_len_range=(60, 80),
+                           new_tokens_range=(8, 16), seed=1)
+        calib = Calibration()
+        rep = FleetRouter(_fleet_fc(), calib=calib).run(trace)
+        # padded prompt + new tokens can't fit max_len=64
+        assert rep["requests"]["rejected"] > 0
+
+
+# ---------------------------------------------------------------------------
+# colocated single-engine baseline
+# ---------------------------------------------------------------------------
+
+class TestColocatedBaseline:
+    @pytest.fixture(scope="class")
+    def run(self):
+        trace, calib = _overload_trace(n=1500)
+        fc = FleetConfig(prefill=baseline_config(ARCH, 8),
+                         decode=baseline_config(ARCH, 8),
+                         slo_ms=200.0, colocated=True,
+                         decode_replicas=1)
+        return FleetRouter(fc, calib=calib).run(trace)
+
+    def test_transfer_is_free(self, run):
+        """Colocated hand-offs are slot splices, not wire events: they
+        are counted but carry zero bytes and zero joules."""
+        x = run["transfer"]
+        assert x["measured"]["migrations"] > 0
+        assert x["measured"]["transfer_wire_bytes"] == 0
+        assert x["measured"]["energy_j"] == 0.0
+        assert run["j_per_token"]["transfer"] == 0.0
+
+    def test_never_scales(self, run):
+        assert run["scale_events"] == []
+        assert run["pools"]["decode"]["replicas_peak"] == 1
+
+    def test_prefill_runs_on_decode_replicas(self, run):
+        pre = run["pools"]["prefill"]
+        assert pre["replicas_final"] == 0      # counters only
+        assert pre["steps"] > 0                # ...but work was billed
+        assert pre["device_s"] == 0.0          # no devices of its own
+
+    def test_executed_colocated_unsupported(self):
+        fc = FleetConfig(prefill=_sc(), decode=_sc(), executed=True,
+                         colocated=True)
+        with pytest.raises(NotImplementedError):
+            FleetRouter(fc, calib=Calibration())
+
+
+# ---------------------------------------------------------------------------
+# executed mode: real engines, token parity with a plain ServeEngine
+# ---------------------------------------------------------------------------
+
+def test_executed_fleet_matches_single_engine_tokens():
+    """The fleet's prefill -> migrate -> adopt -> decode path must emit
+    EXACTLY the tokens a plain ServeEngine replay of the same trace
+    produces (greedy, same params seed): migration moves KV pages, it
+    must not change a single logit."""
+    from repro.launch.mesh import make_local_mesh
+    from repro.models.model import model_decls
+    from repro.parallel.axes import MeshAxes
+    from repro.parallel.params import materialize
+    from repro.serve.engine import ServeEngine
+    from repro.serve.traffic import replay, trace_requests
+
+    sc = ServeConfig(ARCH, "tensor", dp=1, tp=2, slots=4, max_len=64)
+    trace = make_trace("poisson", n=8, rate_rps=50.0,
+                       prompt_len_range=(4, 24),
+                       new_tokens_range=(3, 8), seed=0)
+    calib = Calibration()
+
+    fc = FleetConfig(prefill=sc, decode=sc, slo_ms=200.0, executed=True,
+                     prefill_replicas=1, decode_replicas=1,
+                     prefill_policy=AutoscalePolicy(min_replicas=1,
+                                                    max_replicas=1),
+                     decode_policy=AutoscalePolicy(min_replicas=1,
+                                                   max_replicas=1))
+    router = FleetRouter(fc, calib=calib, seed=0)
+    rep = router.run(trace)
+    assert rep["mode"] == "executed"
+    assert rep["requests"]["finished"] == len(trace)
+    assert 0.9 <= rep["transfer"]["ratio_wire_bytes"] <= 1.1
+
+    # reference: the SAME trace through one plain ServeEngine with the
+    # same params seed — greedy decode must match stream-for-stream
+    cfg = sc.model_config()
+    mesh = make_local_mesh(sc.dp, sc.tp)
+    params = materialize(
+        model_decls(cfg, MeshAxes.from_mesh(mesh)), 0)
+    eng = ServeEngine(cfg, mesh, params, slots=sc.slots,
+                      max_len=sc.max_len, page_size=sc.page_size)
+    ref_reqs = trace_requests(trace, cfg.vocab_size, seed=0)
+    replay(eng, ref_reqs)
+
+    fleet_toks = {r.req_id: list(r.out_tokens)
+                  for r in router.finished}
+    ref_toks = {r.req_id: list(r.out_tokens) for r in ref_reqs}
+    assert fleet_toks == ref_toks

@@ -82,6 +82,60 @@ def test_paged_cache_churn_invariants():
     assert st["high_water_pages"] <= pc.total_pages
 
 
+def test_paged_cache_free_list_stays_address_ordered():
+    """Freed frames re-enter the pool in ADDRESS order regardless of
+    free order, so external fragmentation is a residency property —
+    it returns to exactly 0.0 whenever the pool empties, instead of
+    ratcheting up across bursts (the append-order failure mode this
+    replaces)."""
+    pc = PagedKVCache(slots=4, max_len=64, page_size=16)
+    for s in range(4):
+        pc.alloc(s, 64)                  # drain the whole pool
+    assert pc.free_pages == 0
+    # free out of address order: slots 2, 0, 3, 1
+    for s in (2, 0, 3, 1):
+        pc.free(s)
+        pc.check()                       # verifies ascending free list
+    assert pc._free == list(range(pc.total_pages))
+    assert pc.external_fragmentation() == 0.0
+
+
+def test_paged_cache_bursty_churn_external_fragmentation():
+    """Bursty alloc/free churn (whole cohorts admitted, random subsets
+    freed) — the invariant check holds at every step and the external
+    fragmentation metric lands back at exactly 0.0 at every point the
+    pool returns to empty."""
+    rng = np.random.RandomState(42)
+    pc = PagedKVCache(slots=8, max_len=128, page_size=16)
+    empties = 0
+    for _burst in range(60):
+        live = []
+        # burst: admit a cohort of random-length requests
+        for s in range(int(rng.randint(2, 9))):
+            n = int(rng.randint(1, 129))
+            if pc.pages_for(n) <= pc.frames_per_slot:
+                pc.alloc(s, n)
+                live.append(s)
+        pc.check()
+        assert 0.0 <= pc.external_fragmentation() <= 1.0
+        # drain in shuffled order, some decode growth along the way
+        rng.shuffle(live)
+        for s in live:
+            pos = min(pc._table[s].live_tokens
+                      + int(rng.randint(0, 16)), 127)
+            pc.advance(s, pos)
+            pc.free(s)
+            pc.check()
+        assert pc.allocated_pages == 0
+        assert pc.external_fragmentation() == 0.0, \
+            "external fragmentation must vanish with occupancy"
+        empties += 1
+    assert empties == 60
+    st = pc.stats()
+    assert st["free_pages"] == st["total_pages"]
+    assert st["external_fragmentation"] == 0.0
+
+
 # ---------------------------------------------------------------------------
 # scheduler (host-only; uses engine Request lazily to avoid jax import
 # ordering issues — conftest sets the device flag first anyway)

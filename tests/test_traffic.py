@@ -1,0 +1,136 @@
+"""Edge cases of the synthetic traffic generator (serve/traffic.py).
+
+The fleet replays 100k+ request traces, so the generator's corner
+behaviors — zero-arrival windows inside bursty traces, duplicate
+arrival timestamps, ``max_requests`` truncation, seeded determinism —
+are load-bearing: the DES event loop, the FCFS group former and the
+transfer account's a-priori prediction all consume these traces raw.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.traffic import TRACE_KINDS, TraceItem, make_trace
+
+
+def _arrivals(trace):
+    return [t.arrival_s for t in trace]
+
+
+class TestSeededDeterminism:
+    def test_same_seed_same_trace(self):
+        a = make_trace("bursty", n=200, seed=7)
+        b = make_trace("bursty", n=200, seed=7)
+        assert a == b
+
+    def test_different_seed_different_trace(self):
+        a = make_trace("bursty", n=200, seed=7)
+        b = make_trace("bursty", n=200, seed=8)
+        assert a != b
+
+    @pytest.mark.parametrize("kind", TRACE_KINDS)
+    def test_all_kinds_deterministic(self, kind):
+        assert make_trace(kind, n=64, seed=3) == \
+            make_trace(kind, n=64, seed=3)
+
+
+class TestZeroArrivalWindows:
+    def test_bursty_has_quiet_windows(self):
+        """A bursty trace at a modest base rate must contain windows
+        with NO arrivals (the quiet phase between bursts) — the fleet's
+        scale-down path only ever triggers inside these."""
+        trace = make_trace("bursty", n=500, rate_rps=20.0,
+                           burst_factor=16.0, seed=0)
+        arr = _arrivals(trace)
+        span = arr[-1]
+        # split the span into 100 windows; at a uniform rate every
+        # window would hold ~5 arrivals — bursts concentrate them
+        edges = np.linspace(0.0, span, 101)
+        counts, _ = np.histogram(arr, bins=edges)
+        assert (counts == 0).any(), \
+            "bursty trace had no zero-arrival window"
+
+    def test_closed_trace_is_single_window(self):
+        trace = make_trace("closed", n=32, seed=1)
+        assert all(t.arrival_s == 0.0 for t in trace)
+
+    def test_arrivals_monotonic(self):
+        for kind in TRACE_KINDS:
+            arr = _arrivals(make_trace(kind, n=128, seed=2))
+            assert arr == sorted(arr)
+
+
+class TestDuplicateArrivals:
+    def test_closed_duplicates_all_zero(self):
+        """The degenerate all-at-once trace: every arrival duplicates.
+        The replay must still admit all of them (one prefill group per
+        bucket) — regression for tie-breaking in arrival ordering."""
+        trace = make_trace("closed", n=16, seed=5)
+        assert len(set(_arrivals(trace))) == 1
+
+    def test_rounding_can_collide_and_replay_survives(self):
+        """arrival_s is rounded to 1e-6 s, so a hot burst can collide
+        two arrivals onto one timestamp; sort stability over the trace
+        order must keep the trace usable as a replay key."""
+        trace = [TraceItem(arrival_s=0.5, prompt_len=8,
+                           max_new_tokens=4),
+                 TraceItem(arrival_s=0.5, prompt_len=16,
+                           max_new_tokens=4),
+                 TraceItem(arrival_s=0.25, prompt_len=8,
+                           max_new_tokens=4)]
+        ordered = sorted(trace, key=lambda t: t.arrival_s)
+        assert [t.prompt_len for t in ordered] == [8, 8, 16]
+
+    def test_high_rate_burst_duplicates(self):
+        """At an extreme burst rate the 1e-6 rounding makes real
+        duplicate timestamps; the generator must not dedupe or reorder
+        them."""
+        trace = make_trace("bursty", n=3000, rate_rps=5e5,
+                           burst_factor=10.0, burst_fraction=0.9,
+                           seed=11)
+        arr = _arrivals(trace)
+        assert len(set(arr)) < len(arr), \
+            "expected duplicate timestamps at 5e5 rps"
+        assert arr == sorted(arr)
+
+
+class TestMaxRequestsTruncation:
+    def test_prefix_property(self):
+        """make_trace(n=N, max_requests=M) is EXACTLY the first M items
+        of make_trace(n=N): the length arrays are drawn at size n
+        before truncation, so capping the trace never changes the
+        drawn workload — the property the fleet's trace capping and
+        resume rely on."""
+        full = make_trace("bursty", n=400, seed=9)
+        capped = make_trace("bursty", n=400, max_requests=150, seed=9)
+        assert len(capped) == 150
+        assert capped == full[:150]
+
+    def test_not_equal_to_smaller_draw(self):
+        """...and it is NOT the same as drawing n=M directly (the
+        vectorized draws differ) — documents why max_requests exists
+        instead of callers just lowering n."""
+        capped = make_trace("bursty", n=400, max_requests=150, seed=9)
+        small = make_trace("bursty", n=150, seed=9)
+        assert capped != small
+
+    def test_cap_beyond_n_is_noop(self):
+        full = make_trace("poisson", n=50, seed=4)
+        assert make_trace("poisson", n=50, max_requests=500,
+                          seed=4) == full
+
+    def test_zero_cap_means_uncapped(self):
+        full = make_trace("poisson", n=50, seed=4)
+        assert make_trace("poisson", n=50, max_requests=0,
+                          seed=4) == full
+
+
+def test_unknown_kind_rejected():
+    with pytest.raises(ValueError, match="unknown trace kind"):
+        make_trace("diurnal", n=8)
+
+
+def test_length_ranges_respected():
+    trace = make_trace("poisson", n=300, prompt_len_range=(4, 48),
+                       new_tokens_range=(4, 24), seed=6)
+    assert all(4 <= t.prompt_len <= 48 for t in trace)
+    assert all(4 <= t.max_new_tokens <= 24 for t in trace)
