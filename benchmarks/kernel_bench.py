@@ -1,0 +1,58 @@
+"""Fused Pallas kernel vs XLA phantom FFN step — the kernel ledger join.
+
+Runs the identical phantom FFN probe step (telemetry/probe.py) twice —
+``kernel_backend="xla"`` (composed GEMM chain) and ``"pallas"`` (the
+fused custom_vjp op from ``kernels/ops.py``) — and records both as
+ledger rows with measured/predicted flops and wire ratios.  The wire
+ratio must pin at 1.00 for BOTH backends: the kernel fuses GEMMs, never
+collectives, so any drift means an unpriced collective snuck inside the
+fused entrypoint (the same invariant ``analysis.units.kernel_unit``
+audits statically).
+
+On this CPU container the pallas row runs through the Pallas interpreter
+(a correctness mode lowered as per-tile loops), so its wall time and
+HLO-counted flops are NOT the TPU roofline — the interpreter's grid loop
+body is counted once by XLA cost analysis, which is why the pallas row's
+flops ratio band in ``ci/bench_baseline.json`` sits below the XLA row's.
+On TPU the same entrypoint compiles to the MXU kernel.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+
+
+def run(steps: int = 5):
+    from repro.configs.base import (ModelConfig, PhantomConfig,
+                                    phantom_projection_map)
+    from repro.launch.mesh import make_local_mesh
+    from repro.parallel.axes import MeshAxes
+    from repro.telemetry import measure_ffn_step
+
+    mesh = make_local_mesh(1, 8)
+    p = MeshAxes.from_mesh(mesh).tp
+    n, L, batch, k = 512, 2, 32, 8
+    for backend in ("xla", "pallas"):
+        cfg = ModelConfig(
+            name=f"ffn{n}-phantom-{backend}", family="ffn",
+            num_layers=L, d_model=n, ffn_width=n, ffn_depth=L,
+            mlp="relu", phantom=PhantomConfig(k=k),
+            projections=phantom_projection_map(
+                k, ffn_layer=True, kernel_backend=backend))
+        measured, predicted = measure_ffn_step(cfg, mesh, batch,
+                                               steps=steps)
+        rf = (measured["flops_per_device"]
+              / predicted["flops_per_device"])
+        rw = (measured["collective_wire_bytes_per_device"]
+              / predicted["collective_wire_bytes_per_device"])
+        emit(f"kernel_bench_{backend}",
+             measured.get("wall_us_median", 0.0),
+             f"n={n};L={L};k={k};flops_ratio={rf:.3f};"
+             f"wire_ratio={rw:.4f}",
+             kind="kernel", arch=cfg.name, impl=f"phantom_{backend}",
+             p=p, measured=measured, predicted=predicted,
+             extra={"n": n, "L": L, "k": k, "batch": batch,
+                    "steps": steps, "kernel_backend": backend})
+
+
+if __name__ == "__main__":
+    run()

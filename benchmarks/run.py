@@ -29,6 +29,8 @@ SUITES = {
                   "on this host's mesh",
     "train_smoke": "metered TP-vs-phantom FFN step "
                    "(measured/predicted ledger join)",
+    "kernel_bench": "fused Pallas vs XLA phantom FFN step "
+                    "(kernel ledger join, wire ratio pinned both ways)",
     "pipeline_smoke": "metered 1F1B pipelined FFN step on the pp=2 mesh "
                       "(stage-boundary wire-byte join)",
     "plan_smoke": "energy-aware planner end-to-end: calibrate, search, "
@@ -60,11 +62,13 @@ def main(argv=None) -> int:
         return list_suites()
     from benchmarks import (comm_model, common, elastic_smoke, fig5_comm,
                             fig5_exec, fig6_large, fleet_bench,
-                            pipeline_smoke, plan_smoke, roofline,
-                            serve_bench, table1_energy, train_smoke)
+                            kernel_bench, pipeline_smoke, plan_smoke,
+                            roofline, serve_bench, table1_energy,
+                            train_smoke)
     suites = {
         "comm_model": comm_model.run,
         "train_smoke": train_smoke.run,
+        "kernel_bench": kernel_bench.run,
         "pipeline_smoke": pipeline_smoke.run,
         "plan_smoke": plan_smoke.run,
         "serve_bench": serve_bench.run,

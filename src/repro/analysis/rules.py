@@ -230,11 +230,39 @@ def rule_recompilation_hazard(unit: AuditUnit) -> List[Finding]:
 # registry
 # ---------------------------------------------------------------------------
 
+def rule_kernel_vmem(unit: AuditUnit) -> List[Finding]:
+    """Units carrying a Pallas kernel tile config (``meta.kernel_tiles``)
+    must fit the per-core VMEM budget — the static form of the runtime
+    ``KernelConfigError`` guard, so a planner/audit sweep flags an
+    impossible tile plan before anything is launched."""
+    tiles = (unit.meta or {}).get("kernel_tiles")
+    if not tiles:
+        return []
+    from repro.kernels.phantom_fused import (VMEM_BUDGET_BYTES,
+                                             kernel_vmem_bytes)
+    budget = (unit.meta or {}).get("kernel_vmem_budget",
+                                   VMEM_BUDGET_BYTES)
+    need = kernel_vmem_bytes(tiles["bm"], tiles["bn"], tiles["bk"],
+                             tiles.get("bpk", 0),
+                             unit.compute_dtype or "float32")
+    if need > budget:
+        return [Finding(
+            "kernel-vmem", _demote(ERROR, unit.strict), unit.name,
+            f"fused-kernel tiles {tiles} need ~{need} B VMEM, over the "
+            f"{budget} B per-core budget — the kernel would raise "
+            f"KernelConfigError at run time; shrink the tiles or fall "
+            f"back to kernel_backend='xla'", key="kernel-vmem",
+            detail={"tiles": dict(tiles), "need_bytes": need,
+                    "budget_bytes": budget})]
+    return []
+
+
 PROGRAM_RULES: Dict[str, Callable[[AuditUnit], List[Finding]]] = {
     "collective-accounting": rule_collective_accounting,
     "sharding-hygiene": rule_sharding_hygiene,
     "dtype-drift": rule_dtype_drift,
     "recompilation-hazard": rule_recompilation_hazard,
+    "kernel-vmem": rule_kernel_vmem,
 }
 
 
@@ -269,6 +297,10 @@ def rule_catalog() -> List[dict]:
          "kind": "program",
          "rationale": "unhashable or hash-unstable entrypoint configs "
                       "defeat every compile cache"},
+        {"id": "kernel-vmem", "severity": ERROR, "kind": "program",
+         "rationale": "a Pallas tile working set over the per-core "
+                      "VMEM budget cannot be scheduled on-chip; catch "
+                      "the impossible tile plan statically"},
     ]
     cat += [{"id": rid, "severity": sev, "kind": "source",
              "rationale": why} for rid, (sev, why, _) in

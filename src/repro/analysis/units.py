@@ -172,6 +172,65 @@ def ffn_train_unit(cfg, mesh, global_batch: int) -> AuditUnit:
     )
 
 
+def kernel_unit(cfg, mesh, global_batch: int) -> AuditUnit:
+    """The phantom FFN probe lowered with ``kernel_backend="pallas"`` —
+    the fused custom_vjp entrypoint.  Predicted collectives come from
+    ``telemetry.predict.fused_kernel_step_events`` (shared with the
+    ledger), which equals the XLA path's account by construction: the
+    kernel fuses GEMMs, never collectives, and this unit proves nothing
+    went unpriced when the math moved inside ``pallas_call``."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.ffn import ffn_strategy
+    from repro.kernels.phantom_fused import (VMEM_BUDGET_BYTES,
+                                             kernel_vmem_bytes)
+    from repro.parallel.axes import MeshAxes
+    from repro.parallel.params import abstract
+    from repro.telemetry.predict import fused_kernel_step_events
+    from repro.telemetry.probe import make_ffn_probe_step
+
+    axes = MeshAxes.from_mesh(mesh)
+    tp, dp = axes.tp, axes.dp
+    fn, decls = make_ffn_probe_step(cfg, mesh, global_batch)
+    x_sds = jax.ShapeDtypeStruct((global_batch, cfg.ffn_width),
+                                 jnp.float32)
+    hlo, costs, jaxpr = _lower_unit(fn, abstract(decls), x_sds, x_sds,
+                                    default_group=tp)
+
+    st = ffn_strategy(cfg, tp)
+    L = cfg.num_layers
+    rows_local = global_batch / max(dp, 1)
+    predicted = [PricedCollective(ev.collective, ev.m_floats, tp, reps)
+                 for ev, reps in
+                 fused_kernel_step_events(cfg, tp, rows_local)]
+    if dp > 1:
+        m_grads = L * st.param_count() / max(tp, 1)
+        predicted.append(PricedCollective(
+            "all_reduce", m_grads / (2 * L), dp, 2.0 * L))
+    predicted.append(_loss_psum(dp * tp))
+
+    spec = cfg.projection_spec("ffn_layer")
+    # default forward-kernel tiles, clamped the way the kernel clamps
+    tiles = {dim: min(128, size) for dim, size in
+             (("bm", int(rows_local)), ("bn", cfg.ffn_width // tp),
+              ("bk", cfg.ffn_width // tp), ("bpk", tp * spec.k))}
+    return AuditUnit(
+        name=f"kernel/{cfg.name}/dp{dp}tp{tp}",
+        kind="kernel", hlo_text=hlo, costs=costs, jaxpr=jaxpr,
+        predicted=predicted, axes={"dp": dp, "tp": tp, "pp": 1},
+        compute_dtype="float32",
+        static_args={"cfg": cfg, "strategy_spec": spec},
+        strict=True, wire_rtol=0.05,
+        meta={"strategy": st.kind, "global_batch": global_batch,
+              "kernel_backend": spec.kernel_backend,
+              "kernel_tiles": tiles,
+              "kernel_vmem_bytes": kernel_vmem_bytes(
+                  tiles["bm"], tiles["bn"], tiles["bk"], tiles["bpk"],
+                  "float32"),
+              "kernel_vmem_budget": VMEM_BUDGET_BYTES},
+    )
+
+
 def pipeline_unit(cfg, mesh, global_batch: int) -> AuditUnit:
     """The 1F1B pipelined paper-FFN probe step — the entrypoint whose
     boundary_wire ratio pins at 1.0000."""
@@ -317,6 +376,12 @@ def build_default_units(*, arch: str = "qwen2.5-14b") -> List[AuditUnit]:
     units.append(ffn_train_unit(dense, make_local_mesh(1, 8), 64))
     units.append(ffn_train_unit(phantom, make_local_mesh(1, 8), 64))
     units.append(ffn_train_unit(phantom, make_local_mesh(2, 4), 64))
+
+    pallas = base.replace(
+        name="audit-ffn-pallas",
+        projections=phantom_projection_map(8, ffn_layer=True,
+                                           kernel_backend="pallas"))
+    units.append(kernel_unit(pallas, make_local_mesh(1, 8), 64))
 
     pipe = phantom.replace(
         name="audit-ffn-pipe",

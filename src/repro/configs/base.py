@@ -58,6 +58,7 @@ class PhantomConfig:
     apply_attn_proj: bool = False   # factorize QKV/O projections (beyond-paper)
     include_self_term: bool = False # False = faithful (self block excluded)
     variant: str = "fused"          # "faithful" | "fused" | "ring"
+    kernel_backend: str = "xla"     # "xla" | "pallas" | "auto" (fused only)
     # faithful: per-source decompress GEMMs + custom_vjp AllGather (paper Alg. 1)
     # fused:    single concatenated decompress GEMM (TPU/MXU adaptation)
     # ring:     ppermute ring with overlapped partial decompress GEMMs
@@ -116,6 +117,11 @@ class ProjectionSpec:
     k: int = 64                     # ghost width (phantom family)
     variant: str = "fused"          # faithful | fused | ring
     include_self_term: bool = False
+    # Executing kernel for the hot inner op at this site: "xla" composes
+    # the GEMMs in XLA; "pallas" runs the fused Pallas kernels (phantom
+    # fused projection / flash-attention core); "auto" picks pallas on
+    # TPU, xla elsewhere.  See docs/kernels.md.
+    kernel_backend: str = "xla"     # xla | pallas | auto
 
 
 # every projection site the model families expose, with its natural dense
@@ -177,7 +183,8 @@ def with_phantom_overrides(cfg: "ModelConfig", **kw) -> "ModelConfig":
     ``--variant`` / ``phantom.k`` override path, which must keep working
     now that shipped configs carry explicit per-site specs."""
     spec_kw = {key: v for key, v in kw.items()
-               if key in ("k", "variant", "include_self_term")}
+               if key in ("k", "variant", "include_self_term",
+                          "kernel_backend")}
     entries = {}
     for f in dataclasses.fields(ProjectionMap):
         spec = getattr(cfg.projections, f.name)
@@ -191,7 +198,8 @@ def with_phantom_overrides(cfg: "ModelConfig", **kw) -> "ModelConfig":
 def phantom_projection_map(k: int, *, variant: str = "fused",
                            include_self_term: bool = False,
                            ffn: bool = False, attn: bool = False,
-                           ffn_layer: bool = False) -> ProjectionMap:
+                           ffn_layer: bool = False,
+                           kernel_backend: str = "xla") -> ProjectionMap:
     """The explicit per-site ``ProjectionMap`` equivalent of the
     deprecated ``ffn_impl`` / ``PhantomConfig.apply_*`` flags: phantom
     at the selected site families, the natural dense strategy
@@ -203,7 +211,8 @@ def phantom_projection_map(k: int, *, variant: str = "fused",
       attn       QKV/O + SSM in/out      (old ``apply_attn_proj=True``)
     """
     ph = ProjectionSpec(kind="phantom", k=k, variant=variant,
-                        include_self_term=include_self_term)
+                        include_self_term=include_self_term,
+                        kernel_backend=kernel_backend)
     entries: dict = {"default": ProjectionSpec(kind="tensor")}
     if ffn_layer:
         entries["ffn_layer"] = ph
@@ -212,6 +221,25 @@ def phantom_projection_map(k: int, *, variant: str = "fused",
     if attn:
         entries.update({s: ph for s in _PROJ_LEGACY_ATTN_SITES})
     return ProjectionMap(**entries)
+
+
+def with_kernel_backend(cfg: "ModelConfig",
+                        backend: str) -> "ModelConfig":
+    """Config with ``kernel_backend`` set on every explicit projection
+    entry AND the legacy phantom sub-config (so sites falling through to
+    the shim pick it up too) — the launcher ``--kernel-backend`` path.
+    The switch takes effect at phantom ``fused`` sites (the fused
+    projection kernel) and at the attn q/k/v/o sites (the
+    flash-attention core); all other strategies ignore it."""
+    entries = {}
+    for f in dataclasses.fields(ProjectionMap):
+        spec = getattr(cfg.projections, f.name)
+        entries[f.name] = (None if spec is None else
+                           dataclasses.replace(spec,
+                                               kernel_backend=backend))
+    return cfg.replace(
+        projections=ProjectionMap(**entries),
+        phantom=dataclasses.replace(cfg.phantom, kernel_backend=backend))
 
 
 # ---------------------------------------------------------------------------
@@ -328,7 +356,8 @@ class ModelConfig:
                 DeprecationWarning, stacklevel=4)
             return ProjectionSpec(kind="phantom", k=pp.k,
                                   variant=pp.variant,
-                                  include_self_term=pp.include_self_term)
+                                  include_self_term=pp.include_self_term,
+                                  kernel_backend=pp.kernel_backend)
 
         if site == "ffn_layer":
             return ph() if self.ffn_impl == "phantom" else ProjectionSpec()

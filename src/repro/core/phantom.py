@@ -41,6 +41,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import PhantomConfig
 from repro.core.autograd import all_gather_ghosts
+from repro.kernels.ops import phantom_fused_linear, resolve_kernel_backend
 from repro.parallel.params import ParamDecl
 
 
@@ -129,8 +130,15 @@ def phantom_apply(pp: PhantomConfig, params, x, axes, compute_dtype=None):
     # --- compress: k ghost neurons (paper: g = C y) ---
     g = jnp.einsum("...i,ik->...k", x, C)
 
-    # --- local update ---
-    z = jnp.einsum("...i,io->...o", x, L)
+    # fused variant may run as one Pallas kernel (local + decompress in a
+    # single pass, custom_vjp backward); collectives stay out here so the
+    # ghost all-gather / reduce-scatter account is backend-invariant.
+    use_kernel = (p > 1 and pp.variant == "fused"
+                  and resolve_kernel_backend(pp.kernel_backend) == "pallas")
+
+    # --- local update --- (on the kernel path it fuses with decompress)
+    if not use_kernel:
+        z = jnp.einsum("...i,io->...o", x, L)
 
     if pp.variant == "ring" and p > 1:
         # ppermute ring: hop s brings the ghosts of rank (j - s) mod p; the
@@ -159,7 +167,10 @@ def phantom_apply(pp: PhantomConfig, params, x, axes, compute_dtype=None):
         gcat = jnp.moveaxis(g_all, 0, -2)            # [..., p, k]
         gcat = gcat.reshape(*gcat.shape[:-2], p * D.shape[1])
         Dcat = D.reshape(p * D.shape[1], D.shape[2])  # [p*k, n_out/p]
-        z = z + jnp.einsum("...k,ko->...o", gcat, Dcat)
+        if use_kernel:
+            z = phantom_fused_linear(x, L, gcat, Dcat)
+        else:
+            z = z + jnp.einsum("...k,ko->...o", gcat, Dcat)
         if not pp.include_self_term:
             Dself = jnp.take(D, j, axis=0)
             z = z - jnp.einsum("...k,ko->...o", g, Dself)

@@ -22,11 +22,24 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.phantom_fused import KernelConfigError
 from repro.parallel.compat import tpu_compiler_params
 
 _CompilerParams = tpu_compiler_params()
 
 NEG_INF = -1e30
+
+
+def flash_attention_supported(s_q: int, s_kv: int, n_heads: int,
+                              n_kv: int, *, block: int = 128) -> bool:
+    """Static conditions under which this kernel can replace the XLA
+    blockwise core: equal self-attention lengths that tile evenly, and
+    GQA-divisible head counts.  ``models/attention.py`` consults this to
+    fall back to XLA instead of tripping the shape check."""
+    if s_q != s_kv or n_kv <= 0 or n_heads % n_kv:
+        return False
+    bq = min(block, s_q)
+    return s_q % bq == 0
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
@@ -88,10 +101,16 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
     """
     B, S, H, hd = q.shape
     KV = k.shape[2]
+    if H % KV:
+        raise KernelConfigError(f"q heads {H} not divisible by kv heads "
+                                f"{KV} (GQA grouping)")
     Hg = H // KV
     bq = min(block_q, S)
     bk = min(block_k, S)
-    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    if S % bq or S % bk:
+        raise KernelConfigError(
+            f"seq len {S} does not tile into blocks ({bq}, {bk}); pad "
+            f"upstream or check flash_attention_supported() first")
     scale = hd ** -0.5
 
     # [B, S, KV, Hg, hd] -> grid (B*KV, S/bq)

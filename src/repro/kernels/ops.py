@@ -1,3 +1,122 @@
-"""jit'd wrappers around the Pallas kernels (the public kernel API)."""
-from repro.kernels.flash_attention import flash_attention  # noqa: F401
-from repro.kernels.phantom_fused import phantom_fused_matmul  # noqa: F401
+"""The public kernel API: backend resolution plus the fused phantom op.
+
+``phantom_fused_linear`` wraps the Pallas forward/backward kernels in a
+``jax.custom_vjp`` so AD never differentiates through ``pallas_call``:
+the forward is one fused (local + ghost-decompress) GEMM kernel, the
+backward is one fused dgrad kernel (dx|dg) and one fused wgrad kernel
+(dL;dD).  Collectives stay OUTSIDE the op — the caller all-gathers the
+ghosts before and AD emits the priced ghost reduce-scatter after — so
+the PR-6 static audit sees the identical collective account as the XLA
+path.
+
+``resolve_kernel_backend`` maps the ``ProjectionSpec.kernel_backend``
+field ("xla" | "pallas" | "auto") to the executing backend: "auto"
+picks Pallas only on a real TPU; on any other platform the kernels run
+through the Pallas interpreter, which is correct but not fast, so
+"auto" falls back to XLA there.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import (flash_attention,  # noqa: F401
+                                           flash_attention_supported)
+from repro.kernels.phantom_fused import (KernelConfigError,  # noqa: F401
+                                         kernel_vmem_bytes,
+                                         phantom_fused_dgrad,
+                                         phantom_fused_matmul,
+                                         phantom_fused_wgrad)
+
+KERNEL_BACKENDS = ("xla", "pallas", "auto")
+
+
+def resolve_kernel_backend(backend: str) -> str:
+    """'auto' -> 'pallas' on TPU, 'xla' elsewhere; validates the name."""
+    if backend not in KERNEL_BACKENDS:
+        raise ValueError(f"unknown kernel_backend {backend!r}; "
+                         f"known: {KERNEL_BACKENDS}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return backend
+
+
+def default_interpret() -> bool:
+    """Pallas TPU kernels compile only on TPU; everywhere else run the
+    interpreter (same numerics, no MXU — test/CI mode)."""
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _fused_linear(x, L, g, D, interpret):
+    return phantom_fused_matmul(x, L, g, D, interpret=interpret)
+
+
+def _fused_linear_fwd(x, L, g, D, interpret):
+    z = phantom_fused_matmul(x, L, g, D, interpret=interpret)
+    return z, (x, L, g, D)
+
+
+def _fused_linear_bwd(interpret, res, dz):
+    x, L, g, D = res
+    dz = dz.astype(x.dtype)
+    dx, dg = phantom_fused_dgrad(dz, L, D, interpret=interpret)
+    dL, dD = phantom_fused_wgrad(x, g, dz, interpret=interpret)
+    return (dx.astype(x.dtype), dL.astype(L.dtype),
+            dg.astype(g.dtype), dD.astype(D.dtype))
+
+
+_fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _flash_attn(q, k, v, causal, interpret):
+    return flash_attention(q, k, v, causal=causal, interpret=interpret)
+
+
+def _flash_attn_fwd(q, k, v, causal, interpret):
+    out = flash_attention(q, k, v, causal=causal, interpret=interpret)
+    return out, (q, k, v)
+
+
+def _flash_attn_bwd(causal, interpret, res, do):
+    # backward differentiates the dense reference (fp32 softmax) — the
+    # forward stays fused; a fused flash backward is future work.  This
+    # materializes the [B,S,KV,Hg,S] score tensor, so prefer the XLA
+    # blockwise core for long-sequence TRAINING (docs/kernels.md).
+    from repro.kernels.ref import flash_attention_ref
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: flash_attention_ref(q_, k_, v_, causal=causal),
+        q, k, v)
+    return vjp(do)
+
+
+_flash_attn.defvjp(_flash_attn_fwd, _flash_attn_bwd)
+
+
+def flash_attention_vjp(q, k, v, *, causal=True, interpret=None):
+    """``flash_attention`` forward with a differentiable (reference)
+    backward — what the attention core calls so ``jax.grad`` never
+    reaches an AD-less ``pallas_call``."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _flash_attn(q, k, v, bool(causal), bool(interpret))
+
+
+def phantom_fused_linear(x, L, g, D, *, interpret=None):
+    """z = x @ L + g @ D with fused Pallas forward AND backward.
+
+    x [..., K] local activation shard, L [K, N] diagonal block,
+    g [..., PK] gathered ghosts, D [PK, N] concatenated decompressors
+    -> z [..., N].  Arbitrary leading batch dims are flattened around
+    the 2-D kernels.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    g2 = g.reshape(-1, g.shape[-1])
+    z = _fused_linear(x2, L, g2, D, bool(interpret))
+    return z.reshape(*lead, L.shape[1])

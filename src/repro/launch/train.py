@@ -224,7 +224,22 @@ def main():
     ap.add_argument("--profile-dir", default=None,
                     help="watchdog jax.profiler capture dir (default: "
                          "<workdir>/profile when --slow-step is given)")
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=("xla", "pallas", "auto"),
+                    help="executing kernel for the phantom fused "
+                         "projection and the attention core (docs/"
+                         "kernels.md); default: the config's per-site "
+                         "specs (xla)")
+    ap.add_argument("--overlap", default=None, choices=("tpu", "gpu"),
+                    help="append the async-collective + latency-hiding-"
+                         "scheduler XLA flag recipe for the given "
+                         "platform (comm/compute overlap of the ghost "
+                         "all-gather; no-op semantics on cpu)")
     args = ap.parse_args()
+    if args.overlap:
+        from repro.parallel.compat import enable_comm_overlap
+        applied = enable_comm_overlap(args.overlap)
+        print(f"[train] comm/compute overlap flags: {applied or '(set)'}")
     if args.steps is None:
         args.steps = 300 if args.elastic else 100
     if args.batch is None:
@@ -258,6 +273,9 @@ def main():
     elif args.impl == "dense":
         from repro.configs.base import dense_projection_map
         cfg = cfg.replace(projections=dense_projection_map())
+    if args.kernel_backend:
+        from repro.configs.base import with_kernel_backend
+        cfg = with_kernel_backend(cfg, args.kernel_backend)
     mesh = (make_local_mesh(args.dp, args.tp, args.pp) if args.smoke
             else make_production_mesh(pp=args.pp))
     axes = MeshAxes.from_mesh(mesh)

@@ -33,6 +33,9 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import PHANTOM_KINDS
+from repro.kernels.ops import (flash_attention_supported,
+                               flash_attention_vjp,
+                               resolve_kernel_backend)
 from repro.models import rope as ropemod
 from repro.models.layers import (from_partial, gather_fsdp, gather_on_use,
                                  seq_to_feature, to_full)
@@ -89,6 +92,15 @@ def attn_site_strategies(cfg, axes: MeshAxes, cross: bool = False):
 
 def _is_phantom(st) -> bool:
     return st.kind in PHANTOM_KINDS
+
+
+def _attn_kernel_backend(sts) -> str:
+    """The attention core runs the Pallas flash kernel only when ALL
+    four q/k/v/o site specs resolve to the pallas backend (one core, one
+    switch — partial selection would silently mix numerics)."""
+    backends = {resolve_kernel_backend(st.spec.kernel_backend)
+                for st in sts.values()}
+    return "pallas" if backends == {"pallas"} else "xla"
 
 
 # ---------------------------------------------------------------------------
@@ -337,15 +349,24 @@ def _attention_head(cfg, layout, params, x, positions, axes, decls, *,
         KV_loc = kv // p
 
     Hg = (H // p) // KV_loc
-    qg = _gqa_q(q, KV_loc)
     Skv = k_use.shape[1]
-    acc = init_acc(B, S, KV_loc, Hg, hd)
-    q_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
-    sdt = jnp.bfloat16 if cfg.attn_bf16_scores else jnp.float32
-    kvc = _kv_chunk(cfg, Skv, 512)
-    acc = attn_block_update(acc, qg, k_use, v_use, q_pos, 0, causal=causal,
-                            scores_dtype=sdt, kv_chunk=kvc)
-    out = finalize_acc(acc, dtype)               # [B, S, Hloc, hd]
+    use_flash = (memory is None
+                 and _attn_kernel_backend(sts) == "pallas"
+                 and flash_attention_supported(S, Skv, H // p, KV_loc))
+    if use_flash:
+        # fused Pallas core: scores + online softmax stay in VMEM
+        out = flash_attention_vjp(q, k_use, v_use,
+                                  causal=causal).astype(dtype)
+    else:
+        qg = _gqa_q(q, KV_loc)
+        acc = init_acc(B, S, KV_loc, Hg, hd)
+        q_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        sdt = jnp.bfloat16 if cfg.attn_bf16_scores else jnp.float32
+        kvc = _kv_chunk(cfg, Skv, 512)
+        acc = attn_block_update(acc, qg, k_use, v_use, q_pos, 0,
+                                causal=causal, scores_dtype=sdt,
+                                kv_chunk=kvc)
+        out = finalize_acc(acc, dtype)           # [B, S, Hloc, hd]
     out = out.reshape(B, S, -1)
 
     if _is_phantom(sts["wo"]):

@@ -38,7 +38,8 @@ class PhantomStrategy(ProjectionStrategy):
         s = self.spec
         self.k = s.k
         self.pp = PhantomConfig(k=s.k, variant=s.variant,
-                                include_self_term=s.include_self_term)
+                                include_self_term=s.include_self_term,
+                                kernel_backend=s.kernel_backend)
 
     def decls(self):
         return phantom_decls(self.n_in, self.n_out, self.k, self.tp,

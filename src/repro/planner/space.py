@@ -36,6 +36,7 @@ class PlanCandidate:
     microbatches: int = 1
     scan_layers: bool = True
     variant: str = "fused"
+    kernel_backend: str = "xla"    # xla | pallas | auto (docs/kernels.md)
 
     @property
     def devices(self) -> int:
@@ -50,13 +51,17 @@ class PlanCandidate:
             tag += f"_k{self.k}"
         if self.microbatches > 1:
             tag += f"_mb{self.microbatches}"
+        if self.kernel_backend != "xla":
+            tag += f"_{self.kernel_backend}"
         return tag
 
     def spec(self) -> ProjectionSpec:
         if self.strategy in PHANTOM_KINDS:
             return ProjectionSpec(kind=self.strategy, k=self.k,
-                                  variant=self.variant)
-        return ProjectionSpec(kind=self.strategy)
+                                  variant=self.variant,
+                                  kernel_backend=self.kernel_backend)
+        return ProjectionSpec(kind=self.strategy,
+                              kernel_backend=self.kernel_backend)
 
     def model_config(self) -> ModelConfig:
         return ModelConfig(
@@ -112,7 +117,8 @@ def enumerate_plans(max_devices: int, *, width: int, depth: int,
                     pps: Sequence[int] = (1, 2),
                     site: str = "ffn_layer",
                     device_counts: Optional[Iterable[int]] = None,
-                    allow_submesh_tensor: bool = False
+                    allow_submesh_tensor: bool = False,
+                    kernel_backends: Sequence[str] = ("xla",)
                     ) -> List[PlanCandidate]:
     """Enumerate the structurally-valid dp×tp×pp×strategy×k candidates.
 
@@ -167,8 +173,13 @@ def enumerate_plans(max_devices: int, *, width: int, depth: int,
                         # than the activation shard they replace
                         if phantom and k >= width // tpp:
                             continue
-                        plans.append(PlanCandidate(
-                            dp=dpp, tp=tpp, strategy=strat, width=width,
-                            depth=depth, batch=batch, k=k, pp=pp,
-                            site=site, microbatches=mb))
+                        # kernel backend only changes the phantom fused
+                        # inner op — non-phantom plans get one entry
+                        for kb in (kernel_backends if phantom
+                                   else kernel_backends[:1]):
+                            plans.append(PlanCandidate(
+                                dp=dpp, tp=tpp, strategy=strat,
+                                width=width, depth=depth, batch=batch,
+                                k=k, pp=pp, site=site, microbatches=mb,
+                                kernel_backend=kb))
     return plans

@@ -566,3 +566,39 @@ def ffn_step_prediction(cfg, p: int, global_batch: int, *,
     pred["strategy"] = st.kind
     pred["param_count"] = st.param_count() * cfg.num_layers
     return pred
+
+
+def fused_kernel_step_events(cfg, p: int, rows: int,
+                             training: bool = True) -> List[tuple]:
+    """(CommEvent, layer-repeats) account of a phantom FFN step running
+    with ``kernel_backend="pallas"`` — IDENTICAL to the XLA path's
+    account by construction: the fused kernel moves GEMM HBM traffic,
+    never collectives (the ghost all-gather / reduce-scatter stay
+    outside the custom_vjp op), so this re-exports the strategy's own
+    ``comm_events``.  Shared by ``fused_ffn_step_prediction`` and the
+    audit's ``kernel_unit``; golden-cost-pinned to prove zero drift."""
+    from repro.core.ffn import ffn_strategy
+    st = ffn_strategy(cfg, p)
+    return [(ev, cfg.num_layers)
+            for ev in events_for([st], rows, training)]
+
+
+def fused_ffn_step_prediction(cfg, p: int, global_batch: int, *,
+                              training: bool = True,
+                              itemsize: float = FLOAT_BYTES,
+                              **kw) -> dict:
+    """``ffn_step_prediction`` for the Pallas kernel backend: same flops,
+    same collectives, same energy projection (zero drift), annotated
+    with what fusion DOES change — the decompress GEMM accumulates into
+    the local GEMM's VMEM tile instead of issuing a second read+write
+    pass of z over HBM (one saved round-trip per layer per pass)."""
+    pred = ffn_step_prediction(cfg, p, global_batch,
+                               training=training, **kw)
+    from repro.core.ffn import ffn_strategy
+    st = ffn_strategy(cfg, p)
+    z_bytes = global_batch * (st.n_out // p) * itemsize
+    passes = 3 if training else 1          # fwd + fused dgrad + wgrad
+    pred["kernel_backend"] = cfg.projection_spec("ffn_layer").kernel_backend
+    pred["hbm_bytes_saved_per_device"] = (2.0 * z_bytes * passes
+                                          * cfg.num_layers)
+    return pred

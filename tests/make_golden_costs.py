@@ -33,7 +33,8 @@ def compute() -> dict:
 
     n, tp, batch = 512, 4, 32
     out = {"strategies": {}, "closed_forms": {}, "comm_time_us": {},
-           "schedule": {}, "pipeline_prediction": {}}
+           "schedule": {}, "pipeline_prediction": {},
+           "fused_kernel_prediction": {}}
 
     for kind, k in (("tensor_col", 0), ("tensor_row", 0),
                     ("phantom", 8), ("lowrank_distill", 4)):
@@ -90,6 +91,41 @@ def compute() -> dict:
                 "boundary_wire_bytes_per_device", "collective_m_floats",
                 "comm_us", "energy_j_per_iter", "ticks",
                 "bubble_fraction")}
+
+    # fused Pallas kernel backend: the prediction must be IDENTICAL to
+    # the XLA path on every shared key (the kernel fuses GEMMs, never
+    # collectives) — pinning both proves zero drift between backends.
+    from repro.configs.base import phantom_projection_map
+    from repro.telemetry.predict import (ffn_step_prediction,
+                                         fused_ffn_step_prediction,
+                                         fused_kernel_step_events)
+    for backend in ("xla", "pallas"):
+        cfg = ModelConfig(name=f"golden-kernel-{backend}", family="ffn",
+                          num_layers=2, d_model=512, ffn_width=512,
+                          ffn_depth=2, mlp="relu",
+                          phantom=PhantomConfig(k=8),
+                          projections=phantom_projection_map(
+                              8, ffn_layer=True, kernel_backend=backend))
+        pred = fused_ffn_step_prediction(cfg, 4, 32)
+        base = ffn_step_prediction(cfg, 4, 32)
+        out["fused_kernel_prediction"][backend] = {
+            "kernel_backend": pred["kernel_backend"],
+            "hbm_bytes_saved_per_device":
+                pred["hbm_bytes_saved_per_device"],
+            "flops_per_device": pred["flops_per_device"],
+            "collective_wire_bytes_per_device":
+                pred["collective_wire_bytes_per_device"],
+            "collective_m_floats": pred["collective_m_floats"],
+            "energy_j_per_iter": pred["energy_j_per_iter"],
+            "drift_vs_xla_builder": max(
+                abs(pred[key] - base[key]) for key in (
+                    "flops_per_device",
+                    "collective_wire_bytes_per_device",
+                    "collective_m_floats", "energy_j_per_iter")),
+            "events": [[ev.collective, ev.m_floats, ev.phase, reps]
+                       for ev, reps in
+                       fused_kernel_step_events(cfg, 4, 32)],
+        }
     return out
 
 
